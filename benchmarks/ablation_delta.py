@@ -1,0 +1,35 @@
+"""Ablations beyond the paper's figures:
+
+  (a) the accuracy-tolerance knob Δ_mAP (the parameter the paper leaves to
+      the operator): sweeps the full latency/energy/accuracy frontier;
+  (b) the output-based estimator vs an oracle (g_est == g_true): quantifies
+      how much accuracy the paper's zero-cost estimator gives up.
+"""
+
+from dataclasses import replace
+
+from repro.core.profiles import paper_fleet
+from repro.core.simulator import SimConfig, simulate, summarize
+
+
+def _run(prof, **kw):
+    cfg = SimConfig(n_users=15, n_requests=1500, policy="MO", **kw)
+    recs = simulate(prof, cfg)
+    return {k: float(v) for k, v in summarize(recs, prof, cfg).items()}
+
+
+def run() -> list[str]:
+    prof = paper_fleet()
+    rows = ["ablation.delta,latency_ms,energy_mwh,map,estimator_acc"]
+    for delta in (0.0, 5.0, 10.0, 20.0, 30.0, 45.0):
+        r = _run(prof, delta=delta)
+        rows.append(f"ablation.delta_{int(delta)},{r['latency_ms']:.0f},"
+                    f"{r['energy_mwh']:.4f},{r['map']:.1f},"
+                    f"{r['estimator_acc']:.3f}")
+    # estimator ablation at the headline operating point
+    for name, oracle in (("output_based", False), ("oracle", True)):
+        r = _run(prof, delta=20.0, oracle_estimator=oracle)
+        rows.append(f"ablation.estimator_{name},{r['latency_ms']:.0f},"
+                    f"{r['energy_mwh']:.4f},{r['map']:.1f},"
+                    f"{r['estimator_acc']:.3f}")
+    return rows

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-grade
+timings; real-TPU numbers come from the same harness with interpret=False)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profiles import paper_fleet
+from repro.kernels.decode_attention import decode_attention, ref_decode_attention
+from repro.kernels.flash_attention import flash_attention, ref_attention
+from repro.kernels.moscore import moscore_route
+from repro.core.policies import mo_select_batch
+from repro.core.profiles import ProfileTable
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list[str]:
+    rows = ["kernel.name,us_per_call,vs_ref_speedup"]
+    rng = jax.random.PRNGKey(0)
+
+    q = jax.random.normal(rng, (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(rng, (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(rng, (1, 256, 2, 64), jnp.float32)
+    t_k = _time(lambda *a: flash_attention(*a, block_q=64, block_k=128), q, k, v)
+    t_r = _time(jax.jit(lambda *a: ref_attention(*a)), q, k, v)
+    rows.append(f"kernel.flash_attention_256,{t_k:.0f},{t_r / t_k:.2f}")
+
+    qd = jax.random.normal(rng, (2, 8, 64), jnp.float32)
+    kd = jax.random.normal(rng, (2, 1024, 2, 64), jnp.float32)
+    vd = jax.random.normal(rng, (2, 1024, 2, 64), jnp.float32)
+    t_k = _time(lambda *a: decode_attention(*a, n_splits=4), qd, kd, vd)
+    t_r = _time(jax.jit(ref_decode_attention), qd, kd, vd)
+    rows.append(f"kernel.decode_attention_1k,{t_k:.0f},{t_r / t_k:.2f}")
+
+    prof = paper_fleet()
+    gs = jax.random.randint(rng, (256,), 0, 5)
+    q0 = jnp.zeros((5,))
+    t_k = _time(lambda *a: moscore_route(*a, delta=20.0, gamma=0.5),
+                prof.T, prof.E, prof.mAP, gs, q0)
+    ref = jax.jit(lambda T, E, M, g, q: mo_select_batch(
+        ProfileTable(T, E, M), g, q, delta=20.0, gamma=0.5))
+    t_r = _time(ref, prof.T, prof.E, prof.mAP, gs, q0)
+    rows.append(f"kernel.moscore_window256,{t_k:.0f},{t_r / t_k:.2f}")
+    rows.append(f"kernel.moscore_us_per_decision,{t_k / 256:.2f},")
+    return rows

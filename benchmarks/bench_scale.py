@@ -1,0 +1,55 @@
+"""Large-scale posture: decision latency and simulator behaviour as the
+fleet grows from the paper's 5 nodes toward thousands (the regime the
+multi-pod deployment targets; paper §V names this as the open problem)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hierarchy import hierarchical_select, pod_aggregate
+from repro.core.policies import mo_select
+from repro.core.profiles import synthetic_fleet
+from repro.core.simulator import SimConfig, simulate, summarize
+from repro.kernels.moscore import moscore_route
+
+
+def _time_us(fn, *args, n=20):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list[str]:
+    rows = ["scale.fleet_size,decision_us,window256_us_per_req,"
+            "sim_latency_ms,sim_map"]
+    rng = jax.random.PRNGKey(0)
+    for n_pairs in (5, 64, 256, 1024):
+        prof = synthetic_fleet(rng, n_pairs)
+        q = jnp.zeros((n_pairs,))
+        one = jax.jit(lambda T, E, M, qq: mo_select(
+            type(prof)(T, E, M), 3, qq, delta=20.0, gamma=0.5)[0])
+        t_one = _time_us(one, prof.T, prof.E, prof.mAP, q)
+        gs = jax.random.randint(rng, (256,), 0, 5)
+        t_win = _time_us(
+            lambda T, E, M, g, qq: moscore_route(T, E, M, g, qq,
+                                                 delta=20.0, gamma=0.5),
+            prof.T, prof.E, prof.mAP, gs, q) / 256.0
+        cfg = SimConfig(n_users=min(4 * n_pairs, 256), n_requests=1200)
+        s = summarize(simulate(prof, cfg), prof, cfg)
+        rows.append(f"scale.{n_pairs},{t_one:.1f},{t_win:.2f},"
+                    f"{float(s['latency_ms']):.0f},{float(s['map']):.1f}")
+
+    # hierarchical vs flat at 256 pairs / 8 pods (staleness regret)
+    prof = synthetic_fleet(rng, 256)
+    pod_of = jnp.asarray([i // 32 for i in range(256)])
+    pods = pod_aggregate(prof, pod_of)
+    h = jax.jit(lambda q, qp: hierarchical_select(
+        prof, pods, pod_of, 3, q, qp, delta=20.0, gamma=0.5)[0])
+    t_h = _time_us(h, jnp.zeros(256), jnp.zeros(8))
+    rows.append(f"scale.hierarchical_256p_us,{t_h:.1f},,,")
+    return rows

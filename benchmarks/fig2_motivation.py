@@ -1,0 +1,24 @@
+"""Fig. 2: accuracy / energy / inference-time trade-offs across models for
+simple vs complex scenes (the motivation experiment)."""
+
+import numpy as np
+
+from repro.core.profiles import paper_fleet
+
+
+def run() -> list[str]:
+    prof = paper_fleet()
+    rows = ["fig2.pair,group,mAP,energy_mwh,time_ms"]
+    for p in range(prof.n_pairs):
+        for g in (1, 4):  # single-object vs 4+ objects
+            rows.append(f"fig2.{prof.names[p]},{g},"
+                        f"{float(prof.mAP[p, g]):.1f},"
+                        f"{float(prof.E[p, g]):.3f},"
+                        f"{float(prof.T[p, g]):.1f}")
+    # headline: the paper's SSD-Lite vs YOLOv8s comparison
+    ssd, yolo = 1, 3
+    rows.append(f"fig2.map_ratio_complex,4,"
+                f"{float(prof.mAP[yolo, 4] / prof.mAP[ssd, 4]):.2f},,")
+    rows.append(f"fig2.energy_ratio,4,,"
+                f"{float(prof.E[ssd, 4] / prof.E[yolo, 4]):.2f},")
+    return rows

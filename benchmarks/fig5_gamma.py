@@ -1,0 +1,21 @@
+"""Fig. 5: the gamma sweep (MO_gamma_{0,25,50,75,1})."""
+
+from repro.core.profiles import paper_fleet
+from repro.core.simulator import sweep
+
+GAMMAS = [0.0, 0.25, 0.5, 0.75, 1.0]
+USERS = [1, 5, 10, 15]
+METRICS = ["latency_ms", "latency_p90_ms", "throughput_rps", "energy_mwh",
+           "map"]
+
+
+def run(n_requests: int = 1500, seeds=(0, 1)) -> list[str]:
+    prof = paper_fleet()
+    rows = ["fig5.gamma,users," + ",".join(METRICS)]
+    for g in GAMMAS:
+        res = sweep(prof, ["MO"], USERS, n_requests=n_requests, gamma=g,
+                    seeds=seeds)["MO"]
+        for i, u in enumerate(USERS):
+            vals = ",".join(f"{res[m][i]:.3f}" for m in METRICS)
+            rows.append(f"fig5.MO_gamma_{int(g * 100)},{u},{vals}")
+    return rows

@@ -1,0 +1,24 @@
+"""Summarise the dry-run roofline records (experiments/dryrun/*.json) into
+the 40-cell table reported in EXPERIMENTS.md §Roofline."""
+
+import glob
+import json
+import os
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> list[str]:
+    rows = ["roofline.arch,shape,mesh,t_compute_s,t_memory_s,"
+            "t_collective_s,dominant,useful_flops_frac,hbm_frac,ok"]
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(path))
+        if not r.get("ok"):
+            rows.append(f"roofline.{r['arch']},{r['shape']},{r['mesh']}"
+                        f",,,,FAILED,,,False")
+            continue
+        rows.append(
+            f"roofline.{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+            f"{r['t_collective_s']:.3e},{r['dominant']},"
+            f"{r['useful_flops_frac']:.3f},"
+            f"{r.get('hbm_frac_analytic', 0):.3f},True")
+    return rows

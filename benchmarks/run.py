@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure + kernels +
+roofline. Prints CSV: name,<columns...>.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer seeds/requests (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (ablation_delta, bench_kernels, bench_scale,
+                            fig2_motivation, fig4_baselines, fig5_gamma,
+                            roofline_summary, table1_pairs)
+
+    suites = {
+        "fig2": lambda: fig2_motivation.run(),
+        "table1": lambda: table1_pairs.run(),
+        "fig4": lambda: fig4_baselines.run(
+            n_requests=600 if args.fast else 1500,
+            seeds=(0,) if args.fast else (0, 1, 2)),
+        "fig5": lambda: fig5_gamma.run(
+            n_requests=600 if args.fast else 1500,
+            seeds=(0,) if args.fast else (0, 1)),
+        "ablation": lambda: ablation_delta.run(),
+        "scale": lambda: bench_scale.run(),
+        "kernels": lambda: bench_kernels.run(),
+        "roofline": lambda: roofline_summary.run(),
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k == args.only}
+
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            continue
+        for row in rows:
+            print(row, flush=True)
+        print(f"bench.{name}.seconds,{time.time() - t0:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

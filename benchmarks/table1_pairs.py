@@ -1,0 +1,16 @@
+"""Table I: best device-model pair per metric / group."""
+
+import numpy as np
+
+from repro.core.profiles import paper_fleet
+
+
+def run() -> list[str]:
+    prof = paper_fleet()
+    rows = ["table1.metric,winner"]
+    rows.append(f"table1.best_energy,{prof.names[int(np.argmin(np.asarray(prof.E).mean(1)))]}")
+    rows.append(f"table1.best_time,{prof.names[int(np.argmin(np.asarray(prof.T).mean(1)))]}")
+    for g in range(prof.n_groups):
+        w = int(np.argmax(np.asarray(prof.mAP)[:, g]))
+        rows.append(f"table1.best_map_group{g + 1},{prof.names[w]}")
+    return rows

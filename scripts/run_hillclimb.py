@@ -1,0 +1,49 @@
+"""Perf hillclimb measurements (§Perf): re-lower the three chosen cells with
+the current (optimized) code and record the roofline terms next to their
+baselines.
+
+  PYTHONPATH=src python scripts/run_hillclimb.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+
+OUT = "experiments/perf"
+os.makedirs(OUT, exist_ok=True)
+
+CELLS = [
+    # (arch, shape, multi_pod, kv_dtype, tag)
+    ("arctic-480b", "train_4k", False, None, "it1_rep_pinned"),
+    ("stablelm-3b", "train_4k", True, None, "it1_rep_pinned"),
+    ("stablelm-3b", "prefill_32k", False, None, "it2_kvhead_shard"),
+    ("deepseek-moe-16b", "decode_32k", False, None, "it2_kvhead_shard"),
+    ("deepseek-moe-16b", "decode_32k", False, "int8", "it3_int8_kv"),
+    ("deepseek-moe-16b", "long_500k", False, "int8", "it3_int8_kv"),
+]
+
+for arch, shape, mp, kv, tag in CELLS:
+    rec = run_cell(arch, shape, mp, kv_dtype=kv)
+    rec["iteration"] = tag
+    name = f"{arch}__{shape}__{'multi' if mp else 'single'}__{tag}.json"
+    with open(os.path.join(OUT, name), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+print("hillclimb measurements complete")
+
+# it4/it5 second wave (FSDP-only rules now active in select_rules)
+CELLS2 = [
+    ("stablelm-3b", "train_4k", False, None, "it2_fsdp_only"),
+    ("stablelm-3b", "train_4k", True, None, "it2_fsdp_only"),
+    ("stablelm-3b", "prefill_32k", False, None, "it4_zero_inference"),
+]
+for arch, shape, mp, kv, tag in CELLS2:
+    rec = run_cell(arch, shape, mp, kv_dtype=kv)
+    rec["iteration"] = tag
+    name = f"{arch}__{shape}__{'multi' if mp else 'single'}__{tag}.json"
+    with open(os.path.join(OUT, name), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+print("second-wave measurements complete")

@@ -1,0 +1,36 @@
+"""Asynchronous checkpointing: snapshot on-device state to host (cheap),
+write to disk on a background thread, never blocking the train loop for
+longer than the device->host copy."""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor, Future
+
+import jax
+
+from repro.checkpoint.checkpointer import save_checkpoint
+
+
+class AsyncCheckpointer:
+    def __init__(self, ckpt_dir: str, keep_n: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_n = keep_n
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._inflight: Future | None = None
+
+    def save(self, step: int, state) -> None:
+        """Blocking part: device_get snapshot. Disk write happens async."""
+        self.wait()                       # one in flight at a time
+        snapshot = jax.tree.map(lambda x: jax.device_get(x), state)
+        self._inflight = self._pool.submit(
+            save_checkpoint, self.ckpt_dir, step, snapshot, self.keep_n)
+
+    def wait(self) -> None:
+        if self._inflight is not None:
+            self._inflight.result()
+            self._inflight = None
+
+    def close(self) -> None:
+        self.wait()
+        self._pool.shutdown()

@@ -1,0 +1,24 @@
+"""Common substrate: configs, precision policy, tree and logging utilities."""
+
+from repro.common.configs import (
+    LMConfig,
+    DiTConfig,
+    MMDiTConfig,
+    VisionConfig,
+    ShapeSpec,
+    TrainingConfig,
+)
+from repro.common.precision import Policy, DEFAULT_POLICY
+from repro.common import treeutil
+
+__all__ = [
+    "LMConfig",
+    "DiTConfig",
+    "MMDiTConfig",
+    "VisionConfig",
+    "ShapeSpec",
+    "TrainingConfig",
+    "Policy",
+    "DEFAULT_POLICY",
+    "treeutil",
+]

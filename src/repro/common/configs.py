@@ -1,0 +1,227 @@
+"""Dataclass configuration system.
+
+Every assigned architecture is described by one of the model-config dataclasses
+below plus a set of :class:`ShapeSpec` cells. Configs are frozen (hashable) so
+they can be closed over by jitted step functions without retracing hazards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape) cell of the assignment matrix.
+
+    ``kind`` selects which step function is lowered:
+      * ``train``    -> train_step (fwd + bwd + optimizer)
+      * ``prefill``  -> serve_step over the full prompt, materialising KV
+      * ``decode``   -> serve_step producing one token against a KV cache
+      * ``serve``    -> plain batched forward (vision / diffusion sampling)
+    """
+
+    name: str
+    kind: str
+    global_batch: int
+    seq_len: int = 0          # LM cells
+    img_res: int = 0          # vision / diffusion cells
+    steps: int = 0            # diffusion sampler steps (1 step lowered; total
+                              # reported as steps x per-step in the roofline)
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("train", "prefill", "decode", "serve"):
+            raise ValueError(f"unknown shape kind {self.kind!r}")
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only transformer LM (optionally MoE)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0         # DeepSeek: always-on shared experts
+    d_expert: int = 0                 # per-expert FFN width (0 -> d_ff)
+    moe_dense_residual: bool = False  # Arctic: dense FFN residual in parallel
+    capacity_factor: float = 1.25
+    router_impl: str = "topk"         # topk | balanced (load-penalised; paper
+                                      # -style multi-objective expert routing)
+    dtype: str = "bfloat16"
+    kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8 (per-(pos,head)-scaled
+                                      # quantised cache; halves decode HBM
+                                      # traffic — EXPERIMENTS.md §Perf it.3)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_exp(self) -> int:
+        return self.d_expert or self.d_ff
+
+    def n_params(self) -> int:
+        """Total parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, hd = self.d_model, self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        dense_ff = 0
+        moe_ff = 0
+        router = 0
+        if self.moe:
+            if self.n_shared_experts:
+                dense_ff += 3 * d * (self.n_shared_experts * self.d_exp)
+            if self.moe_dense_residual:
+                dense_ff += 3 * d * self.d_ff
+            moe_ff = self.n_experts * 3 * d * self.d_exp
+            router = d * self.n_experts
+        else:
+            dense_ff = 3 * d * self.d_ff
+        per_layer = attn + dense_ff + moe_ff + router + 2 * d
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + d
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed top-k count)."""
+        if not self.moe:
+            return self.n_params()
+        full = self.n_params()
+        inactive = self.n_layers * (self.n_experts - self.top_k) \
+            * 3 * self.d_model * self.d_exp
+        return full - inactive
+
+
+@dataclass(frozen=True)
+class DiTConfig:
+    """Diffusion transformer (DiT, adaLN-zero), class-conditional."""
+
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    in_channels: int = 4       # VAE latent channels
+    vae_factor: int = 8        # image res -> latent res
+    n_classes: int = 1000
+    dtype: str = "bfloat16"
+
+    def latent_res(self, img_res: int = 0) -> int:
+        return (img_res or self.img_res) // self.vae_factor
+
+    def n_tokens(self, img_res: int = 0) -> int:
+        return (self.latent_res(img_res) // self.patch) ** 2
+
+    def n_params(self) -> int:
+        d = self.d_model
+        per_layer = 4 * d * d + 8 * d * d + 6 * d * d  # attn + mlp(4x) + adaLN
+        patch_dim = self.in_channels * self.patch ** 2
+        io = patch_dim * d + d * patch_dim * 2  # patchify + final linear
+        cond = 256 * d + d * d + self.n_classes * d
+        return self.n_layers * per_layer + io + cond
+
+
+@dataclass(frozen=True)
+class MMDiTConfig:
+    """Flux-style MMDiT: double-stream (img/txt) blocks + single-stream blocks,
+    rectified-flow objective. The text encoder is a stub: ``input_specs``
+    provides precomputed text-token embeddings (d_txt) and a pooled vector."""
+
+    name: str
+    img_res: int
+    n_double_blocks: int
+    n_single_blocks: int
+    d_model: int
+    n_heads: int
+    patch: int = 2
+    in_channels: int = 16
+    vae_factor: int = 8
+    d_txt: int = 4096          # T5 feature width (stubbed frontend)
+    d_pooled: int = 768        # CLIP pooled vector width (stubbed frontend)
+    txt_len: int = 512
+    guidance_embed: bool = True
+    dtype: str = "bfloat16"
+
+    def latent_res(self, img_res: int = 0) -> int:
+        return (img_res or self.img_res) // self.vae_factor
+
+    def n_img_tokens(self, img_res: int = 0) -> int:
+        return (self.latent_res(img_res) // self.patch) ** 2
+
+    def n_params(self) -> int:
+        d = self.d_model
+        double = self.n_double_blocks * 2 * (4 * d * d + 8 * d * d + 6 * d * d)
+        single = self.n_single_blocks * (4 * d * d + 8 * d * d + 3 * d * d)
+        io = (self.in_channels * self.patch ** 2) * d * 2 \
+            + self.d_txt * d + self.d_pooled * d + 256 * d + d * d
+        return double + single + io
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """Convolutional vision backbone (ResNet / ConvNeXt / EfficientNet)."""
+
+    name: str
+    family: str                        # resnet | convnext | efficientnet
+    img_res: int
+    depths: tuple[int, ...] = ()
+    dims: tuple[int, ...] = ()
+    width: int = 64                    # resnet stem width
+    bottleneck: int = 4                # resnet bottleneck expansion
+    width_mult: float = 1.0            # efficientnet compound scaling
+    depth_mult: float = 1.0
+    n_classes: int = 1000
+    norm: str = "batchnorm"            # batchnorm | layernorm
+    dtype: str = "bfloat16"
+
+    def n_params(self) -> int:
+        # filled by the model builders (architecture-dependent); use the
+        # analytic counter in models.convnets.count_params instead.
+        from repro.models import convnets
+
+        return convnets.count_params(self)
+
+
+@dataclass(frozen=True)
+class TrainingConfig:
+    """Optimizer / schedule / parallelism knobs for train cells."""
+
+    optimizer: str = "adamw"           # adamw | adafactor | sgdm
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_clip: float = 1.0
+    microbatch: int = 0                # 0 -> no gradient accumulation
+    remat: str = "full"                # none | dots | full
+    grad_compression: str = "none"     # none | int8 (cross-pod all-reduce)
+    label_smoothing: float = 0.0
+
+
+def asdict(cfg: Any) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def replace(cfg: Any, **kw: Any) -> Any:
+    return dataclasses.replace(cfg, **kw)
+
+
+def from_dict(cls: type, d: Mapping[str, Any]) -> Any:
+    names = {f.name for f in dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in d.items() if k in names})

@@ -1,0 +1,38 @@
+"""Trace-time loop-unroll controls for the dry-run cost solve.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so scanned models under-report FLOPs and collective bytes by ~L x.
+Full unrolling is exact but blows up compile time (10+ min for the 35-layer
+MoE configs on this 1-core box). Instead the dry-run compiles each cell
+several times, bumping ONE tagged loop's unroll factor per compile, and
+solves linearly for each body's cost:
+
+    D_tag = (F[u_tag=k] - F[u=1]) / (k - 1)      (= body + its inner loops)
+    body_tag = D_tag - D_inner_tag
+    total = F_base - sum(bodies) + sum(prod(trips up to tag) * body_tag)
+
+Tags: "layers" (transformer/DiT stacks), "double"/"single" (MMDiT),
+"micro" (gradient-accumulation), "attn" (chunked-attention streaming loop).
+Small fixed-trip loops (vocab-chunked xent) unroll fully when UNROLL_SMALL
+is set — they're cheap and then counted exactly.
+"""
+
+LAYER_UNROLL: dict[str, int] = {}
+UNROLL_SMALL = False
+
+
+def layer_unroll(tag: str) -> int:
+    return LAYER_UNROLL.get(tag, 1)
+
+
+def scan_unroll(length: int) -> int:
+    """Unroll amount for small (cheap-body) scans."""
+    return length if UNROLL_SMALL else 1
+
+
+def smallest_unroll(n: int) -> int:
+    """Smallest divisor >= 2 of n (n itself if prime)."""
+    for d in range(2, int(n ** 0.5) + 1):
+        if n % d == 0:
+            return d
+    return n

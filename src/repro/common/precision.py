@@ -1,0 +1,52 @@
+"""Mixed-precision policy.
+
+Production posture: params stored bf16 (with fp32 master copies owned by the
+optimizer where applicable), compute in bf16 with fp32 softmax/normalisation
+accumulation, losses/metrics in fp32.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+_DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+    "float16": jnp.float16,
+}
+
+
+def parse_dtype(name: str):
+    return _DTYPES[name]
+
+
+@dataclass(frozen=True)
+class Policy:
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"
+
+    @property
+    def pdt(self):
+        return parse_dtype(self.param_dtype)
+
+    @property
+    def cdt(self):
+        return parse_dtype(self.compute_dtype)
+
+    @property
+    def adt(self):
+        return parse_dtype(self.accum_dtype)
+
+    def cast_compute(self, x):
+        return x.astype(self.cdt)
+
+    def cast_accum(self, x):
+        return x.astype(self.adt)
+
+
+DEFAULT_POLICY = Policy()
+FP32_POLICY = Policy("float32", "float32", "float32")

@@ -1,0 +1,69 @@
+"""Pytree helpers shared across training/checkpointing/distribution."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all leaves (works on ShapeDtypeStruct and arrays)."""
+    leaves = jax.tree.leaves(tree)
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves)
+
+
+def tree_params(tree: Any) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def tree_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_any_nan(tree: Any) -> jax.Array:
+    leaves = [jnp.any(~jnp.isfinite(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree) if jnp.issubdtype(l.dtype, jnp.floating)]
+    if not leaves:
+        return jnp.asarray(False)
+    return jnp.any(jnp.stack(leaves))
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    def cast(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return l.astype(dtype)
+        return l
+    return jax.tree.map(cast, tree)
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), tree)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map with '/'-joined string key paths (stable across dict/dataclass)."""
+
+    def to_name(p) -> str:
+        out = []
+        for e in p:
+            if hasattr(e, "key"):
+                out.append(str(e.key))
+            elif hasattr(e, "idx"):
+                out.append(str(e.idx))
+            elif hasattr(e, "name"):
+                out.append(str(e.name))
+            else:
+                out.append(str(e))
+        return "/".join(out)
+
+    return jax.tree_util.tree_map_with_path(lambda p, l: fn(to_name(p), l), tree)
+
+
+def flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    out: list[tuple[str, Any]] = []
+    tree_map_with_path(lambda n, l: out.append((n, l)) or l, tree)
+    return out

@@ -1,0 +1,33 @@
+"""Architecture registry: ``get(arch_id)`` -> Arch for every assigned
+architecture (plus the paper's own edge-detection fleet)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import Arch, LM_SHAPES, DIFFUSION_SHAPES, VISION_SHAPES
+
+_MODULES = {
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "flux-dev": "repro.configs.flux_dev",
+    "dit-l2": "repro.configs.dit_l2",
+    "convnext-b": "repro.configs.convnext_b",
+    "resnet-152": "repro.configs.resnet_152",
+    "efficientnet-b7": "repro.configs.efficientnet_b7",
+    "resnet-50": "repro.configs.resnet_50",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get(arch_id: str) -> Arch:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH
+
+
+def all_archs() -> list[Arch]:
+    return [get(a) for a in ARCH_IDS]

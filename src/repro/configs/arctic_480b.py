@@ -1,0 +1,32 @@
+"""arctic-480b [hf:Snowflake/snowflake-arctic-base; hf]: 35L d_model=7168
+56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128e top-2 + dense residual.
+
+Training uses Adafactor: Adam states for 480B params (~6.7 TB) exceed one
+v5e pod's 4 TB HBM; factored second moments fit (DESIGN.md §7)."""
+
+from repro.common.configs import LMConfig, TrainingConfig
+from repro.configs.base import Arch
+
+CONFIG = LMConfig(
+    name="arctic-480b",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab_size=32_000,
+    moe=True, n_experts=128, top_k=2, n_shared_experts=0, d_expert=4864,
+    moe_dense_residual=True,
+)
+
+REDUCED = LMConfig(
+    name="arctic-480b-smoke",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+    d_ff=96, vocab_size=512,
+    moe=True, n_experts=8, top_k=2, d_expert=96, moe_dense_residual=True,
+    dtype="float32",
+)
+
+ARCH = Arch(
+    id="arctic-480b", family="lm", config=CONFIG,
+    train=TrainingConfig(optimizer="adafactor", lr=1e-4, remat="full",
+                         microbatch=4),
+    reduced=REDUCED, source="hf:Snowflake/snowflake-arctic-base; hf",
+    notes="dense-MoE hybrid: dense FFN residual in parallel with 128e top-2",
+)

@@ -1,0 +1,59 @@
+"""Arch descriptor + the per-family shape sets from the assignment."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.common.configs import ShapeSpec, TrainingConfig
+
+
+# --- assigned shape cells (verbatim from the assignment) -------------------
+
+LM_SHAPES = (
+    ShapeSpec("train_4k", "train", global_batch=256, seq_len=4096),
+    ShapeSpec("prefill_32k", "prefill", global_batch=32, seq_len=32_768),
+    ShapeSpec("decode_32k", "decode", global_batch=128, seq_len=32_768),
+    ShapeSpec("long_500k", "decode", global_batch=1, seq_len=524_288),
+)
+
+DIFFUSION_SHAPES = (
+    ShapeSpec("train_256", "train", global_batch=256, img_res=256, steps=1000),
+    ShapeSpec("gen_1024", "serve", global_batch=4, img_res=1024, steps=50),
+    ShapeSpec("gen_fast", "serve", global_batch=16, img_res=512, steps=4),
+    ShapeSpec("train_1024", "train", global_batch=32, img_res=1024, steps=1000),
+)
+
+VISION_SHAPES = (
+    ShapeSpec("cls_224", "train", global_batch=256, img_res=224),
+    ShapeSpec("cls_384", "train", global_batch=64, img_res=384),
+    ShapeSpec("serve_b1", "serve", global_batch=1, img_res=224),
+    ShapeSpec("serve_b128", "serve", global_batch=128, img_res=224),
+)
+
+FAMILY_SHAPES = {
+    "lm": LM_SHAPES,
+    "diffusion": DIFFUSION_SHAPES,
+    "vision": VISION_SHAPES,
+}
+
+
+@dataclass(frozen=True)
+class Arch:
+    id: str
+    family: str                       # lm | diffusion | vision
+    config: Any                       # LMConfig | DiTConfig | MMDiTConfig | VisionConfig
+    train: TrainingConfig
+    reduced: Any                      # smoke-test-sized config, same family
+    source: str = ""                  # citation tag from the assignment
+    notes: str = ""
+
+    @property
+    def shapes(self) -> tuple[ShapeSpec, ...]:
+        return FAMILY_SHAPES[self.family]
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.id}: unknown shape {name!r}")

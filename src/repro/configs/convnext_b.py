@@ -1,0 +1,22 @@
+"""convnext-b [arXiv:2201.03545; paper]: depths 3-3-27-3, dims
+128-256-512-1024, img_res=224."""
+
+from repro.common.configs import VisionConfig, TrainingConfig
+from repro.configs.base import Arch
+
+CONFIG = VisionConfig(
+    name="convnext-b", family="convnext", img_res=224,
+    depths=(3, 3, 27, 3), dims=(128, 256, 512, 1024), norm="layernorm",
+)
+
+REDUCED = VisionConfig(
+    name="convnext-b-smoke", family="convnext", img_res=64,
+    depths=(1, 1, 2, 1), dims=(16, 32, 64, 128), n_classes=10,
+    norm="layernorm", dtype="float32",
+)
+
+ARCH = Arch(
+    id="convnext-b", family="vision", config=CONFIG,
+    train=TrainingConfig(optimizer="adamw", lr=4e-3, weight_decay=0.05),
+    reduced=REDUCED, source="arXiv:2201.03545; paper",
+)

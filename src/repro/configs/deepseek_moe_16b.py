@@ -1,0 +1,27 @@
+"""deepseek-moe-16b [arXiv:2401.06066; hf]: 28L d_model=2048 16H (GQA kv=16)
+d_ff=1408 vocab=102400, MoE 64e top-6 — 2 shared + 64 routed, fine-grained."""
+
+from repro.common.configs import LMConfig, TrainingConfig
+from repro.configs.base import Arch
+
+CONFIG = LMConfig(
+    name="deepseek-moe-16b",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=102_400,
+    moe=True, n_experts=64, top_k=6, n_shared_experts=2, d_expert=1408,
+)
+
+REDUCED = LMConfig(
+    name="deepseek-moe-16b-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=96, vocab_size=512,
+    moe=True, n_experts=8, top_k=2, n_shared_experts=2, d_expert=96,
+    dtype="float32",
+)
+
+ARCH = Arch(
+    id="deepseek-moe-16b", family="lm", config=CONFIG,
+    train=TrainingConfig(optimizer="adamw", lr=4.2e-4, remat="dots"),
+    reduced=REDUCED, source="arXiv:2401.06066; hf",
+    notes="fine-grained MoE: 2 shared + 64 routed top-6",
+)

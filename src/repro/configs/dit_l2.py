@@ -1,0 +1,23 @@
+"""dit-l2 [arXiv:2212.09748; paper]: DiT-L/2 — img_res=256 patch=2
+n_layers=24 d_model=1024 n_heads=16, class-conditional on VAE latents."""
+
+from repro.common.configs import DiTConfig, TrainingConfig
+from repro.configs.base import Arch
+
+CONFIG = DiTConfig(
+    name="dit-l2",
+    img_res=256, patch=2, n_layers=24, d_model=1024, n_heads=16,
+    in_channels=4, n_classes=1000,
+)
+
+REDUCED = DiTConfig(
+    name="dit-l2-smoke",
+    img_res=64, patch=2, n_layers=2, d_model=64, n_heads=4,
+    in_channels=4, n_classes=10, dtype="float32",
+)
+
+ARCH = Arch(
+    id="dit-l2", family="diffusion", config=CONFIG,
+    train=TrainingConfig(optimizer="adamw", lr=1e-4, remat="dots"),
+    reduced=REDUCED, source="arXiv:2212.09748; paper",
+)

@@ -1,0 +1,21 @@
+"""efficientnet-b7 [arXiv:1905.11946; paper]: compound scaling width 2.0 /
+depth 3.1 over the B0 base, img_res=600."""
+
+from repro.common.configs import VisionConfig, TrainingConfig
+from repro.configs.base import Arch
+
+CONFIG = VisionConfig(
+    name="efficientnet-b7", family="efficientnet", img_res=600,
+    width_mult=2.0, depth_mult=3.1,
+)
+
+REDUCED = VisionConfig(
+    name="efficientnet-b7-smoke", family="efficientnet", img_res=64,
+    width_mult=0.25, depth_mult=0.25, n_classes=10, dtype="float32",
+)
+
+ARCH = Arch(
+    id="efficientnet-b7", family="vision", config=CONFIG,
+    train=TrainingConfig(optimizer="sgdm", lr=0.1, weight_decay=1e-5),
+    reduced=REDUCED, source="arXiv:1905.11946; paper",
+)

@@ -1,0 +1,28 @@
+"""flux-dev [BFL tech report; unverified]: MMDiT rectified-flow,
+img_res=1024 latent_res=128, 19 double + 38 single blocks, d_model=3072,
+24 heads, ~12B params."""
+
+from repro.common.configs import MMDiTConfig, TrainingConfig
+from repro.configs.base import Arch
+
+CONFIG = MMDiTConfig(
+    name="flux-dev",
+    img_res=1024, n_double_blocks=19, n_single_blocks=38,
+    d_model=3072, n_heads=24, patch=2, in_channels=16,
+    d_txt=4096, d_pooled=768, txt_len=512,
+)
+
+REDUCED = MMDiTConfig(
+    name="flux-dev-smoke",
+    img_res=64, n_double_blocks=2, n_single_blocks=2,
+    d_model=64, n_heads=4, patch=2, in_channels=4,
+    d_txt=32, d_pooled=16, txt_len=8, dtype="float32",
+)
+
+ARCH = Arch(
+    id="flux-dev", family="diffusion", config=CONFIG,
+    train=TrainingConfig(optimizer="adamw", lr=1e-4, remat="dots"),
+    reduced=REDUCED, source="BFL tech report; unverified",
+    notes="text/VAE frontends stubbed: input_specs provides latents + "
+          "T5/CLIP features (assignment rule for modality frontends)",
+)

@@ -1,0 +1,21 @@
+"""resnet-152 [arXiv:1512.03385; paper]: depths 3-8-36-3, width 64,
+bottleneck 4x, img_res=224."""
+
+from repro.common.configs import VisionConfig, TrainingConfig
+from repro.configs.base import Arch
+
+CONFIG = VisionConfig(
+    name="resnet-152", family="resnet", img_res=224,
+    depths=(3, 8, 36, 3), width=64, bottleneck=4,
+)
+
+REDUCED = VisionConfig(
+    name="resnet-152-smoke", family="resnet", img_res=64,
+    depths=(1, 2, 2, 1), width=8, n_classes=10, dtype="float32",
+)
+
+ARCH = Arch(
+    id="resnet-152", family="vision", config=CONFIG,
+    train=TrainingConfig(optimizer="sgdm", lr=0.1, weight_decay=1e-4),
+    reduced=REDUCED, source="arXiv:1512.03385; paper",
+)

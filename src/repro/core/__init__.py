@@ -1,0 +1,16 @@
+"""The paper's contribution: multi-objective load balancing for
+heterogeneous inference fleets (profiles, two-stage balancer, baselines,
+estimator, fleet simulator, energy model, online adaptation, hierarchy)."""
+
+from repro.core.profiles import ProfileTable, paper_fleet, synthetic_fleet
+from repro.core.policies import (POLICY_CODES, mo_select, mo_select_batch,
+                                 policy_scores)
+from repro.core.estimator import group_of_count, noisy_detected_count
+from repro.core.simulator import SimConfig, simulate, summarize
+
+__all__ = [
+    "ProfileTable", "paper_fleet", "synthetic_fleet",
+    "POLICY_CODES", "mo_select", "mo_select_batch", "policy_scores",
+    "group_of_count", "noisy_detected_count",
+    "SimConfig", "simulate", "summarize",
+]

@@ -1,0 +1,71 @@
+"""Object-count estimator (paper §III-B.1, output-based / temporal
+continuity): the group of an incoming frame is estimated from the detection
+output of the *previous* frame of the same stream, produced by whichever
+device-model pair processed it. No extra counting model runs.
+
+The detection count is therefore accuracy-dependent: a weak model on a
+complex scene undercounts, which can misclassify the *next* frame into an
+easy group — the sticky-error dynamic analysed in EXPERIMENTS.md §Fig4."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def group_of_count(count, n_groups: int = 5):
+    """Paper grouping: {0, 1, 2, 3, 4+} objects."""
+    return jnp.clip(count, 0, n_groups - 1).astype(jnp.int32)
+
+
+def noisy_detected_count(rng, true_count, map_pg, max_count: int = 8):
+    """Simulate the detector's count given per-(pair,group) accuracy.
+
+    Each of the ``true_count`` objects is detected independently with
+    probability ``p_det = 0.80 + 0.20 * mAP/100``: counting degrades much
+    more gently with mAP than box quality does (mAP penalises localisation
+    and classification, which barely affect a raw count; the ECORE estimator
+    the paper builds on [6] reports high count accuracy even for small
+    models). False positives occur with small probability scaled by
+    (1 - mAP/100)."""
+    p_det = jnp.clip(0.80 + 0.20 * map_pg / 100.0, 0.0, 1.0)
+    u = jax.random.uniform(rng, (max_count,))
+    present = jnp.arange(max_count) < true_count
+    detected = jnp.sum((u < p_det) & present)
+    fp_rng = jax.random.fold_in(rng, 1)
+    p_fp = 0.05 * (1.0 - map_pg / 100.0)
+    fp = (jax.random.uniform(fp_rng, ()) < p_fp).astype(jnp.int32)
+    return detected.astype(jnp.int32) + fp
+
+
+def markov_transition(n_states: int = 5, stickiness: float = 0.85,
+                      drift_up: float = 0.62):
+    """Scene-complexity Markov chain: consecutive frames usually keep their
+    object count (temporal continuity), occasionally drift +-1, rarely jump.
+    ``drift_up`` > 0.5 skews the stationary distribution toward crowded
+    scenes (the paper's stream is a busy pedestrian crossing)."""
+    eye = jnp.eye(n_states)
+    up = jnp.roll(eye, 1, axis=1).at[-1].set(0.0)      # no wraparound
+    down = jnp.roll(eye, -1, axis=1).at[0].set(0.0)
+    drift = drift_up * up + (1 - drift_up) * down
+    # boundary states put all drift mass on their single neighbour
+    drift = drift.at[0, 1].set(1.0).at[-1, -2].set(1.0)
+    jump = jnp.ones((n_states, n_states)) / n_states
+    P = stickiness * eye + (1 - stickiness) * (0.8 * drift + 0.2 * jump)
+    return P / jnp.sum(P, axis=1, keepdims=True)
+
+
+def stationary(P):
+    """Stationary distribution of a row-stochastic matrix (power iteration)."""
+    pi = jnp.ones((P.shape[0],)) / P.shape[0]
+    for _ in range(200):
+        pi = pi @ P
+    return pi
+
+
+def markov_step(rng, state, P):
+    """Sample next state of the chain (state: (U,) int32)."""
+    probs = P[state]                       # (U, S)
+    return jax.random.categorical(rng, jnp.log(probs + 1e-9), axis=-1)

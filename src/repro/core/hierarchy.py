@@ -1,0 +1,61 @@
+"""Hierarchical (two-level) load balancing — the paper's §V scalability
+limit addressed (also listed as future work §VII).
+
+A single central gateway is O(P) per request and a throughput bottleneck at
+thousands of cells. The hierarchical design:
+
+  level 1 (global): pick a *pod* by Algorithm 1 over pod-aggregate profiles
+           (min-T/min-E/max-mAP per group across the pod's cells, queue =
+           total outstanding of the pod, refreshed at sync_interval);
+  level 2 (local):  the pod's own gateway runs Algorithm 1 over its cells
+           with exact local queues.
+
+Staleness of the level-1 queue snapshot is the price of decentralisation;
+``tests/test_hierarchy.py`` bounds the regret vs the flat balancer."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import mo_scores
+from repro.core.profiles import ProfileTable
+
+f32 = jnp.float32
+
+
+def pod_aggregate(prof: ProfileTable, pod_of_pair) -> ProfileTable:
+    """Aggregate per-pair profiles into per-pod profiles.
+    pod_of_pair: (P,) int32 pod id per pair; n_pods = max+1."""
+    n_pods = int(jnp.max(pod_of_pair)) + 1
+    P, G = prof.T.shape
+
+    def agg(col_min, table):
+        out = []
+        for k in range(n_pods):
+            m = pod_of_pair == k
+            big = jnp.where(m[:, None], table, jnp.inf if col_min else -jnp.inf)
+            out.append(jnp.min(big, 0) if col_min else jnp.max(big, 0))
+        return jnp.stack(out)
+
+    return ProfileTable(agg(True, prof.T), agg(True, prof.E),
+                        agg(False, prof.mAP),
+                        tuple(f"pod{k}" for k in range(n_pods)))
+
+
+def hierarchical_select(prof: ProfileTable, pod_prof: ProfileTable,
+                        pod_of_pair, g, q_exact, q_pod_stale, *,
+                        delta: float = 20.0, gamma: float = 0.5):
+    """Two-level Algorithm 1. q_exact: (P,) local queues (only the chosen
+    pod's slice is consulted); q_pod_stale: (n_pods,) last-synced totals."""
+    Jp, _ = mo_scores(pod_prof.T[:, g], pod_prof.E[:, g], pod_prof.mAP[:, g],
+                      q_pod_stale, delta=delta, gamma=gamma)
+    pod = jnp.argmin(Jp)
+    in_pod = pod_of_pair == pod
+    T_g = jnp.where(in_pod, prof.T[:, g], jnp.inf)
+    E_g = jnp.where(in_pod, prof.E[:, g], jnp.inf)
+    mAP_g = jnp.where(in_pod, prof.mAP[:, g], -jnp.inf)
+    J, _ = mo_scores(T_g, E_g, mAP_g, q_exact, delta=delta, gamma=gamma)
+    return jnp.argmin(J), pod

@@ -1,0 +1,46 @@
+"""Detection metrics: mAP computation for the end-to-end example
+(pseudo-ground-truth protocol mirroring the paper: a high-capacity model's
+detections serve as reference labels)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+
+
+def cell_matches(pred_obj, ref_obj, threshold: float = 0.0):
+    """Grid-cell detection matching: a predicted-positive cell matches a
+    reference-positive cell at the same location (coarse IoU proxy for the
+    SSD-style per-cell heads in repro.models.detection)."""
+    p = pred_obj > threshold
+    r = ref_obj > 0.5
+    tp = jnp.sum(p & r, axis=(-2, -1))
+    fp = jnp.sum(p & ~r, axis=(-2, -1))
+    fn = jnp.sum(~p & r, axis=(-2, -1))
+    return tp, fp, fn
+
+
+def average_precision(scores, is_tp, n_ref):
+    """AP = area under the precision-recall curve (all-point interpolation).
+    scores: (N,) detection confidences; is_tp: (N,) bool; n_ref: #references."""
+    order = jnp.argsort(-scores)
+    tp = jnp.cumsum(is_tp[order].astype(f32))
+    fp = jnp.cumsum((~is_tp[order]).astype(f32))
+    recall = tp / jnp.maximum(n_ref, 1)
+    precision = tp / jnp.maximum(tp + fp, 1e-9)
+    # integrate with right-max interpolation
+    prec_interp = jax.lax.associative_scan(jnp.maximum, precision[::-1])[::-1]
+    dr = jnp.diff(recall, prepend=0.0)
+    return jnp.sum(prec_interp * dr)
+
+
+def map_from_grids(pred_grids, pred_scores, ref_grids) -> float:
+    """mAP (x100) over a set of images given per-cell predictions and
+    reference grids; single-class variant used by the e2e example."""
+    scores = pred_scores.reshape(-1)
+    is_tp = (pred_grids.reshape(-1) > 0) & (ref_grids.reshape(-1) > 0)
+    n_ref = jnp.sum(ref_grids > 0)
+    return float(average_precision(scores, is_tp, n_ref) * 100.0)

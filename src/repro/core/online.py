@@ -1,0 +1,62 @@
+"""Online profile adaptation (the paper's §VII future work, implemented).
+
+The static offline tables drift when hardware throttles, models are updated
+or input distributions shift. ``OnlineProfiles`` keeps an EWMA of observed
+latency/energy per (pair, group) on top of the offline prior, with a
+pseudo-count ramp so cold cells trust the prior and hot cells trust
+measurements. Pure-functional: state in, state out — usable inside the
+jitted gateway and the simulator."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profiles import ProfileTable
+
+f32 = jnp.float32
+
+
+def init_state(prof: ProfileTable):
+    return {
+        "T": prof.T.astype(f32),
+        "E": prof.E.astype(f32),
+        "count": jnp.zeros_like(prof.T),
+    }
+
+
+def observe(state, p, g, obs_t_ms, obs_e_mwh=None, alpha: float = 0.1,
+            prior_weight: float = 10.0):
+    """Fold one observation into the EWMA. The effective step size anneals
+    from ~0 (trust prior) to ``alpha`` as observations accumulate."""
+    c = state["count"][p, g]
+    eff = alpha * c / (c + prior_weight)
+    new_T = state["T"].at[p, g].mul(1.0 - eff)
+    new_T = new_T.at[p, g].add(eff * obs_t_ms)
+    out = dict(state)
+    out["T"] = new_T
+    out["count"] = state["count"].at[p, g].add(1.0)
+    if obs_e_mwh is not None:
+        new_E = state["E"].at[p, g].mul(1.0 - eff)
+        out["E"] = new_E.at[p, g].add(eff * obs_e_mwh)
+    return out
+
+
+def as_profile(state, prof: ProfileTable) -> ProfileTable:
+    """Materialise the adapted tables (mAP stays offline-profiled: accuracy
+    cannot be observed online without labels)."""
+    return ProfileTable(state["T"], state["E"], prof.mAP, prof.names,
+                        prof.floor_mw)
+
+
+def drift_robustness_gap(prof: ProfileTable, drifted: ProfileTable,
+                         state) -> dict:
+    """Diagnostics for the drift experiment (EXPERIMENTS.md §Online): RMS
+    error of static vs adapted tables against the drifted ground truth."""
+    rms = lambda a, b: float(jnp.sqrt(jnp.mean(jnp.square(a - b))))
+    return {
+        "static_T_rms": rms(prof.T, drifted.T),
+        "adapted_T_rms": rms(state["T"], drifted.T),
+    }

@@ -1,0 +1,107 @@
+"""Task-allocation policies (paper §III-B Algorithm 1 + §IV-B baselines),
+as pure JAX functions over ProfileTable arrays.
+
+All policies share one interface so the simulator, the serving gateway and
+the Pallas ``moscore`` kernel agree bit-for-bit:
+
+    scores = policy_scores(code, prof, g, q, rnd, rr_counter, gamma, delta)
+    p*     = argmin(scores)
+
+The two-stage MO policy is also exposed directly (:func:`mo_select`, exact
+Algorithm 1) and in a queue-feedback batched form (:func:`mo_select_batch`,
+``lax.scan`` over a routing window — the reference for the kernel)."""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profiles import ProfileTable
+
+f32 = jnp.float32
+BIG = jnp.asarray(1e30, f32)
+
+POLICY_CODES = {"MO": 0, "RR": 1, "RND": 2, "LC": 3, "LE": 4, "LT": 5,
+                "HA": 6}
+POLICY_NAMES = {v: k for k, v in POLICY_CODES.items()}
+
+
+# ------------------------------------------------------------ Algorithm 1 --
+
+def mo_scores(T_g, E_g, mAP_g, q, *, delta: float, gamma: float):
+    """Vectorised Algorithm 1 scores over the P pairs for one request.
+
+    T_g/E_g/mAP_g: (P,) profiled columns for the request's group;
+    q: (P,) live queue depths. Returns (J, feasible): infeasible pairs get
+    +inf so argmin(J) == argmin over the accuracy-feasible candidate set."""
+    map_max = jnp.max(mAP_g)
+    feasible = mAP_g >= map_max - delta
+    L_exp = T_g * (1.0 + q)
+    l_min = jnp.min(jnp.where(feasible, L_exp, BIG))
+    l_max = jnp.max(jnp.where(feasible, L_exp, -BIG))
+    e_min = jnp.min(jnp.where(feasible, E_g, BIG))
+    e_max = jnp.max(jnp.where(feasible, E_g, -BIG))
+    L_n = (L_exp - l_min) / jnp.maximum(l_max - l_min, 1e-9)
+    E_n = (E_g - e_min) / jnp.maximum(e_max - e_min, 1e-9)
+    J = gamma * L_n + (1.0 - gamma) * E_n
+    return jnp.where(feasible, J, BIG), feasible
+
+
+def mo_select(prof: ProfileTable, g, q, *, delta: float = 5.0,
+              gamma: float = 0.5):
+    """p* = argmin J over the accuracy-feasible set (one request)."""
+    J, feasible = mo_scores(prof.T[:, g], prof.E[:, g], prof.mAP[:, g], q,
+                            delta=delta, gamma=gamma)
+    return jnp.argmin(J), J, feasible
+
+
+def mo_select_batch(prof: ProfileTable, gs, q0, *, delta: float = 5.0,
+                    gamma: float = 0.5):
+    """Sequential assignment of a routing window with queue feedback:
+    each selection bumps q[p*] before the next request is scored (the
+    semantics HAProxy dispatch gives the paper implicitly). gs: (W,) groups.
+    Returns (assignments (W,), final q). Reference for kernels/moscore."""
+
+    def step(q, g):
+        p, _, _ = mo_select(prof, g, q, delta=delta, gamma=gamma)
+        return q.at[p].add(1.0), p
+
+    q, ps = jax.lax.scan(step, q0.astype(f32), gs)
+    return ps, q
+
+
+# ---------------------------------------------------------------- baselines
+
+def policy_scores(code, prof: ProfileTable, g, q, rnd, rr_counter,
+                  gamma, delta):
+    """Scores (P,) for every policy; dispatch via lax.switch so one jitted
+    simulator serves all seven policies."""
+    P = prof.n_pairs
+
+    def mo(_):
+        J, _f = mo_scores(prof.T[:, g], prof.E[:, g], prof.mAP[:, g], q,
+                          delta=delta, gamma=gamma)
+        return J
+
+    def rr(_):
+        return jnp.mod(jnp.arange(P) - rr_counter, P).astype(f32)
+
+    def rnd_(_):
+        return jax.random.uniform(rnd, (P,))
+
+    def lc(_):
+        return q.astype(f32)
+
+    def le(_):
+        return jnp.mean(prof.E, axis=1)          # fixed global-cheapest pair
+
+    def lt(_):
+        return prof.T[:, g] * (1.0 + q)
+
+    def ha(_):
+        return -jnp.mean(prof.mAP, axis=1)       # fixed global-best-mAP pair
+
+    return jax.lax.switch(code, [mo, rr, rnd_, lc, le, lt, ha], None)

@@ -1,0 +1,51 @@
+"""Sharded host -> device input pipeline.
+
+Single-process here, but written against the multi-host contract: each host
+materialises only its addressable shard of the global batch and assembles a
+global array (``jax.make_array_from_single_device_arrays``)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def device_put_sharded_batch(batch, sharding):
+    """Place a host batch onto devices under ``sharding``. On multi-host,
+    slice to the per-host addressable portion first."""
+    def put(x):
+        if hasattr(sharding, "addressable_devices") and \
+                len(sharding.addressable_devices) < len(sharding.device_set):
+            # multi-host: build from addressable shards
+            idx = sharding.addressable_devices_indices_map(x.shape)
+            arrs = [jax.device_put(x[i], d) for d, i in idx.items()]
+            return jax.make_array_from_single_device_arrays(
+                x.shape, sharding, arrs)
+        return jax.device_put(x, sharding)
+    return jax.tree.map(put, batch)
+
+
+def prefetch(iterator, size: int = 2):
+    """Simple software pipeline: keep ``size`` batches in flight."""
+    import collections
+    import threading
+    import queue as q
+
+    out: q.Queue = q.Queue(maxsize=size)
+    SENTINEL = object()
+
+    def worker():
+        try:
+            for item in iterator:
+                out.put(item)
+        finally:
+            out.put(SENTINEL)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = out.get()
+        if item is SENTINEL:
+            return
+        yield item

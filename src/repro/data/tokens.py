@@ -1,0 +1,53 @@
+"""Synthetic LM token pipeline: deterministic, shard-aware, infinite."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_lm_batch(rng, batch: int, seq: int, vocab: int,
+                       p_det: float = 0.8):
+    """Markov synthetic token stream: with prob ``p_det`` the next token is
+    a fixed function of the current one, else uniform — so a single-token
+    context suffices to learn most of the stream and a few dozen training
+    steps show a real loss decrease (optimal xent ~= (1-p)ln V)."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    t0 = jax.random.randint(k1, (batch,), 0, vocab)
+    noise = jax.random.randint(k2, (batch, seq), 0, vocab)
+    use_det = jax.random.bernoulli(k3, p_det, (batch, seq))
+
+    def step(tok, xs):
+        nz, det = xs
+        nxt = jnp.where(det, (tok * 31 + 7) % vocab, nz)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step, t0, (noise.T, use_det.T))
+    toks = jnp.concatenate([t0[:, None], toks.T], axis=1)
+    return {"tokens": toks[:, :-1].astype(jnp.int32),
+            "labels": toks[:, 1:].astype(jnp.int32)}
+
+
+class TokenLoader:
+    """Infinite iterator of sharded batches."""
+
+    def __init__(self, batch: int, seq: int, vocab: int, sharding=None,
+                 seed: int = 0):
+        self.batch, self.seq, self.vocab = batch, seq, vocab
+        self.sharding = sharding
+        self.rng = jax.random.PRNGKey(seed)
+        self.step = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        rng = jax.random.fold_in(self.rng, self.step)
+        self.step += 1
+        b = synthetic_lm_batch(rng, self.batch, self.seq, self.vocab)
+        if self.sharding is not None:
+            b = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), b,
+                {"tokens": self.sharding, "labels": self.sharding})
+        return b

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_mesh,
+    shard_tree,
+    batch_spec,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "logical_to_mesh",
+    "shard_tree",
+    "batch_spec",
+]

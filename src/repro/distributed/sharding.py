@@ -1,0 +1,255 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates every parameter / activation with *logical* axis names;
+this module maps them onto the physical mesh axes.  One set of rules serves
+all 10 assigned architectures; per-arch or per-shape overrides are plain
+``dict`` updates.
+
+Physical mesh axes:
+  * ``pod``   (multi-pod only) -- outermost data-parallel axis across pods
+  * ``data``  -- data parallel + FSDP (ZeRO-3 parameter/optimizer sharding)
+  * ``model`` -- tensor parallel (heads / mlp / vocab) and expert parallel
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis vocabulary -------------------------------------------------
+# batch      activation batch dim
+# seq        activation sequence dim (sharded only in sequence-parallel paths)
+# seq_kv     KV-cache sequence dim (sharded for long-context decode)
+# embed      d_model dims of weights (FSDP target)
+# heads      attention head (q) projection dim
+# kv_heads   attention kv projection dim (often too small to TP-shard)
+# mlp        FFN hidden dim
+# expert     MoE expert dim (expert parallelism)
+# vocab      embedding/logits vocabulary dim
+# layer      stacked-layer leading dim of scanned weights (never sharded)
+# spatial_h / spatial_w   conv feature maps (spatial partitioning)
+# channels   conv channel dim (TP for convnets)
+# none       explicitly replicated
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    rules: tuple[tuple[str, tuple[str, ...] | None], ...]
+
+    def as_dict(self) -> dict[str, tuple[str, ...] | None]:
+        return {k: v for k, v in self.rules}
+
+    def override(self, **kw: Any) -> "AxisRules":
+        d = self.as_dict()
+        for k, v in kw.items():
+            if v is None or v == ():
+                d[k] = None
+            elif isinstance(v, str):
+                d[k] = (v,)
+            else:
+                d[k] = tuple(v)
+        return AxisRules(tuple(d.items()))
+
+
+def _mk(d: Mapping[str, Any]) -> AxisRules:
+    out = []
+    for k, v in d.items():
+        if v is None:
+            out.append((k, None))
+        elif isinstance(v, str):
+            out.append((k, (v,)))
+        else:
+            out.append((k, tuple(v)))
+    return AxisRules(tuple(out))
+
+
+# Default rules: FSDP over data(+pod), TP/EP over model.
+DEFAULT_RULES = _mk({
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_kv": None,
+    "embed": ("data",),
+    "embed_nofsdp": None,
+    "heads": ("model",),
+    "kv_heads": None,
+    "mlp": ("model",),
+    "expert": ("model",),
+    "expert_mlp": None,
+    "vocab": ("model",),
+    "layer": None,
+    "norm": None,
+    "rep": None,      # force-replicated even in constraint() (vs None ->
+                      # UNCONSTRAINED); pins remat-saved activations
+    "spatial_h": None,
+    "spatial_w": None,
+    "channels": ("model",),
+    "channels_in": None,
+    "classes": None,
+    "cond": None,
+})
+
+# Long-context decode: KV sequence sharded across the *whole* mesh (split-K
+# decode with cross-device LSE combine); params FSDP as usual.
+LONG_DECODE_RULES = DEFAULT_RULES.override(
+    seq_kv=("data", "model"),
+    batch=None,           # batch=1: cannot shard
+)
+
+# Inference (no FSDP gather per layer wanted at small batch): keep params
+# sharded over model only, replicate over data.
+SERVE_RULES = DEFAULT_RULES.override(embed=None)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _present(mesh: Mesh, axes: Sequence[str] | None) -> tuple[str, ...] | None:
+    """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""
+    if axes is None:
+        return None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    return kept or None
+
+
+def logical_to_mesh(mesh: Mesh, rules: AxisRules,
+                    logical: Sequence[str | None],
+                    shape: Sequence[int] | None = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    If ``shape`` is given, any mapping whose axis-size product does not divide
+    the dimension is dropped (e.g. kv_heads=8 on a 16-way model axis).
+    A mesh axis may appear at most once in the spec; first logical dim wins.
+    """
+    d = rules.as_dict()
+    sizes = mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    spec: list[Any] = []
+    for i, name in enumerate(logical):
+        if name is None or name == "none":
+            spec.append(None)
+            continue
+        if name not in d:
+            raise KeyError(f"unknown logical axis {name!r}")
+        axes = _present(mesh, d[name])
+        if axes is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            spec.append(None)
+            continue
+        if shape is not None:
+            prod = int(np.prod([sizes[a] for a in axes]))
+            while axes and shape[i] % prod != 0:
+                axes = axes[:-1]
+                prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+            if not axes:
+                spec.append(None)
+                continue
+        used.update(axes)
+        spec.append(axes[0] if len(axes) == 1 else tuple(axes))
+    return P(*spec)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def shard_tree(mesh: Mesh, rules: AxisRules, logical_tree: Any,
+               shape_tree: Any = None) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    ``shape_tree`` (same structure, of ShapeDtypeStruct) enables the
+    divisibility fallback.
+    """
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda lg: named(mesh, logical_to_mesh(mesh, rules, lg)),
+            logical_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(
+        lambda lg, sd: named(mesh, logical_to_mesh(mesh, rules, lg, sd.shape)),
+        logical_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_spec(mesh: Mesh, rules: AxisRules, ndim: int,
+               batch_dim: int = 0) -> P:
+    logical = [None] * ndim
+    logical[batch_dim] = "batch"
+    return logical_to_mesh(mesh, rules, logical)
+
+
+_RULES_STACK: list[AxisRules] = []
+
+
+class use_rules:
+    """Context manager installing the active rules for ``constraint`` calls
+    made inside jitted model code (read at trace time)."""
+
+    def __init__(self, rules: AxisRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _RULES_STACK.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _RULES_STACK.pop()
+        return False
+
+
+def active_rules() -> AxisRules:
+    return _RULES_STACK[-1] if _RULES_STACK else DEFAULT_RULES
+
+
+def constraint(x, logical: Sequence[str | None], rules: AxisRules | None = None):
+    """with_sharding_constraint using logical names; unspecified (None) dims
+    are left UNCONSTRAINED so XLA propagation can still shard them; a no-op
+    outside a mesh context or when the mesh is trivial."""
+    rules = rules or active_rules()
+    try:
+        mesh = jax.sharding.get_abstract_mesh()  # type: ignore[attr-defined]
+        if mesh is None or mesh.empty or np.prod(mesh.axis_sizes) == 1:
+            return x
+        spec = logical_to_mesh_abstract(mesh, rules, logical, x.shape)
+        uspec = P(*(
+            (None if name == "rep" else P.UNCONSTRAINED) if s is None else s
+            for s, name in zip(spec, logical)))
+        return jax.lax.with_sharding_constraint(x, uspec)
+    except Exception:
+        return x
+
+
+def logical_to_mesh_abstract(mesh, rules: AxisRules,
+                             logical: Sequence[str | None],
+                             shape: Sequence[int]) -> P:
+    """Same as logical_to_mesh but for AbstractMesh (inside jit)."""
+    d = rules.as_dict()
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    used: set[str] = set()
+    spec: list[Any] = []
+    for i, name in enumerate(logical):
+        if name is None or name == "none":
+            spec.append(None)
+            continue
+        axes = d.get(name)
+        if axes is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in axes if a in sizes and a not in used)
+        if shape is not None:
+            prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+            while axes and shape[i] % prod != 0:
+                axes = axes[:-1]
+                prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        if not axes:
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(axes[0] if len(axes) == 1 else tuple(axes))
+    return P(*spec)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the performance-critical compute layers:
+
+  flash_attention/  block-tiled causal attention (prefill cells)
+  decode_attention/ split-K KV-cache decode with LSE combine (decode cells)
+  moscore/          fused two-stage balancer window scan (the paper's
+                    Algorithm 1, queue vector resident in VMEM)
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper with interpret fallback) and ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes and assert_allclose against the oracle.
+"""

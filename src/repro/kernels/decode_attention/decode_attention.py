@@ -1,0 +1,85 @@
+"""Split-K decode attention (FlashDecoding-style) as a Pallas TPU kernel.
+
+Decode is HBM-bound: the whole KV cache is streamed once per token. To keep
+every HBM channel busy at batch=1, the sequence is split into ``n_splits``
+grid programs per (batch x kv-head); each computes a partial softmax
+(numerator, logsumexp) over its chunk into its own output slot, and ops.py
+combines the partials with a tiny fp32 logsumexp reduction. The same
+(partial, LSE-combine) decomposition runs *across devices* for the
+sequence-sharded long_500k cells (distributed split-K, DESIGN.md §6).
+
+Grid: (B*KV, n_splits); block = (S/n_splits, D) of K and V in VMEM.
+VMEM per program at S=32k, n_splits=8, D=128, bf16: 2 x 1 MiB + G-row
+accumulators — well under budget; n_splits chosen by ops.py so the block
+stays <= 4 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, kvlen_ref, o_ref, lse_ref, *,
+                scale: float, block: int):
+    # q_ref: (G, D); k/v_ref: (BLK, D); o_ref: (G, D); lse_ref: (G, 1)
+    g, d = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * scale
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    split = pl.program_id(1)
+    base = split * block
+
+    s = q @ k.T                                        # (G, BLK)
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (g, block), 1)
+    valid = pos < kvlen_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m = jnp.max(s, axis=1)
+    # all-invalid splits produce m = NEG_INF; guard the exp
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(valid, p, 0.0)
+    l = jnp.sum(p, axis=1)
+    # normalised partial: combine weights are then exactly exp(lse - LSE)
+    o = (p @ v) / jnp.maximum(l, 1e-30)[:, None]       # (G, D)
+    lse = jnp.where(l > 0, jnp.log(l) + m_safe, NEG_INF)
+    o_ref[...] = o.astype(o_ref.dtype)
+    lse_ref[...] = lse[:, None].astype(lse_ref.dtype)
+
+
+def decode_attention_splits(q, k, v, kv_len, *, n_splits: int,
+                            interpret: bool = True):
+    """q: (BKV, G, D); k/v: (BKV, S, D); kv_len: (BKV, 1) int32.
+    Returns partials o: (BKV, n_splits, G, D), lse: (BKV, n_splits, G, 1)."""
+    bkv, g, d = q.shape
+    s = k.shape[1]
+    assert s % n_splits == 0, (s, n_splits)
+    block = s // n_splits
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_dec_kernel, scale=scale, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(bkv, n_splits),
+        in_specs=[
+            pl.BlockSpec((None, g, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, block, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, block, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, 1), lambda b, i: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, g, d), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((None, None, g, 1), lambda b, i: (b, i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bkv, n_splits, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((bkv, n_splits, g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_len)

@@ -1,0 +1,50 @@
+"""Jitted wrapper: layout, split-count heuristic, LSE combine."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_splits)
+
+NEG_INF = -1e30
+
+
+def _pick_splits(s: int, d: int, target_block_bytes: int = 4 << 20) -> int:
+    block = max(128, target_block_bytes // (2 * d * 2))   # bf16 k+v
+    n = max(1, s // block)
+    while s % n != 0:
+        n -= 1
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("n_splits", "interpret"))
+def decode_attention(q, k, v, kv_len=None, *, n_splits: int = 0,
+                     interpret: bool = True):
+    """q: (B, H, D); k/v: (B, S, KV, D); kv_len: (B,) valid length or None.
+    Split-K partials from the Pallas kernel, fp32 LSE combine here."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if kv_len is None:
+        kv_len = jnp.full((b,), s, jnp.int32)
+    ns = n_splits or _pick_splits(s, d)
+
+    qf = q.reshape(b, kv, g, d).reshape(b * kv, g, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    lens = jnp.repeat(kv_len.astype(jnp.int32), kv)[:, None]
+
+    o_p, lse_p = decode_attention_splits(qf, kf, vf, lens, n_splits=ns,
+                                         interpret=interpret)
+    # combine partials: softmax over splits in fp32
+    lse = lse_p[..., 0]                                   # (BKV, NS, G)
+    m = jnp.max(lse, axis=1, keepdims=True)
+    w = jnp.exp(lse - m)                                  # (BKV, NS, G)
+    num = jnp.sum(o_p * w[..., None], axis=1)             # (BKV, G, D)
+    den = jnp.sum(w, axis=1)                              # (BKV, G)
+    out = num / den[..., None]
+    return out.reshape(b, kv, g, d).reshape(b, h, d).astype(q.dtype)

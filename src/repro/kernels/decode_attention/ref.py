@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for KV-cache decode attention (one query token)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_decode_attention(q, k, v, kv_len=None):
+    """q: (B, H, D); k/v: (B, S, KV, D); kv_len: (B,) valid prefix length
+    (None -> full). Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    scores = scores / (d ** 0.5)
+    if kv_len is not None:
+        valid = jnp.arange(s)[None] < kv_len[:, None]
+        scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

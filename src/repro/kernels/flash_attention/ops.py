@@ -1,0 +1,37 @@
+"""Jitted public wrapper: GQA layout handling, head broadcast, padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 512, interpret: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) -> (B, Sq, H, D).
+
+    ``interpret=True`` executes the kernel body in Python on CPU (the only
+    mode available in this container); on real TPUs pass interpret=False.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / (d ** 0.5)
+
+    # broadcast kv heads to q heads, fold heads into batch
+    kb = jnp.repeat(k, g, axis=2)
+    vb = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = kb.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = vb.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+
+    o = flash_attention_bhsd(qf, kf, vf, causal=causal, scale=scale,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

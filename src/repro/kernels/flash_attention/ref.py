@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (GQA, causal or full)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D). fp32 softmax, output in q.dtype."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)

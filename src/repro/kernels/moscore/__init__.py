@@ -1,0 +1,4 @@
+from repro.kernels.moscore.ops import moscore_route
+from repro.kernels.moscore.ref import ref_moscore_route
+
+__all__ = ["moscore_route", "ref_moscore_route"]

@@ -1,0 +1,80 @@
+"""Fused multi-objective routing window as a Pallas TPU kernel.
+
+The paper's gateway makes one Algorithm-1 decision per request with live
+queue feedback — decision w+1 must see the queue bump of decision w, a
+strictly sequential recurrence. Done naively (one jnp dispatch per request)
+each step round-trips the queue vector through HBM; fused here, the profile
+tables (P x G), the queue vector and the whole W-request scan live in VMEM
+for a single kernel launch (TPU-native analogue of the paper's HAProxy+Lua
+"microsecond-scale decision" requirement).
+
+Layout: everything kept 2D with the pair axis last (lane dimension,
+padded to a multiple of 128 by ops.py). Single program, grid=().
+VMEM: 3 x (G x P') profile tables + (1 x P') queue + (W x 1) ids — a P'=1024,
+G=8, W=4096 window uses ~130 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+
+def _moscore_kernel(tg_ref, eg_ref, mg_ref, g_ref, q0_ref, out_ref, qf_ref,
+                    *, delta: float, gamma: float, n_window: int):
+    # tg/eg/mg: (G, P') profiles transposed; g: (W, 1) int32; q0: (1, P')
+    _, p = tg_ref.shape
+
+    def body(w, q):
+        g = g_ref[w, 0]
+        Tg = jax.lax.dynamic_slice(tg_ref[...], (g, 0), (1, p))   # (1, P')
+        Eg = jax.lax.dynamic_slice(eg_ref[...], (g, 0), (1, p))
+        Mg = jax.lax.dynamic_slice(mg_ref[...], (g, 0), (1, p))
+
+        feasible = Mg >= jnp.max(Mg) - delta
+        L = Tg * (1.0 + q)
+        l_min = jnp.min(jnp.where(feasible, L, BIG))
+        l_max = jnp.max(jnp.where(feasible, L, -BIG))
+        e_min = jnp.min(jnp.where(feasible, Eg, BIG))
+        e_max = jnp.max(jnp.where(feasible, Eg, -BIG))
+        Ln = (L - l_min) / jnp.maximum(l_max - l_min, 1e-9)
+        En = (Eg - e_min) / jnp.maximum(e_max - e_min, 1e-9)
+        J = jnp.where(feasible, gamma * Ln + (1.0 - gamma) * En, BIG)
+
+        sel = jnp.argmin(J[0]).astype(jnp.int32)
+        pl.store(out_ref, (w, 0), sel)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (1, p), 1) == sel)
+        return q + onehot.astype(q.dtype)
+
+    q = jax.lax.fori_loop(0, n_window, body, q0_ref[...].astype(jnp.float32))
+    qf_ref[...] = q.astype(qf_ref.dtype)
+
+
+def moscore_pallas(Tt, Et, Mt, gs, q0, *, delta: float, gamma: float,
+                   interpret: bool = True):
+    """Tt/Et/Mt: (G, P') fp32 transposed profiles (P' multiple of 128);
+    gs: (W, 1) int32; q0: (1, P') fp32. Returns (choices (W,1) int32,
+    q_final (1, P') fp32)."""
+    g_dim, p = Tt.shape
+    w = gs.shape[0]
+    kernel = functools.partial(_moscore_kernel, delta=delta, gamma=gamma,
+                               n_window=w)
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec(Tt.shape, lambda: (0, 0)),
+                  pl.BlockSpec(Et.shape, lambda: (0, 0)),
+                  pl.BlockSpec(Mt.shape, lambda: (0, 0)),
+                  pl.BlockSpec(gs.shape, lambda: (0, 0)),
+                  pl.BlockSpec(q0.shape, lambda: (0, 0))],
+        out_specs=[pl.BlockSpec((w, 1), lambda: (0, 0)),
+                   pl.BlockSpec((1, p), lambda: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((w, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((1, p), jnp.float32)],
+        interpret=interpret,
+    )(Tt, Et, Mt, gs, q0)

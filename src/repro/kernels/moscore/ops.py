@@ -1,0 +1,38 @@
+"""Jitted wrapper: lane padding, transposition, unpadding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moscore.moscore import moscore_pallas
+
+BIG = 1e30
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "gamma", "interpret"))
+def moscore_route(T, E, mAP, gs, q0, *, delta: float = 20.0,
+                  gamma: float = 0.5, interpret: bool = True):
+    """Route a window of requests with queue feedback.
+
+    T/E/mAP: (P, G) profile tables; gs: (W,) int32 estimated groups;
+    q0: (P,) queue depths. Returns (choices (W,), q_final (P,))."""
+    P, G = T.shape
+    Pp = (P + 127) // 128 * 128
+    padP = Pp - P
+
+    def pad(x, fill):
+        return jnp.pad(x.astype(jnp.float32), ((0, padP), (0, 0)),
+                       constant_values=fill)
+
+    Tt = pad(T, BIG).T
+    Et = pad(E, BIG).T
+    Mt = pad(mAP, -BIG).T          # padded pairs can never be feasible
+    q0p = jnp.pad(q0.astype(jnp.float32), (0, padP))[None, :]
+    gsc = gs.astype(jnp.int32)[:, None]
+
+    choices, qf = moscore_pallas(Tt, Et, Mt, gsc, q0p, delta=delta,
+                                 gamma=gamma, interpret=interpret)
+    return choices[:, 0], qf[0, :P]

@@ -1,0 +1,15 @@
+"""Oracle: the core-library reference implementation of Algorithm 1 with
+queue feedback (lax.scan form) — the kernel must match it exactly."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.policies import mo_select_batch
+from repro.core.profiles import ProfileTable
+
+
+def ref_moscore_route(T, E, mAP, gs, q0, *, delta: float, gamma: float):
+    prof = ProfileTable(T, E, mAP)
+    ps, q = mo_select_batch(prof, gs, q0, delta=delta, gamma=gamma)
+    return ps.astype(jnp.int32), q

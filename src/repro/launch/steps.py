@@ -1,0 +1,454 @@
+"""Cell factory: (architecture x input-shape) -> step function + abstract
+inputs + logical shardings.
+
+Every one of the 40 assigned cells (and every reduced smoke variant) is
+built through :func:`build_cell`; the dry-run, the smoke tests, the roofline
+report and the serving executors all consume the same Cell object, so there
+is exactly one definition of what each cell computes.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.configs import (DiTConfig, LMConfig, MMDiTConfig, ShapeSpec,
+                                  TrainingConfig, VisionConfig)
+from repro.configs.base import Arch
+from repro.distributed import sharding as SH
+from repro.models import convnets, dit, mmdit
+from repro.models import transformer as T
+from repro.models.layers import sds
+from repro.training import train_loop as TL
+
+i32 = jnp.int32
+f32 = jnp.float32
+bf16 = jnp.bfloat16
+
+GiB = 1 << 30
+
+
+@dataclass
+class Cell:
+    arch: Arch
+    shape: ShapeSpec
+    config: Any                      # possibly reduced
+    step_fn: Callable                # positional args
+    abstract_args: tuple             # ShapeDtypeStruct pytrees, call order
+    arg_logical: tuple               # same structure, tuples of logical axes
+    donate: tuple[int, ...]          # donated arg indices
+    rules: SH.AxisRules
+    out_logical: Any = None
+    description: str = ""
+    # while-loop structure for the dry-run trip-count solve: a list of
+    # chains; each chain is [(tag, trip_count), ...] ordered outer->inner.
+    loops: tuple = ()
+
+    def in_shardings(self, mesh):
+        return tuple(
+            SH.shard_tree(mesh, self.rules, lg, ab)
+            for lg, ab in zip(self.arg_logical, self.abstract_args))
+
+
+# ------------------------------------------------------------- rules -------
+
+def select_rules(arch: Arch, shape: ShapeSpec, cfg) -> SH.AxisRules:
+    if shape.kind == "train":
+        # TP + FSDP is the production default for train cells. Two measured
+        # alternatives were REFUTED (EXPERIMENTS §Perf): pure FSDP without
+        # TP duplicates compute 16x on the idle model axis (it.2), and
+        # sequence-DP (context parallelism) trades TP activation
+        # all-reduces for K/V all-gathers, a loss for MHA archs (it.3).
+        return SH.DEFAULT_RULES
+    if arch.family == "lm":
+        # Serving: replicate params over data unless they don't fit a
+        # model-axis shard (e.g. arctic-480b -> keep FSDP sharding).
+        pbytes = cfg.n_params() * 2
+        base = SH.DEFAULT_RULES if pbytes / 16 > 8 * GiB else SH.SERVE_RULES
+        # Perf it.4: when kv_heads divide the model axis, shard the cache on
+        # HEADS (attention stays fully local, zero per-layer collectives);
+        # otherwise fall back to sequence sharding (distributed split-K).
+        kv_shardable = cfg.n_kv_heads % 16 == 0
+        if shape.kind == "decode" and shape.global_batch == 1:
+            # long-context decode: cache sharded across the whole mesh
+            if kv_shardable:
+                return base.override(batch=None, seq_kv=("data",),
+                                     kv_heads=("model",))
+            return base.override(seq_kv=("data", "model"), batch=None)
+        if kv_shardable:
+            return base.override(seq_kv=None, kv_heads=("model",))
+        return base.override(seq_kv=("model",))
+    if arch.family == "vision" and shape.global_batch == 1:
+        # latency cell: spatial partitioning over the data axis
+        return SH.SERVE_RULES.override(batch=None, spatial_h=("data",))
+    return SH.SERVE_RULES
+
+
+def _num_groups(mesh, batch: int) -> int:
+    """MoE dispatch groups = batch shards (so in-group sorts stay local)."""
+    if mesh is None:
+        return 1
+    sizes = SH.mesh_axis_sizes(mesh)
+    g = sizes.get("pod", 1) * sizes.get("data", 1)
+    while g > 1 and batch % g != 0:
+        g //= 2
+    return max(g, 1)
+
+
+# --------------------------------------------------------- optimizer axes --
+
+def _opt_logical(tcfg: TrainingConfig, p_logical, p_abstract):
+    is_tup = lambda x: isinstance(x, tuple)
+    if tcfg.optimizer == "adamw":
+        return {"m": p_logical, "v": p_logical}
+    if tcfg.optimizer == "sgdm":
+        return {"mom": p_logical}
+    if tcfg.optimizer == "adafactor":
+        def leaf(p, lg):
+            if p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128:
+                return {"vr": tuple(lg[:-1]), "vc": tuple(lg[:-2]) + (lg[-1],)}
+            return {"v": tuple(lg)}
+        return jax.tree.map(leaf, p_abstract, p_logical)
+    raise ValueError(tcfg.optimizer)
+
+
+def _state_logical(tcfg, p_logical, p_abstract, extra_logical=None):
+    st = {"params": p_logical,
+          "opt": _opt_logical(tcfg, p_logical, p_abstract),
+          "step": ()}
+    if extra_logical is not None:
+        st["extra"] = extra_logical
+    return st
+
+
+# ------------------------------------------------------------- LM cells ----
+
+def _lm_cell(arch: Arch, shape: ShapeSpec, cfg: LMConfig, mesh) -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    tcfg = arch.train
+    rules = select_rules(arch, shape, cfg)
+    groups = _num_groups(mesh, B)
+    p_abs, p_log = T.param_specs(cfg)
+
+    if shape.kind == "train":
+        def loss_fn(params, batch):
+            with SH.use_rules(rules):
+                return T.loss_and_metrics(
+                    cfg, params, batch, num_groups=groups, remat=tcfg.remat,
+                    label_smoothing=tcfg.label_smoothing)
+
+        step = TL.make_train_step(loss_fn, tcfg)
+        state_abs = TL.abstract_state(p_abs, tcfg)
+        batch_abs = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        state_log = _state_logical(tcfg, p_log, p_abs)
+        batch_log = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        chain = []
+        if tcfg.microbatch:
+            chain.append(("micro", tcfg.microbatch))
+        chain.append(("layers", cfg.n_layers))
+        return Cell(arch, shape, cfg, step, (state_abs, batch_abs),
+                    (state_log, batch_log), donate=(0,), rules=rules,
+                    loops=(tuple(chain),),
+                    description=f"train_step {B}x{S}")
+
+    cache_abs, cache_log = T.cache_specs(cfg, B, S)
+    if shape.kind == "prefill":
+        def step(params, tokens, caches):
+            with SH.use_rules(rules):
+                return T.prefill(cfg, params, tokens, caches,
+                                 num_groups=groups)
+
+        tok_abs = sds((B, S), i32)
+        chain = [("layers", cfg.n_layers)]
+        if S >= 4096:
+            chain.append(("attn", S // 512))
+        return Cell(arch, shape, cfg, step, (p_abs, tok_abs, cache_abs),
+                    (p_log, ("batch", "seq"), cache_log), donate=(2,),
+                    rules=rules, loops=(tuple(chain),),
+                    description=f"prefill {B}x{S}")
+
+    # decode: one token against a cache filled to S-1
+    def step(params, token, caches, pos):
+        with SH.use_rules(rules):
+            return T.decode_step(cfg, params, token, caches, pos,
+                                 num_groups=groups)
+
+    tok_abs = sds((B, 1), i32)
+    pos_abs = sds((), i32)
+    return Cell(arch, shape, cfg, step, (p_abs, tok_abs, cache_abs, pos_abs),
+                (p_log, ("batch", "seq"), cache_log, ()), donate=(2,),
+                rules=rules, loops=((("layers", cfg.n_layers),),),
+                description=f"decode_step B={B} kv={S}")
+
+
+# ------------------------------------------------------- diffusion cells ---
+
+def _dit_cell(arch: Arch, shape: ShapeSpec, cfg: DiTConfig, mesh) -> Cell:
+    B = shape.global_batch
+    lr = cfg.latent_res(shape.img_res)
+    C = cfg.in_channels
+    tcfg = arch.train
+    rules = select_rules(arch, shape, cfg)
+    p_abs, p_log = dit.param_specs(cfg)
+    lat = sds((B, lr, lr, C), bf16 if cfg.dtype == "bfloat16" else f32)
+
+    if shape.kind == "train":
+        def loss_fn(params, batch):
+            with SH.use_rules(rules):
+                return dit.diffusion_loss(cfg, params, batch)
+
+        step = TL.make_train_step(loss_fn, tcfg)
+        state_abs = TL.abstract_state(p_abs, tcfg)
+        batch_abs = {"latents": lat, "labels": sds((B,), i32),
+                     "t": sds((B,), i32), "noise": lat}
+        b_log = {"latents": ("batch", None, None, None), "labels": ("batch",),
+                 "t": ("batch",), "noise": ("batch", None, None, None)}
+        return Cell(arch, shape, cfg, step,
+                    (TL.abstract_state(p_abs, tcfg), batch_abs),
+                    (_state_logical(tcfg, p_log, p_abs), b_log), donate=(0,),
+                    rules=rules, loops=((("layers", cfg.n_layers),),),
+                    description=f"dit train {B}@{shape.img_res}")
+
+    def step(params, xt, t, t_prev, y):
+        with SH.use_rules(rules):
+            return dit.sample_step(cfg, params, xt, t, t_prev, y)
+
+    return Cell(arch, shape, cfg, step,
+                (p_abs, lat, sds((B,), i32), sds((B,), i32), sds((B,), i32)),
+                (p_log, ("batch", None, None, None), ("batch",), ("batch",),
+                 ("batch",)),
+                donate=(1,), rules=rules,
+                loops=((("layers", cfg.n_layers),),),
+                description=f"dit sample_step {B}@{shape.img_res} "
+                            f"(x{shape.steps} steps)")
+
+
+def _mmdit_cell(arch: Arch, shape: ShapeSpec, cfg: MMDiTConfig, mesh) -> Cell:
+    B = shape.global_batch
+    lr = cfg.latent_res(shape.img_res)
+    C = cfg.in_channels
+    tcfg = arch.train
+    rules = select_rules(arch, shape, cfg)
+    p_abs, p_log = mmdit.param_specs(cfg)
+    dt = bf16 if cfg.dtype == "bfloat16" else f32
+    lat = sds((B, lr, lr, C), dt)
+    txt = sds((B, cfg.txt_len, cfg.d_txt), dt)
+    pooled = sds((B, cfg.d_pooled), dt)
+    tl = {"latents/txt": None}
+    lat_log = ("batch", None, None, None)
+    txt_log = ("batch", "seq", None)
+
+    if shape.kind == "train":
+        def loss_fn(params, batch):
+            with SH.use_rules(rules):
+                return mmdit.rectified_flow_loss(cfg, params, batch)
+
+        step = TL.make_train_step(loss_fn, tcfg)
+        batch_abs = {"latents": lat, "txt": txt, "pooled": pooled,
+                     "t": sds((B,), f32), "noise": lat,
+                     "guidance": sds((B,), f32)}
+        b_log = {"latents": lat_log, "txt": txt_log, "pooled": ("batch", None),
+                 "t": ("batch",), "noise": lat_log, "guidance": ("batch",)}
+        return Cell(arch, shape, cfg, step,
+                    (TL.abstract_state(p_abs, tcfg), batch_abs),
+                    (_state_logical(tcfg, p_log, p_abs), b_log), donate=(0,),
+                    rules=rules,
+                    loops=((("double", cfg.n_double_blocks),),
+                           (("single", cfg.n_single_blocks),)),
+                    description=f"mmdit train {B}@{shape.img_res}")
+
+    def step(params, xt, txt_, pooled_, t, t_prev, guidance):
+        with SH.use_rules(rules):
+            return mmdit.sample_step(cfg, params, xt, txt_, pooled_, t,
+                                     t_prev, guidance)
+
+    return Cell(arch, shape, cfg, step,
+                (p_abs, lat, txt, pooled, sds((B,), f32), sds((B,), f32),
+                 sds((B,), f32)),
+                (p_log, lat_log, txt_log, ("batch", None), ("batch",),
+                 ("batch",), ("batch",)),
+                donate=(1,), rules=rules,
+                loops=((("double", cfg.n_double_blocks),),
+                       (("single", cfg.n_single_blocks),)),
+                description=f"mmdit sample_step {B}@{shape.img_res} "
+                            f"(x{shape.steps} steps)")
+
+
+# ---------------------------------------------------------- vision cells ---
+
+def _vision_cell(arch: Arch, shape: ShapeSpec, cfg: VisionConfig, mesh) -> Cell:
+    B, R = shape.global_batch, shape.img_res
+    tcfg = arch.train
+    rules = select_rules(arch, shape, cfg)
+    p_abs, p_log, st_abs = convnets.param_specs(cfg)
+    st_log = jax.tree.map(lambda _: ("norm",), st_abs)
+    img = sds((B, R, R, 3), f32)
+    img_log = ("batch", "spatial_h", "spatial_w", None)
+
+    if shape.kind == "train":
+        def loss_fn(params, batch, bn_state):
+            with SH.use_rules(rules):
+                loss, (metrics, new_state) = convnets.xent_loss(
+                    cfg, params, bn_state, batch, train=True)
+            return loss, (metrics, new_state)
+
+        step = TL.make_train_step(loss_fn, tcfg, has_extra_state=True)
+        state_abs = TL.abstract_state(p_abs, tcfg, extra=st_abs)
+        batch_abs = {"images": img, "labels": sds((B,), i32)}
+        state_log = _state_logical(tcfg, p_log, p_abs, extra_logical=st_log)
+        b_log = {"images": img_log, "labels": ("batch",)}
+        return Cell(arch, shape, cfg, step, (state_abs, batch_abs),
+                    (state_log, b_log), donate=(0,), rules=rules,
+                    description=f"{cfg.family} train {B}@{R}")
+
+    def step(params, state, images):
+        with SH.use_rules(rules):
+            logits, _ = convnets.forward(cfg, params, state, images,
+                                         train=False)
+        return logits
+
+    return Cell(arch, shape, cfg, step, (p_abs, st_abs, img),
+                (p_log, st_log, img_log), donate=(), rules=rules,
+                description=f"{cfg.family} serve {B}@{R}")
+
+
+# ------------------------------------------------------------- factory -----
+
+REDUCED_SHAPES = {
+    "lm": {
+        "train": ShapeSpec("train_smoke", "train", global_batch=4, seq_len=32),
+        "prefill": ShapeSpec("prefill_smoke", "prefill", global_batch=2,
+                             seq_len=32),
+        "decode": ShapeSpec("decode_smoke", "decode", global_batch=2,
+                            seq_len=64),
+    },
+    "diffusion": {
+        "train": ShapeSpec("train_smoke", "train", global_batch=2, img_res=64,
+                           steps=10),
+        "serve": ShapeSpec("serve_smoke", "serve", global_batch=2, img_res=64,
+                           steps=2),
+    },
+    "vision": {
+        "train": ShapeSpec("train_smoke", "train", global_batch=2, img_res=64),
+        "serve": ShapeSpec("serve_smoke", "serve", global_batch=2, img_res=64),
+    },
+}
+
+
+def build_cell(arch: Arch, shape: ShapeSpec | str, mesh=None,
+               reduced: bool = False) -> Cell:
+    if isinstance(shape, str):
+        shape = arch.shape(shape)
+    cfg = arch.config
+    if reduced:
+        cfg = arch.reduced
+        shape = REDUCED_SHAPES[arch.family][shape.kind]
+    if arch.family == "lm":
+        return _lm_cell(arch, shape, cfg, mesh)
+    if arch.family == "diffusion":
+        if isinstance(cfg, MMDiTConfig):
+            return _mmdit_cell(arch, shape, cfg, mesh)
+        return _dit_cell(arch, shape, cfg, mesh)
+    if arch.family == "vision":
+        return _vision_cell(arch, shape, cfg, mesh)
+    raise ValueError(arch.family)
+
+
+def init_concrete(cell: Cell, rng=None):
+    """Real (initialised) arguments for executing a cell — used by the smoke
+    tests and the examples. Only call on reduced cells (full configs are
+    dry-run only)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    arch, shape, cfg = cell.arch, cell.shape, cell.config
+    tcfg = arch.train
+    kr, kb = jax.random.split(rng)
+
+    if arch.family == "lm":
+        params = T.init_params(cfg, kr)
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            state = TL.init_state(params, tcfg)
+            batch = {"tokens": jax.random.randint(kb, (B, S), 0,
+                                                  cfg.vocab_size, i32),
+                     "labels": jax.random.randint(kb, (B, S), 0,
+                                                  cfg.vocab_size, i32)}
+            return (state, batch)
+        caches = T.init_cache(cfg, B, S,
+                              bf16 if cfg.dtype == "bfloat16" else f32)
+        if shape.kind == "prefill":
+            toks = jax.random.randint(kb, (B, S), 0, cfg.vocab_size, i32)
+            return (params, toks, caches)
+        tok = jax.random.randint(kb, (B, 1), 0, cfg.vocab_size, i32)
+        pos = jnp.asarray(S // 2, i32)
+        return (params, tok, caches, pos)
+
+    if arch.family == "diffusion":
+        B = shape.global_batch
+        lr = cfg.latent_res(shape.img_res)
+        dt = bf16 if cfg.dtype == "bfloat16" else f32
+        lat = jax.random.normal(kb, (B, lr, lr, cfg.in_channels), dt)
+        if isinstance(cfg, MMDiTConfig):
+            params = mmdit.init_params(cfg, kr)
+            txt = jax.random.normal(kb, (B, cfg.txt_len, cfg.d_txt), dt)
+            pooled = jax.random.normal(kb, (B, cfg.d_pooled), dt)
+            if shape.kind == "train":
+                state = TL.init_state(params, tcfg)
+                batch = {"latents": lat, "txt": txt, "pooled": pooled,
+                         "t": jax.random.uniform(kb, (B,), f32),
+                         "noise": jax.random.normal(kr, lat.shape, dt),
+                         "guidance": jnp.full((B,), 3.5, f32)}
+                return (state, batch)
+            t = jnp.full((B,), 0.9, f32)
+            return (params, lat, txt, pooled, t, t - 0.1,
+                    jnp.full((B,), 3.5, f32))
+        params = dit.init_params(cfg, kr)
+        y = jax.random.randint(kb, (B,), 0, cfg.n_classes, i32)
+        if shape.kind == "train":
+            state = TL.init_state(params, tcfg)
+            batch = {"latents": lat, "labels": y,
+                     "t": jax.random.randint(kr, (B,), 0, 1000, i32),
+                     "noise": jax.random.normal(kr, lat.shape, dt)}
+            return (state, batch)
+        t = jnp.full((B,), 500, i32)
+        return (params, lat, t, t - 10, y)
+
+    if arch.family == "vision":
+        params, st = convnets.init_params(cfg, kr)
+        B, R = shape.global_batch, shape.img_res
+        img = jax.random.normal(kb, (B, R, R, 3), f32)
+        if shape.kind == "train":
+            state = TL.init_state(params, tcfg, extra=st)
+            return (state, {"images": img,
+                            "labels": jax.random.randint(
+                                kr, (B,), 0, cfg.n_classes, i32)})
+        return (params, st, img)
+    raise ValueError(arch.family)
+
+
+def concrete_inputs(cell: Cell, rng=None):
+    """Materialise real (small!) inputs for smoke execution of a reduced
+    cell: zeros for floats, uniform ints for token/label fields."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def mk(path, s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = 2
+            p = path.lower()
+            if "token" in p or "label" in p:
+                hi = 8
+            if p.endswith("t"):
+                hi = 100
+            return jax.random.randint(jax.random.fold_in(rng, hash(path) % 2**31),
+                                      s.shape, 0, hi, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    out = []
+    for i, a in enumerate(cell.abstract_args):
+        from repro.common.treeutil import tree_map_with_path
+        out.append(tree_map_with_path(lambda p, s: mk(f"{i}/{p}", s), a))
+    return tuple(out)

@@ -1,0 +1,120 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b --reduced \
+      --steps 200 --ckpt /tmp/ckpt --resume auto
+
+Full (non-reduced) configs target real TPU slices; this container runs the
+reduced configs end-to-end on CPU, exercising the identical code path:
+cell build -> sharded state -> jitted train step -> async checkpoints ->
+crash-resume. ``--fail-at-step`` injects a hard failure to demonstrate
+restart recovery (used by tests/test_fault_tolerance.py)."""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.common.logging_util import log
+from repro.data.images import synthetic_diffusion_batch, synthetic_image_batch
+from repro.data.tokens import synthetic_lm_batch
+from repro.launch import steps as S
+from repro.launch.mesh import make_local_mesh
+
+
+def make_batch_fn(cell):
+    arch, cfg, shape = cell.arch, cell.config, cell.shape
+
+    def fn(step: int):
+        rng = jax.random.fold_in(jax.random.PRNGKey(17), step)
+        if arch.family == "lm":
+            return synthetic_lm_batch(rng, shape.global_batch, shape.seq_len,
+                                      cfg.vocab_size)
+        if arch.family == "vision":
+            return synthetic_image_batch(rng, shape.global_batch,
+                                         shape.img_res, cfg.n_classes)
+        lr = cfg.latent_res(shape.img_res)
+        from repro.common.configs import MMDiTConfig
+        mm = cfg if isinstance(cfg, MMDiTConfig) else None
+        return synthetic_diffusion_batch(
+            rng, shape.global_batch, lr, cfg.in_channels,
+            getattr(cfg, "n_classes", 1000), mm)
+
+    return fn
+
+
+def train(arch_id: str, *, reduced: bool = True, steps: int = 100,
+          ckpt_dir: str | None = None, resume: str = "auto",
+          ckpt_every: int = 50, fail_at_step: int = -1, log_every: int = 10):
+    arch = C.get(arch_id)
+    if reduced:
+        # smoke-scale models learn at smoke-scale hyperparameters
+        import dataclasses
+        arch = dataclasses.replace(
+            arch, train=dataclasses.replace(
+                arch.train, lr=min(arch.train.lr * 10, 1e-2),
+                warmup_steps=10, microbatch=0))
+    shape = next(s for s in arch.shapes if s.kind == "train")
+    cell = S.build_cell(arch, shape, mesh=None, reduced=reduced)
+    args = S.init_concrete(cell, jax.random.PRNGKey(0))
+    state = args[0]
+
+    start = 0
+    ck = None
+    if ckpt_dir:
+        ck = AsyncCheckpointer(ckpt_dir)
+        if resume == "auto":
+            last = latest_step(ckpt_dir)
+            if last is not None:
+                state = restore_checkpoint(ckpt_dir, last, state)
+                state = jax.tree.map(jnp.asarray, state)
+                start = last
+                log("resumed", step=last)
+
+    step_fn = jax.jit(cell.step_fn, donate_argnums=(0,))
+    batch_fn = make_batch_fn(cell)
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        if step == fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        state, metrics = step_fn(state, batch_fn(step))
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            log("train", arch=arch_id, step=step, loss=round(loss, 4),
+                sps=round((step - start + 1) / (time.time() - t0), 2))
+        if ck and (step + 1) % ckpt_every == 0:
+            ck.save(step + 1, state)       # name = completed steps
+            log("checkpoint", step=step + 1)
+    if ck:
+        ck.save(steps, state)
+        ck.close()
+    return state, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at-step", type=int, default=-1)
+    a = ap.parse_args()
+    _, losses = train(a.arch, reduced=a.reduced, steps=a.steps,
+                      ckpt_dir=a.ckpt, resume=a.resume,
+                      ckpt_every=a.ckpt_every, fail_at_step=a.fail_at_step)
+    log("done", first_loss=losses[0] if losses else None,
+        last_loss=losses[-1] if losses else None)
+
+
+if __name__ == "__main__":
+    main()

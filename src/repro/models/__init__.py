@@ -1,0 +1,3 @@
+"""Model zoo: LM transformers (dense + MoE), diffusion (DiT / MMDiT),
+and convolutional vision backbones, all as pure-functional JAX modules with
+logical-axis sharding annotations."""

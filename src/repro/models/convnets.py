@@ -1,0 +1,322 @@
+"""Convolutional vision backbones: ResNet-50/152, ConvNeXt-B, EfficientNet-B7.
+
+A single *plan* (list of typed block specs, derived from the config) drives
+both parameter-shape generation and the forward pass, so the two can never
+diverge. Layout NHWC; BatchNorm runs in sync-BN semantics under SPMD (batch
+statistics reduce over the sharded batch axis automatically).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.configs import VisionConfig
+from repro.common.precision import parse_dtype
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+
+f32 = jnp.float32
+
+
+# ------------------------------------------------------------------ plan ---
+
+def _round_filters(c: float, mult: float, divisor: int = 8) -> int:
+    c *= mult
+    new = max(divisor, int(c + divisor / 2) // divisor * divisor)
+    if new < 0.9 * c:
+        new += divisor
+    return int(new)
+
+
+def _round_repeats(r: int, mult: float) -> int:
+    return int(math.ceil(r * mult))
+
+
+_EFFNET_B0 = [  # (expand, channels, repeats, stride, kernel)
+    (1, 16, 1, 1, 3), (6, 24, 2, 2, 3), (6, 40, 2, 2, 5), (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5), (6, 192, 4, 2, 5), (6, 320, 1, 1, 3),
+]
+
+
+def plan(cfg: VisionConfig) -> list[dict[str, Any]]:
+    p: list[dict[str, Any]] = []
+    if cfg.family == "resnet":
+        w = cfg.width
+        p.append({"t": "conv_bn", "k": 7, "s": 2, "cin": 3, "cout": w, "act": "relu"})
+        p.append({"t": "maxpool", "k": 3, "s": 2})
+        cin = w
+        for si, depth in enumerate(cfg.depths):
+            mid = w * (2 ** si)
+            cout = mid * cfg.bottleneck
+            for bi in range(depth):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                p.append({"t": "resnet_block", "cin": cin, "mid": mid,
+                          "cout": cout, "s": stride})
+                cin = cout
+        p.append({"t": "head", "cin": cin, "classes": cfg.n_classes})
+    elif cfg.family == "convnext":
+        dims = cfg.dims
+        p.append({"t": "convnext_stem", "cin": 3, "cout": dims[0]})
+        for si, depth in enumerate(cfg.depths):
+            if si > 0:
+                p.append({"t": "convnext_down", "cin": dims[si - 1],
+                          "cout": dims[si]})
+            for _ in range(depth):
+                p.append({"t": "convnext_block", "dim": dims[si]})
+        p.append({"t": "head", "cin": dims[-1], "classes": cfg.n_classes,
+                  "pre_ln": True})
+    elif cfg.family == "efficientnet":
+        stem = _round_filters(32, cfg.width_mult)
+        p.append({"t": "conv_bn", "k": 3, "s": 2, "cin": 3, "cout": stem,
+                  "act": "silu"})
+        cin = stem
+        for (e, c, r, s, k) in _EFFNET_B0:
+            cout = _round_filters(c, cfg.width_mult)
+            for bi in range(_round_repeats(r, cfg.depth_mult)):
+                stride = s if bi == 0 else 1
+                p.append({"t": "mbconv", "cin": cin, "cout": cout,
+                          "e": e, "k": k, "s": stride})
+                cin = cout
+        head_c = _round_filters(1280, cfg.width_mult)
+        p.append({"t": "conv_bn", "k": 1, "s": 1, "cin": cin, "cout": head_c,
+                  "act": "silu"})
+        p.append({"t": "head", "cin": head_c, "classes": cfg.n_classes})
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ------------------------------------------------------------ parameters ---
+
+def _conv_spec(k, cin, cout, dt, depthwise=False):
+    if depthwise:
+        return L.sds((k, k, 1, cout), dt), (None, None, None, "channels")
+    return L.sds((k, k, cin, cout), dt), (None, None, "channels_in", "channels")
+
+
+def _bn_spec(c):
+    return ({"scale": L.sds((c,), f32), "bias": L.sds((c,), f32)},
+            {"scale": ("norm",), "bias": ("norm",)},
+            {"mean": L.sds((c,), f32), "var": L.sds((c,), f32)})
+
+
+def param_specs(cfg: VisionConfig):
+    dt = parse_dtype(cfg.dtype)
+    shapes: dict[str, Any] = {}
+    logical: dict[str, Any] = {}
+    state: dict[str, Any] = {}
+
+    def add_bn(name, c):
+        s, lg, st = _bn_spec(c)
+        shapes[name], logical[name], state[name] = s, lg, st
+
+    for i, b in enumerate(plan(cfg)):
+        n = f"b{i}"
+        t = b["t"]
+        if t == "conv_bn":
+            shapes[n + "/w"], logical[n + "/w"] = _conv_spec(
+                b["k"], b["cin"], b["cout"], dt)
+            add_bn(n + "/bn", b["cout"])
+        elif t == "resnet_block":
+            for j, (k, ci, co) in enumerate(
+                    [(1, b["cin"], b["mid"]), (3, b["mid"], b["mid"]),
+                     (1, b["mid"], b["cout"])]):
+                shapes[f"{n}/w{j}"], logical[f"{n}/w{j}"] = _conv_spec(k, ci, co, dt)
+                add_bn(f"{n}/bn{j}", co)
+            if b["cin"] != b["cout"] or b["s"] > 1:
+                shapes[n + "/wp"], logical[n + "/wp"] = _conv_spec(
+                    1, b["cin"], b["cout"], dt)
+                add_bn(n + "/bnp", b["cout"])
+        elif t == "convnext_stem":
+            shapes[n + "/w"], logical[n + "/w"] = _conv_spec(4, 3, b["cout"], dt)
+            shapes[n + "/ln"] = {"scale": L.sds((b["cout"],), f32),
+                                 "bias": L.sds((b["cout"],), f32)}
+            logical[n + "/ln"] = {"scale": ("norm",), "bias": ("norm",)}
+        elif t == "convnext_down":
+            shapes[n + "/ln"] = {"scale": L.sds((b["cin"],), f32),
+                                 "bias": L.sds((b["cin"],), f32)}
+            logical[n + "/ln"] = {"scale": ("norm",), "bias": ("norm",)}
+            shapes[n + "/w"], logical[n + "/w"] = _conv_spec(
+                2, b["cin"], b["cout"], dt)
+        elif t == "convnext_block":
+            d = b["dim"]
+            shapes[n + "/dw"], logical[n + "/dw"] = _conv_spec(7, d, d, dt, True)
+            shapes[n + "/ln"] = {"scale": L.sds((d,), f32),
+                                 "bias": L.sds((d,), f32)}
+            logical[n + "/ln"] = {"scale": ("norm",), "bias": ("norm",)}
+            shapes[n + "/pw1"] = L.sds((d, 4 * d), dt)
+            logical[n + "/pw1"] = ("channels_in", "channels")
+            shapes[n + "/pw2"] = L.sds((4 * d, d), dt)
+            logical[n + "/pw2"] = ("channels", "channels_in")
+            shapes[n + "/gamma"] = L.sds((d,), f32)
+            logical[n + "/gamma"] = ("norm",)
+        elif t == "mbconv":
+            cin, cout, e, k = b["cin"], b["cout"], b["e"], b["k"]
+            mid = cin * e
+            if e != 1:
+                shapes[n + "/we"], logical[n + "/we"] = _conv_spec(1, cin, mid, dt)
+                add_bn(n + "/bne", mid)
+            shapes[n + "/wd"], logical[n + "/wd"] = _conv_spec(k, mid, mid, dt, True)
+            add_bn(n + "/bnd", mid)
+            se = max(1, cin // 4)
+            shapes[n + "/se1"], logical[n + "/se1"] = _conv_spec(1, mid, se, dt)
+            shapes[n + "/se1b"] = L.sds((se,), f32)
+            logical[n + "/se1b"] = ("norm",)
+            shapes[n + "/se2"], logical[n + "/se2"] = _conv_spec(1, se, mid, dt)
+            shapes[n + "/se2b"] = L.sds((mid,), f32)
+            logical[n + "/se2b"] = ("norm",)
+            shapes[n + "/wp"], logical[n + "/wp"] = _conv_spec(1, mid, cout, dt)
+            add_bn(n + "/bnp", cout)
+        elif t == "head":
+            if b.get("pre_ln"):
+                shapes[n + "/ln"] = {"scale": L.sds((b["cin"],), f32),
+                                     "bias": L.sds((b["cin"],), f32)}
+                logical[n + "/ln"] = {"scale": ("norm",), "bias": ("norm",)}
+            shapes[n + "/w"] = L.sds((b["cin"], b["classes"]), dt)
+            logical[n + "/w"] = ("channels_in", "classes")
+            shapes[n + "/b"] = L.sds((b["classes"],), f32)
+            logical[n + "/b"] = ("norm",)
+        elif t == "maxpool":
+            pass
+        else:
+            raise ValueError(t)
+    return shapes, logical, state
+
+
+def init_params(cfg: VisionConfig, rng):
+    shapes, _, state = param_specs(cfg)
+    params = L.init_tree(rng, shapes)
+    # LayerScale gamma starts at 1e-6 (not zero); BN vars at 1.
+    for k in params:
+        if k.endswith("/gamma"):
+            params[k] = jnp.full(params[k].shape, 1e-6, params[k].dtype)
+    st = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), state)
+    for k in st:
+        st[k]["var"] = jnp.ones_like(st[k]["var"])
+    return params, st
+
+
+def count_params(cfg: VisionConfig) -> int:
+    shapes, _, _ = param_specs(cfg)
+    return sum(int(jnp.prod(jnp.array(s.shape))) for s in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------- forward --
+
+def _conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _bn(x, p, st, train: bool, momentum=0.9):
+    """Returns (y, new_state). Batch stats reduce over (B,H,W) — sync-BN
+    under SPMD since the batch axis is sharded."""
+    xf = x.astype(f32)
+    if train:
+        mean = jnp.mean(xf, axis=(0, 1, 2))
+        var = jnp.var(xf, axis=(0, 1, 2))
+        new = {"mean": momentum * st["mean"] + (1 - momentum) * mean,
+               "var": momentum * st["var"] + (1 - momentum) * var}
+    else:
+        mean, var = st["mean"], st["var"]
+        new = st
+    y = (xf - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y * (1.0 + p["scale"]) + p["bias"]
+    return y.astype(x.dtype), new
+
+
+def _ln(x, p):
+    return L.layernorm(x, p["scale"], p["bias"])
+
+
+_ACT = {"relu": jax.nn.relu, "silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def forward(cfg: VisionConfig, params, state, images, train: bool = False):
+    """images: (B,H,W,3) -> (logits (B,classes), new_state)."""
+    x = images.astype(parse_dtype(cfg.dtype))
+    new_state = dict(state)
+
+    def bn(name, x):
+        y, ns = _bn(x, params[name], state[name], train)
+        new_state[name] = ns
+        return y
+
+    for i, b in enumerate(plan(cfg)):
+        n = f"b{i}"
+        t = b["t"]
+        if t == "conv_bn":
+            x = bn(n + "/bn", _conv(x, params[n + "/w"], b["s"]))
+            x = _ACT[b["act"]](x)
+        elif t == "maxpool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, b["k"], b["k"], 1),
+                (1, b["s"], b["s"], 1), "SAME")
+        elif t == "resnet_block":
+            r = x
+            y = jax.nn.relu(bn(n + "/bn0", _conv(x, params[n + "/w0"], 1)))
+            y = jax.nn.relu(bn(n + "/bn1", _conv(y, params[n + "/w1"], b["s"])))
+            y = bn(n + "/bn2", _conv(y, params[n + "/w2"], 1))
+            if n + "/wp" in params:
+                r = bn(n + "/bnp", _conv(r, params[n + "/wp"], b["s"]))
+            x = jax.nn.relu(y + r)
+            x = constraint(x, ("batch", None, None, None))
+        elif t == "convnext_stem":
+            x = jax.lax.conv_general_dilated(
+                x, params[n + "/w"].astype(x.dtype), (4, 4), "VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = _ln(x, params[n + "/ln"])
+        elif t == "convnext_down":
+            x = _ln(x, params[n + "/ln"])
+            x = jax.lax.conv_general_dilated(
+                x, params[n + "/w"].astype(x.dtype), (2, 2), "VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        elif t == "convnext_block":
+            r = x
+            x = _conv(x, params[n + "/dw"], 1, groups=b["dim"])
+            x = _ln(x, params[n + "/ln"])
+            x = jax.nn.gelu(x @ params[n + "/pw1"].astype(x.dtype))
+            x = x @ params[n + "/pw2"].astype(x.dtype)
+            x = r + x * params[n + "/gamma"].astype(x.dtype)
+            x = constraint(x, ("batch", None, None, None))
+        elif t == "mbconv":
+            r = x
+            mid_in = x
+            if n + "/we" in params:
+                mid_in = jax.nn.silu(bn(n + "/bne", _conv(x, params[n + "/we"])))
+            y = jax.nn.silu(bn(n + "/bnd", _conv(
+                mid_in, params[n + "/wd"], b["s"], groups=mid_in.shape[-1])))
+            # squeeze-excite
+            se = jnp.mean(y.astype(f32), axis=(1, 2), keepdims=True).astype(y.dtype)
+            se = jax.nn.silu(_conv(se, params[n + "/se1"])
+                             + params[n + "/se1b"].astype(y.dtype))
+            se = jax.nn.sigmoid(_conv(se, params[n + "/se2"])
+                                + params[n + "/se2b"].astype(y.dtype))
+            y = y * se
+            y = bn(n + "/bnp", _conv(y, params[n + "/wp"]))
+            if b["s"] == 1 and b["cin"] == b["cout"]:
+                y = y + r
+            x = constraint(y, ("batch", None, None, None))
+        elif t == "head":
+            x = jnp.mean(x.astype(f32), axis=(1, 2))
+            if b.get("pre_ln"):
+                x = L.layernorm(x, params[n + "/ln"]["scale"],
+                                params[n + "/ln"]["bias"])
+            x = x.astype(params[n + "/w"].dtype)
+            x = x @ params[n + "/w"] + params[n + "/b"].astype(x.dtype)
+    return x.astype(f32), new_state
+
+
+def xent_loss(cfg: VisionConfig, params, state, batch, train=True):
+    logits, new_state = forward(cfg, params, state, batch["images"], train)
+    lp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(lp, batch["labels"][:, None], axis=-1)
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(f32))
+    return loss, ({"xent": loss, "acc": acc}, new_state)

@@ -1,0 +1,97 @@
+"""Single-shot detection heads for the paper's own edge fleet.
+
+The paper's device-model pairs run SSD v1 / SSD Lite / YOLOv8-{n,s,m} on
+SBCs. For the end-to-end serving example we implement a family of small
+single-shot detectors ("ssd_lite", "ssd_v1", "yolo_n/s/m"-class capacity
+tiers) over the convnet substrate: a width/depth-scaled conv backbone plus a
+dense per-cell prediction head (objectness, 4 box coords, class logits).
+
+These are the *workload* models of the reproduction (they generate real
+detections whose object counts feed the estimator); the assigned-architecture
+backbones are served by the same machinery through `repro.serving`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+f32 = jnp.float32
+
+
+# capacity tiers: (widths per stage, blocks per stage, grid)
+TIERS = {
+    "ssd_v1":   ((16, 32, 64), (1, 1, 1), 8),
+    "ssd_lite": ((12, 24, 48), (1, 1, 1), 8),
+    "effdet0":  ((16, 32, 64), (1, 2, 2), 8),
+    "yolo_n":   ((16, 32, 64), (1, 2, 2), 8),
+    "yolo_s":   ((24, 48, 96), (2, 2, 3), 8),
+    "yolo_m":   ((32, 64, 128), (2, 4, 4), 8),
+}
+
+
+def param_specs(tier: str, n_classes: int = 4, img_res: int = 64,
+                dtype=jnp.float32):
+    widths, depths, grid = TIERS[tier]
+    shapes: dict[str, Any] = {}
+    cin = 3
+    for si, (w, d) in enumerate(zip(widths, depths)):
+        for bi in range(d):
+            shapes[f"s{si}b{bi}/w"] = L.sds((3, 3, cin, w), dtype)
+            shapes[f"s{si}b{bi}/b"] = L.sds((w,), f32)
+            cin = w
+    out_dim = 1 + 4 + n_classes           # obj, box, classes
+    shapes["head/w"] = L.sds((1, 1, cin, out_dim), dtype)
+    shapes["head/b"] = L.sds((out_dim,), f32)
+    return shapes
+
+
+def init_params(tier: str, rng, **kw):
+    return L.init_tree(rng, param_specs(tier, **kw))
+
+
+def forward(tier: str, params, images):
+    """images (B,H,W,3) -> per-cell predictions (B,G,G,1+4+C)."""
+    widths, depths, grid = TIERS[tier]
+    x = images
+    for si, (w, d) in enumerate(zip(widths, depths)):
+        for bi in range(d):
+            stride = 2 if bi == 0 else 1
+            x = jax.lax.conv_general_dilated(
+                x, params[f"s{si}b{bi}/w"].astype(x.dtype), (stride, stride),
+                "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + params[f"s{si}b{bi}/b"].astype(x.dtype))
+    # pool to fixed grid
+    gh = max(1, x.shape[1] // grid)
+    x = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, gh, gh, 1), (1, gh, gh, 1), "VALID") / (gh * gh)
+    x = jax.lax.conv_general_dilated(
+        x, params["head/w"].astype(x.dtype), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return x + params["head/b"].astype(x.dtype)
+
+
+def count_objects(preds, threshold: float = 0.0) -> jax.Array:
+    """Detected object count per image = number of cells with objectness
+    above threshold (pre-sigmoid logits)."""
+    obj = preds[..., 0]
+    return jnp.sum((obj > threshold).astype(jnp.int32), axis=(-2, -1))
+
+
+def detection_loss(tier: str, params, batch):
+    """batch: images, obj_grid (B,G,G) {0,1}, cls_grid (B,G,G) int."""
+    preds = forward(tier, params, batch["images"])
+    obj_logit = preds[..., 0]
+    obj = batch["obj_grid"].astype(f32)
+    obj_loss = jnp.mean(
+        jnp.maximum(obj_logit, 0) - obj_logit * obj
+        + jnp.log1p(jnp.exp(-jnp.abs(obj_logit))))
+    cls_lp = jax.nn.log_softmax(preds[..., 5:].astype(f32))
+    cls_nll = -jnp.take_along_axis(cls_lp, batch["cls_grid"][..., None], -1)[..., 0]
+    cls_loss = jnp.sum(cls_nll * obj) / (jnp.sum(obj) + 1e-6)
+    return obj_loss + cls_loss, {"obj": obj_loss, "cls": cls_loss}

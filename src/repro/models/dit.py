@@ -1,0 +1,176 @@
+"""DiT (Diffusion Transformer, adaLN-zero) — arXiv:2212.09748.
+
+Operates on VAE latents (the VAE is a stubbed frontend: ``input_specs``
+provides latents directly, as is standard for systems benchmarking of DiT).
+Scan-over-layers with stacked block weights.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.configs import DiTConfig
+from repro.common import flags
+from repro.common.precision import parse_dtype
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+
+f32 = jnp.float32
+
+
+def timestep_embedding(t, dim: int, max_period: float = 10_000.0):
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=f32) / half)
+    args = t.astype(f32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def param_specs(cfg: DiTConfig):
+    dt = parse_dtype(cfg.dtype)
+    Ln, D = cfg.n_layers, cfg.d_model
+    pdim = cfg.in_channels * cfg.patch ** 2
+    shapes: dict[str, Any] = {
+        "patch_w": L.sds((pdim, D), dt),
+        "patch_b": L.sds((D,), f32),
+        "t_mlp1": L.sds((256, D), dt),
+        "t_mlp2": L.sds((D, D), dt),
+        "y_embed": L.sds((cfg.n_classes + 1, D), dt),
+        "blocks": {
+            "adaln": L.sds((Ln, D, 6 * D), dt),
+            "adaln_b": L.sds((Ln, 6 * D), f32),
+            "wqkv": L.sds((Ln, D, 3 * D), dt),
+            "wo": L.sds((Ln, D, D), dt),
+            "mlp_in": L.sds((Ln, D, 4 * D), dt),
+            "mlp_out": L.sds((Ln, 4 * D, D), dt),
+        },
+        "final_adaln": L.sds((D, 2 * D), dt),
+        "final_w": L.sds((D, pdim * 2), dt),
+    }
+    logical: dict[str, Any] = {
+        "patch_w": (None, "embed"),
+        "patch_b": ("norm",),
+        "t_mlp1": (None, "embed"),
+        "t_mlp2": ("embed_nofsdp", "embed"),
+        "y_embed": ("classes", "embed"),
+        "blocks": {
+            "adaln": ("layer", "embed", "mlp"),
+            "adaln_b": ("layer", "mlp"),
+            "wqkv": ("layer", "embed", "heads"),
+            "wo": ("layer", "heads", "embed"),
+            "mlp_in": ("layer", "embed", "mlp"),
+            "mlp_out": ("layer", "mlp", "embed"),
+        },
+        "final_adaln": ("embed_nofsdp", "mlp"),
+        "final_w": ("embed", None),
+    }
+    return shapes, logical
+
+
+def init_params(cfg: DiTConfig, rng):
+    return L.init_tree(rng, param_specs(cfg)[0])
+
+
+def patchify(x, patch: int):
+    """(B,H,W,C) -> (B, N, patch*patch*C)."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // patch, patch, w // patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // patch) * (w // patch), patch * patch * c)
+
+
+def unpatchify(x, patch: int, res: int, c: int):
+    b, n, _ = x.shape
+    g = res // patch
+    x = x.reshape(b, g, g, patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, res, res, c)
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None]) + shift[:, None]
+
+
+def forward(cfg: DiTConfig, params, latents, t, y):
+    """latents: (B,Hl,Wl,C) noisy latents; t: (B,) timesteps; y: (B,) labels.
+    Returns (B,Hl,Wl,2C) [noise prediction, sigma]."""
+    b, hl, wl, c = latents.shape
+    x = patchify(latents.astype(params["patch_w"].dtype), cfg.patch)
+    x = x @ params["patch_w"] + params["patch_b"].astype(x.dtype)
+    n, d = x.shape[1], x.shape[2]
+    # fixed sincos position embedding
+    pos = jnp.arange(n, dtype=f32)
+    pe = timestep_embedding(pos, d)[None].astype(x.dtype)
+    x = x + pe
+    x = constraint(x, ("batch", "seq", None))
+
+    temb = timestep_embedding(t, 256) @ params["t_mlp1"].astype(f32)
+    temb = jax.nn.silu(temb) @ params["t_mlp2"].astype(f32)
+    cond = temb + params["y_embed"][y].astype(f32)          # (B,D)
+    cond_act = jax.nn.silu(cond)
+
+    nh = cfg.n_heads
+    hd = d // nh
+
+    def block(x, w):
+        mod = (cond_act @ w["adaln"].astype(f32) + w["adaln_b"]).astype(x.dtype)
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        xn = L.layernorm(x, jnp.zeros((d,), f32))
+        xn = _modulate(xn, sh1, sc1)
+        qkv = xn @ w["wqkv"]
+        q, k, v = jnp.split(qkv.reshape(b, n, 3 * nh, hd), 3, axis=2)
+        o = L.mha(q, k, v, causal=False)
+        x = x + g1[:, None] * (o.reshape(b, n, d) @ w["wo"])
+        xn = L.layernorm(x, jnp.zeros((d,), f32))
+        xn = _modulate(xn, sh2, sc2)
+        h = jax.nn.gelu(xn @ w["mlp_in"])
+        x = x + g2[:, None] * (h @ w["mlp_out"])
+        x = constraint(x, ("batch", "rep", "rep"))
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["blocks"],
+                        unroll=flags.layer_unroll("layers"))
+
+    mod = (cond_act @ params["final_adaln"].astype(f32)).astype(x.dtype)
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    x = _modulate(L.layernorm(x, jnp.zeros((d,), f32)), sh, sc)
+    out = x @ params["final_w"]
+    return unpatchify(out, cfg.patch, hl, 2 * c)
+
+
+# ---------------------------------------------------------------- losses ---
+
+def ddpm_alphas(T: int = 1000):
+    """Cosine schedule (Nichol & Dhariwal)."""
+    s = 0.008
+    ts = jnp.arange(T + 1, dtype=f32) / T
+    f = jnp.cos((ts + s) / (1 + s) * math.pi / 2) ** 2
+    abar = f / f[0]
+    return abar  # (T+1,)
+
+
+def diffusion_loss(cfg: DiTConfig, params, batch):
+    """batch: latents (B,H,W,C) clean, y (B,), t (B,) int, noise (B,H,W,C)."""
+    lat, y, t, eps = batch["latents"], batch["labels"], batch["t"], batch["noise"]
+    abar = ddpm_alphas()[t][:, None, None, None]
+    xt = jnp.sqrt(abar) * lat.astype(f32) + jnp.sqrt(1 - abar) * eps.astype(f32)
+    pred = forward(cfg, params, xt.astype(lat.dtype), t, y).astype(f32)
+    eps_pred = pred[..., : lat.shape[-1]]
+    loss = jnp.mean(jnp.square(eps_pred - eps.astype(f32)))
+    return loss, {"mse": loss}
+
+
+def sample_step(cfg: DiTConfig, params, xt, t, t_prev, y):
+    """One DDIM step (eta=0). All shapes static; the sampler loop is
+    ``steps`` sequential calls (this is what the gen_* cells lower)."""
+    abar = ddpm_alphas()
+    a_t = abar[t][:, None, None, None]
+    a_p = abar[t_prev][:, None, None, None]
+    pred = forward(cfg, params, xt, t, y).astype(f32)
+    eps = pred[..., : xt.shape[-1]]
+    x0 = (xt.astype(f32) - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+    x_prev = jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+    return x_prev.astype(xt.dtype)

@@ -1,0 +1,226 @@
+"""Shared neural-net layers (pure functions over param dicts).
+
+Conventions:
+  * every ``*_specs(cfg)`` returns ``(shapes, logical)`` trees with identical
+    structure: ``shapes`` of ``jax.ShapeDtypeStruct``, ``logical`` of tuples of
+    logical axis names understood by ``repro.distributed.sharding``;
+  * compute follows the precision policy: bf16 matmuls, fp32 softmax / norms.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constraint
+from repro.common import flags
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(f32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(f32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias=None, eps: float = 1e-5):
+    xf = x.astype(f32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * (1.0 + scale.astype(f32))
+    if bias is not None:
+        out = out + bias.astype(f32)
+    return out.astype(x.dtype)
+
+
+def norm_apply(kind: str, x, scale, bias=None):
+    if kind == "rmsnorm":
+        return rmsnorm(x, scale)
+    return layernorm(x, scale, bias)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, n_heads, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))               # (hd/2,)
+    ang = positions[..., None].astype(f32) * freqs           # (...,S,hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ---
+
+def _causal_mask(sq: int, sk: int, q_offset) -> jax.Array:
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    return qpos >= kpos
+
+
+def mha(q, k, v, *, causal: bool, q_offset=0, kv_len=None):
+    """Grouped-query attention, fp32 softmax.
+
+    q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd). ``kv_len`` masks a partially-filled
+    cache. Returns (B,Sq,H,hd).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(f32) * scale
+    if causal:
+        m = _causal_mask(sq, sk, q_offset)
+        s = jnp.where(m[None, None, None], s, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < jnp.reshape(kv_len, (-1, 1))
+        s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(b, sq, h, hd)
+
+
+def chunked_mha(q, k, v, *, causal: bool, chunk: int = 512, q_offset=0):
+    """Streaming-softmax attention: scan over query chunks, never
+    materialising the full (Sq,Sk) score matrix. Used for long-prefill cells
+    in the XLA path (the Pallas flash kernel covers real-TPU execution).
+    ``q_offset`` supports prefill-into-cache (queries live at positions
+    q_offset..q_offset+Sq within the K/V sequence)."""
+    b, sq, h, hd = q.shape
+    if sq <= chunk:
+        return mha(q, k, v, causal=causal, q_offset=q_offset)
+    n = sq // chunk
+    assert sq % chunk == 0, (sq, chunk)
+    qc = q.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    offs = jnp.arange(n) * chunk + q_offset
+
+    def step(_, qo):
+        qi, off = qo
+        return None, mha(qi, k, v, causal=causal, q_offset=off)
+
+    _, oc = jax.lax.scan(step, None, (qc, offs),
+                         unroll=flags.layer_unroll("attn"))
+    return oc.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def attention_block(x, w, cfg, *, positions, causal=True, cache=None,
+                    cache_pos=None, attn_impl: str = "auto"):
+    """Full attention block: norm -> qkv -> rope -> attn -> out-proj.
+
+    ``cache``: optional dict(k=(B,S,KV,hd), v=...) for decode; new kv written
+    at ``cache_pos``. Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xn = norm_apply(cfg.norm, x, w["norm"], w.get("norm_bias"))
+    q = (xn @ w["wq"]).reshape(b, s, h, hd)
+    kx = (xn @ w["wk"]).reshape(b, s, kv, hd)
+    vx = (xn @ w["wv"]).reshape(b, s, kv, hd)
+    q = constraint(q, ("batch", "seq", "heads", None))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    kx = apply_rope(kx, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        quant = "k_scale" in cache
+
+        def write(buf, new, pos):
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (0, pos) + (0,) * (buf.ndim - 2))
+
+        if quant:
+            # int8 cache with per-(position, kv-head) fp32 scales: halves
+            # the decode-dominating HBM stream (EXPERIMENTS §Perf it.3)
+            def quantize(xnew):
+                sc = jnp.max(jnp.abs(xnew.astype(f32)), axis=-1,
+                             keepdims=True) / 127.0 + 1e-12
+                qv = jnp.clip(jnp.round(xnew.astype(f32) / sc), -127, 127)
+                return qv.astype(jnp.int8), sc
+
+            kq, ks = quantize(kx)
+            vq, vs = quantize(vx)
+            new_cache = {
+                "k": write(cache["k"], kq, cache_pos),
+                "v": write(cache["v"], vq, cache_pos),
+                "k_scale": write(cache["k_scale"], ks, cache_pos),
+                "v_scale": write(cache["v_scale"], vs, cache_pos),
+            }
+            ck = (new_cache["k"].astype(jnp.bfloat16)
+                  * new_cache["k_scale"].astype(jnp.bfloat16))
+            cv = (new_cache["v"].astype(jnp.bfloat16)
+                  * new_cache["v_scale"].astype(jnp.bfloat16))
+            ck, cv = ck.astype(x.dtype), cv.astype(x.dtype)
+        else:
+            ck = write(cache["k"], kx, cache_pos)
+            cv = write(cache["v"], vx, cache_pos)
+            new_cache = {"k": ck, "v": cv}
+        # Causal mask with the query offset also masks the unfilled cache
+        # tail (slots > cache_pos + s are in the future of every query).
+        if s >= 4096:   # long prefill: stream query chunks (flash-style)
+            o = chunked_mha(q, ck, cv, causal=True, q_offset=cache_pos)
+        else:
+            o = mha(q, ck, cv, causal=True, q_offset=cache_pos)
+    else:
+        if attn_impl == "chunked" or (attn_impl == "auto" and s >= 8192):
+            o = chunked_mha(q, kx, vx, causal=causal)
+        else:
+            o = mha(q, kx, vx, causal=causal)
+    o = constraint(o, ("batch", "seq", "heads", None))
+    out = o.reshape(b, s, h * hd) @ w["wo"]
+    return constraint(out, ("batch", "seq", "rep")), new_cache
+
+
+# ------------------------------------------------------------------ mlp ----
+
+def swiglu(x, w):
+    h = jax.nn.silu(x @ w["w_gate"]) * (x @ w["w_up"])
+    h = constraint(h, ("batch", "seq", "mlp"))
+    return h @ w["w_down"]
+
+
+def gelu_mlp(x, w):
+    h = jax.nn.gelu(x @ w["w_up"] + w.get("b_up", 0))
+    h = constraint(h, ("batch", "seq", "mlp"))
+    return h @ w["w_down"] + w.get("b_down", 0)
+
+
+# ------------------------------------------------------------ init utils ---
+
+def trunc_init(rng, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(rng, -2, 2, shape, f32) * std).astype(dtype)
+
+
+def init_tree(rng, shapes, init_fn=trunc_init):
+    leaves, treedef = jax.tree.flatten(shapes)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for r, l in zip(rngs, leaves):
+        if "norm" in str(l.dtype) or len(l.shape) == 1:
+            out.append(jnp.zeros(l.shape, l.dtype))
+        else:
+            out.append(init_fn(r, l.shape, l.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def sds(shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)

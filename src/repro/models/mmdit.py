@@ -1,0 +1,222 @@
+"""Flux-style MMDiT: double-stream (img/txt) joint-attention blocks followed
+by single-stream blocks; rectified-flow objective (BFL Flux tech report /
+SD3 arXiv:2403.03206).
+
+Frontends are stubs by assignment: ``input_specs`` provides VAE latents,
+T5 text features (d_txt) and the CLIP pooled vector directly.
+Positional encoding: 1D RoPE over the concatenated (txt ++ img) sequence —
+a documented simplification of Flux's 3-axis RoPE (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.configs import MMDiTConfig
+from repro.common import flags
+from repro.common.precision import parse_dtype
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+from repro.models.dit import timestep_embedding
+
+f32 = jnp.float32
+
+
+def param_specs(cfg: MMDiTConfig):
+    dt = parse_dtype(cfg.dtype)
+    D = cfg.d_model
+    pdim = cfg.in_channels * cfg.patch ** 2
+    Ld, Ls = cfg.n_double_blocks, cfg.n_single_blocks
+
+    def stream(Ln):
+        return {
+            "adaln": L.sds((Ln, D, 6 * D), dt),
+            "wqkv": L.sds((Ln, D, 3 * D), dt),
+            "wo": L.sds((Ln, D, D), dt),
+            "mlp_in": L.sds((Ln, D, 4 * D), dt),
+            "mlp_out": L.sds((Ln, 4 * D, D), dt),
+        }
+
+    def stream_logical():
+        return {
+            "adaln": ("layer", "embed", "mlp"),
+            "wqkv": ("layer", "embed", "heads"),
+            "wo": ("layer", "heads", "embed"),
+            "mlp_in": ("layer", "embed", "mlp"),
+            "mlp_out": ("layer", "mlp", "embed"),
+        }
+
+    shapes: dict[str, Any] = {
+        "img_in": L.sds((pdim, D), dt),
+        "txt_in": L.sds((cfg.d_txt, D), dt),
+        "vec_in": L.sds((cfg.d_pooled, D), dt),
+        "t_mlp1": L.sds((256, D), dt),
+        "t_mlp2": L.sds((D, D), dt),
+        "double_img": stream(Ld),
+        "double_txt": stream(Ld),
+        "single": {
+            "adaln": L.sds((Ls, D, 3 * D), dt),
+            "wqkv_mlp": L.sds((Ls, D, 3 * D + 4 * D), dt),
+            "wout": L.sds((Ls, D + 4 * D, D), dt),
+        },
+        "final_adaln": L.sds((D, 2 * D), dt),
+        "final_w": L.sds((D, pdim), dt),
+    }
+    logical: dict[str, Any] = {
+        "img_in": (None, "embed"),
+        "txt_in": ("embed_nofsdp", "embed"),
+        "vec_in": ("embed_nofsdp", "embed"),
+        "t_mlp1": (None, "embed"),
+        "t_mlp2": ("embed_nofsdp", "embed"),
+        "double_img": stream_logical(),
+        "double_txt": stream_logical(),
+        "single": {
+            "adaln": ("layer", "embed", "mlp"),
+            "wqkv_mlp": ("layer", "embed", "mlp"),
+            "wout": ("layer", "mlp", "embed"),
+        },
+        "final_adaln": ("embed_nofsdp", "mlp"),
+        "final_w": ("embed", None),
+    }
+    if cfg.guidance_embed:
+        shapes["g_mlp1"] = L.sds((256, D), dt)
+        shapes["g_mlp2"] = L.sds((D, D), dt)
+        logical["g_mlp1"] = (None, "embed")
+        logical["g_mlp2"] = ("embed_nofsdp", "embed")
+    return shapes, logical
+
+
+def init_params(cfg: MMDiTConfig, rng):
+    return L.init_tree(rng, param_specs(cfg)[0])
+
+
+def _attn(q, k, v, nh):
+    b, s, d = q.shape
+    hd = d // nh
+    o = L.mha(q.reshape(b, s, nh, hd), k.reshape(b, s, nh, hd),
+              v.reshape(b, s, nh, hd), causal=False)
+    return o.reshape(b, s, d)
+
+
+def _rope_qk(q, k, nh, positions):
+    b, s, d = q.shape
+    hd = d // nh
+    q = L.apply_rope(q.reshape(b, s, nh, hd), positions, 10_000.0)
+    k = L.apply_rope(k.reshape(b, s, nh, hd), positions, 10_000.0)
+    return q.reshape(b, s, d), k.reshape(b, s, d)
+
+
+def forward(cfg: MMDiTConfig, params, latents, txt, pooled, t, guidance=None):
+    """latents (B,Hl,Wl,C); txt (B,T,d_txt); pooled (B,d_pooled); t (B,) in
+    [0,1]; guidance (B,) or None. Returns velocity prediction (B,Hl,Wl,C)."""
+    from repro.models.dit import patchify, unpatchify
+
+    b, hl, wl, c = latents.shape
+    dt_ = params["img_in"].dtype
+    img = patchify(latents.astype(dt_), cfg.patch) @ params["img_in"]
+    txt = txt.astype(dt_) @ params["txt_in"]
+    n_img, n_txt, d = img.shape[1], txt.shape[1], img.shape[2]
+    nh = cfg.n_heads
+
+    vec = timestep_embedding(t * 1000.0, 256) @ params["t_mlp1"].astype(f32)
+    vec = jax.nn.silu(vec) @ params["t_mlp2"].astype(f32)
+    vec = vec + pooled.astype(f32) @ params["vec_in"].astype(f32)
+    if cfg.guidance_embed and guidance is not None:
+        g = timestep_embedding(guidance * 1000.0, 256) @ params["g_mlp1"].astype(f32)
+        vec = vec + jax.nn.silu(g) @ params["g_mlp2"].astype(f32)
+    vec_act = jax.nn.silu(vec)
+
+    img = constraint(img, ("batch", "seq", None))
+    positions = jnp.arange(n_txt + n_img, dtype=jnp.int32)[None]
+    pos_txt, pos_img = positions[:, :n_txt], positions[:, n_txt:]
+
+    def mod6(w):
+        m = (vec_act @ w["adaln"].astype(f32)).astype(dt_)
+        return jnp.split(m, 6, axis=-1)
+
+    def double_block(carry, w):
+        img, txt = carry
+        wi, wt = w
+        i_sh1, i_sc1, i_g1, i_sh2, i_sc2, i_g2 = mod6(wi)
+        t_sh1, t_sc1, t_g1, t_sh2, t_sc2, t_g2 = mod6(wt)
+
+        iq, ik, iv = jnp.split(
+            (L.layernorm(img, jnp.zeros((d,), f32)) * (1 + i_sc1[:, None])
+             + i_sh1[:, None]) @ wi["wqkv"], 3, axis=-1)
+        tq, tk, tv = jnp.split(
+            (L.layernorm(txt, jnp.zeros((d,), f32)) * (1 + t_sc1[:, None])
+             + t_sh1[:, None]) @ wt["wqkv"], 3, axis=-1)
+        iq, ik = _rope_qk(iq, ik, nh, pos_img)
+        tq, tk = _rope_qk(tq, tk, nh, pos_txt)
+        q = jnp.concatenate([tq, iq], axis=1)
+        k = jnp.concatenate([tk, ik], axis=1)
+        v = jnp.concatenate([tv, iv], axis=1)
+        o = _attn(q, k, v, nh)
+        to, io = o[:, :n_txt], o[:, n_txt:]
+        img = img + i_g1[:, None] * (io @ wi["wo"])
+        txt = txt + t_g1[:, None] * (to @ wt["wo"])
+
+        def mlp(x, w_, sh, sc, g):
+            xn = L.layernorm(x, jnp.zeros((d,), f32)) * (1 + sc[:, None]) + sh[:, None]
+            return x + g[:, None] * (jax.nn.gelu(xn @ w_["mlp_in"]) @ w_["mlp_out"])
+
+        img = mlp(img, wi, i_sh2, i_sc2, i_g2)
+        txt = mlp(txt, wt, t_sh2, t_sc2, t_g2)
+        img = constraint(img, ("batch", "rep", "rep"))
+        txt = constraint(txt, ("batch", "rep", "rep"))
+        return (img, txt), None
+
+    (img, txt), _ = jax.lax.scan(
+        double_block, (img, txt), (params["double_img"], params["double_txt"]),
+        unroll=flags.layer_unroll("double"))
+
+    x = jnp.concatenate([txt, img], axis=1)
+
+    def single_block(x, w):
+        m = (vec_act @ w["adaln"].astype(f32)).astype(dt_)
+        sh, sc, g = jnp.split(m, 3, axis=-1)
+        xn = L.layernorm(x, jnp.zeros((d,), f32)) * (1 + sc[:, None]) + sh[:, None]
+        h = xn @ w["wqkv_mlp"]
+        qkv, mlp_h = h[..., : 3 * d], h[..., 3 * d:]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k = _rope_qk(q, k, nh, positions)
+        o = _attn(q, k, v, nh)
+        out = jnp.concatenate([o, jax.nn.gelu(mlp_h)], axis=-1) @ w["wout"]
+        x = x + g[:, None] * out
+        return constraint(x, ("batch", "rep", "rep")), None
+
+    x, _ = jax.lax.scan(single_block, x, params["single"],
+                        unroll=flags.layer_unroll("single"))
+    img = x[:, n_txt:]
+
+    m = (vec_act @ params["final_adaln"].astype(f32)).astype(dt_)
+    sh, sc = jnp.split(m, 2, axis=-1)
+    img = L.layernorm(img, jnp.zeros((d,), f32)) * (1 + sc[:, None]) + sh[:, None]
+    out = img @ params["final_w"]
+    return unpatchify(out, cfg.patch, hl, c)
+
+
+def rectified_flow_loss(cfg: MMDiTConfig, params, batch):
+    """x_t = (1-t)x0 + t*eps, target v = eps - x0."""
+    lat, txt, pooled = batch["latents"], batch["txt"], batch["pooled"]
+    t, eps = batch["t"], batch["noise"]
+    tb = t[:, None, None, None].astype(f32)
+    xt = (1 - tb) * lat.astype(f32) + tb * eps.astype(f32)
+    guidance = batch.get("guidance")
+    v = forward(cfg, params, xt.astype(lat.dtype), txt, pooled, t,
+                guidance).astype(f32)
+    target = eps.astype(f32) - lat.astype(f32)
+    loss = jnp.mean(jnp.square(v - target))
+    return loss, {"mse": loss}
+
+
+def sample_step(cfg: MMDiTConfig, params, xt, txt, pooled, t, t_prev,
+                guidance=None):
+    """One rectified-flow Euler step from t to t_prev (< t)."""
+    v = forward(cfg, params, xt, txt, pooled, t, guidance).astype(f32)
+    x = xt.astype(f32) + (t_prev - t)[:, None, None, None] * v
+    return x.astype(xt.dtype)

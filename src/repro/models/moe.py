@@ -1,0 +1,180 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design (TPU-native, GShard-style but without the O(tokens x E x C) one-hot):
+  1. router top-k over experts (fp32),
+  2. flatten (token, expert-choice) assignments, *sort by expert id* inside
+     each token group (groups = batch shards, so the sort never crosses a
+     device boundary under SPMD),
+  3. compute each assignment's position within its expert via a cumulative
+     count; positions >= capacity are dropped (capacity_factor controls drop
+     rate exactly as in GShard/MaxText),
+  4. scatter token ids into an (E, C) slot table, gather tokens -> (E, C, D),
+  5. batched expert GEMMs (E-sharded over the ``model``/EP axis),
+  6. weighted scatter-add back to token order.
+
+FLOP overhead over the ideal is exactly ``capacity_factor``; no E-times dense
+waste. Expert weights carry the ``expert`` logical axis so EP falls out of the
+sharding rules; XLA inserts the dispatch all-to-all/all-gather.
+
+``router_impl="balanced"`` applies the paper's two-stage idea *inside* the
+model: expert affinity is the accuracy analogue (hard floor via top-2k
+pre-filter), and a load penalty (EWMA tokens-per-expert = queue depth
+analogue) is scalarised with the affinity gap — multi-objective expert
+routing. This is a beyond-paper feature, off by default.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constraint
+from repro.models.layers import sds
+
+f32 = jnp.float32
+
+
+def expert_specs(cfg, dtype):
+    """Parameter shapes + logical axes for the MoE block of ONE layer stack.
+
+    Leading dim L (scanned layers)."""
+    L, D, E, Fe = cfg.n_layers, cfg.d_model, cfg.n_experts, cfg.d_exp
+    shapes = {
+        "router": sds((L, D, E), f32),
+        "e_gate": sds((L, E, D, Fe), dtype),
+        "e_up": sds((L, E, D, Fe), dtype),
+        "e_down": sds((L, E, Fe, D), dtype),
+    }
+    logical = {
+        "router": ("layer", "embed_nofsdp", None),
+        "e_gate": ("layer", "expert", "embed", "expert_mlp"),
+        "e_up": ("layer", "expert", "embed", "expert_mlp"),
+        "e_down": ("layer", "expert", "expert_mlp", "embed"),
+    }
+    return shapes, logical
+
+
+def _capacity(tokens_per_group: int, k: int, E: int, cf: float) -> int:
+    c = int(tokens_per_group * k * cf / E) + 1
+    return max(k, (c + 3) // 4 * 4)
+
+
+def route_topk(logits, k: int):
+    """Standard softmax-then-top-k routing (DeepSeek renormalised gates)."""
+    probs = jax.nn.softmax(logits.astype(f32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / (jnp.sum(gate, -1, keepdims=True) + 1e-9)
+    return gate, idx, probs
+
+
+def route_balanced(logits, k: int, load_ewma, gamma: float = 0.5):
+    """Multi-objective routing (paper Algorithm 1 transplanted to experts):
+
+    Stage 1 (accuracy filter): keep the 2k highest-affinity experts per token
+    — affinity may drop at most the 2k-th value (Δ analogue).
+    Stage 2 (weighted sum): J = gamma * (1 - affinity_norm) + (1-gamma) *
+    load_norm over the candidates; pick top-k by -J.
+    """
+    probs = jax.nn.softmax(logits.astype(f32), axis=-1)
+    E = probs.shape[-1]
+    kk = min(2 * k, E)
+    thr = jax.lax.top_k(probs, kk)[0][..., -1:]
+    feasible = probs >= thr
+    a_min = jnp.min(jnp.where(feasible, probs, jnp.inf), -1, keepdims=True)
+    a_max = jnp.max(jnp.where(feasible, probs, -jnp.inf), -1, keepdims=True)
+    a_norm = (probs - a_min) / (a_max - a_min + 1e-9)
+    l_min, l_max = jnp.min(load_ewma), jnp.max(load_ewma)
+    l_norm = (load_ewma - l_min) / (l_max - l_min + 1e-9)
+    score = gamma * (1.0 - a_norm) + (1.0 - gamma) * l_norm
+    score = jnp.where(feasible, score, jnp.inf)
+    _, idx = jax.lax.top_k(-score, k)
+    gate = jnp.take_along_axis(probs, idx, axis=-1)
+    gate = gate / (jnp.sum(gate, -1, keepdims=True) + 1e-9)
+    return gate, idx, probs
+
+
+def aux_load_loss(probs, idx, E: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss."""
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    onehot = jax.nn.one_hot(idx.reshape(-1), E, dtype=f32)
+    ce = jnp.mean(jnp.sum(onehot, axis=-2) > 0, axis=0) if onehot.ndim == 3 \
+        else jnp.mean(onehot, axis=0)
+    return E * jnp.sum(me * ce)
+
+
+def _dispatch_one_group(xg, idx, gate, E: int, C: int):
+    """xg (n,D), idx (n,k), gate (n,k) -> (y (n,D), n_dropped)."""
+    n, k = idx.shape
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    flat_g = gate.reshape(-1).astype(f32)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(n * k, dtype=jnp.int32) - starts[se]
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)      # E*C = overflow sentinel
+
+    slot_token = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(st)
+    slot_gate = jnp.zeros((E * C + 1,), f32).at[slot].set(
+        jnp.where(keep, sg, 0.0))
+    slot_token = slot_token[: E * C].reshape(E, C)
+    slot_gate = slot_gate[: E * C].reshape(E, C)
+    slot_valid = slot_gate > 0.0
+    n_dropped = jnp.sum(~keep)
+    return slot_token, slot_gate, slot_valid, n_dropped
+
+
+def moe_ffn(x, w, cfg, *, num_groups: int = 1, load_ewma=None):
+    """x: (B,S,D) -> (y, aux) where aux = {aux_loss, dropped_frac, load}."""
+    B, S, D = x.shape
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    N = B * S
+    G = num_groups if N % max(num_groups, 1) == 0 else 1
+    n = N // G
+    C = _capacity(n, k, E, cf)
+
+    xf = x.reshape(G, n, D)
+    logits = jnp.einsum("gnd,de->gne", xf.astype(f32), w["router"].astype(f32))
+    logits = constraint(logits, ("batch", None, None))
+    if cfg.router_impl == "balanced" and load_ewma is not None:
+        gate, idx, probs = route_balanced(logits, k, load_ewma)
+    else:
+        gate, idx, probs = route_topk(logits, k)
+
+    slot_token, slot_gate, slot_valid, dropped = jax.vmap(
+        functools.partial(_dispatch_one_group, E=E, C=C))(xf, idx, gate)
+
+    # Gather: (G,E,C,D). The E dim carries the 'expert' logical axis -> EP.
+    xe = jnp.take_along_axis(
+        xf[:, None], slot_token[..., None], axis=2)      # (G,E,C,D)
+    xe = xe * slot_valid[..., None].astype(xe.dtype)
+    xe = constraint(xe, ("batch", "expert", None, None))
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w["e_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, w["e_up"])
+    h = constraint(h, ("batch", "expert", None, "expert_mlp"))
+    ye = jnp.einsum("gecf,efd->gecd", h, w["e_down"])
+    ye = ye * slot_gate[..., None].astype(ye.dtype)
+
+    # Combine: scatter-add back to token order (partial per EP shard; XLA
+    # inserts the all-reduce over the expert/model axis).
+    def combine(y_slots, tok):
+        return jnp.zeros((n, D), y_slots.dtype).at[tok.reshape(-1)].add(
+            y_slots.reshape(-1, D), mode="drop")
+
+    y = jax.vmap(combine)(ye, slot_token).reshape(B, S, D)
+    y = constraint(y, ("batch", "seq", "rep"))
+
+    load = jnp.mean(jax.nn.one_hot(idx.reshape(-1), E, dtype=f32), axis=0)
+    aux = {
+        "aux_loss": aux_load_loss(probs, idx, E),
+        "dropped_frac": jnp.sum(dropped).astype(f32) / (N * k),
+        "load": load,
+    }
+    return y.astype(x.dtype), aux

@@ -1,0 +1,300 @@
+"""Decoder-only LM (dense or MoE) with scan-over-layers.
+
+Weights are stacked along a leading layer dim so the whole stack lowers to a
+single ``lax.scan`` body -- compile time and HLO size stay O(1) in depth,
+which is what makes 512-device dry-runs of 480B-parameter configs tractable.
+
+Exposes:
+  * param_specs(cfg)          -> (shapes, logical) trees
+  * init_params(cfg, rng)     -> real params (reduced/smoke configs only)
+  * forward(cfg, params, tokens, ...)            -> logits (chunked-vocab safe)
+  * loss_and_metrics(cfg, params, batch, ...)    -> scalar loss, metrics
+  * prefill / decode step builders with stacked KV caches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.configs import LMConfig
+from repro.common import flags
+from repro.common.precision import parse_dtype
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+from repro.models import moe as MOE
+
+f32 = jnp.float32
+
+
+# ------------------------------------------------------------ parameters ---
+
+def param_specs(cfg: LMConfig):
+    dt = parse_dtype(cfg.dtype)
+    Ln, D, H, KV, hd = cfg.n_layers, cfg.d_model, cfg.n_heads, \
+        cfg.n_kv_heads, cfg.hd
+    shapes: dict[str, Any] = {
+        "embed": L.sds((cfg.vocab_size, D), dt),
+        "final_norm": L.sds((D,), f32),
+        "layers": {
+            "attn": {
+                "norm": L.sds((Ln, D), f32),
+                "wq": L.sds((Ln, D, H * hd), dt),
+                "wk": L.sds((Ln, D, KV * hd), dt),
+                "wv": L.sds((Ln, D, KV * hd), dt),
+                "wo": L.sds((Ln, H * hd, D), dt),
+            },
+        },
+    }
+    logical: dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("norm",),
+        "layers": {
+            "attn": {
+                "norm": ("layer", "norm"),
+                "wq": ("layer", "embed", "heads"),
+                "wk": ("layer", "embed", "kv_heads"),
+                "wv": ("layer", "embed", "kv_heads"),
+                "wo": ("layer", "heads", "embed"),
+            },
+        },
+    }
+    if cfg.norm == "layernorm":
+        shapes["layers"]["attn"]["norm_bias"] = L.sds((Ln, D), f32)
+        logical["layers"]["attn"]["norm_bias"] = ("layer", "norm")
+
+    mlp_shapes: dict[str, Any] = {"norm": L.sds((Ln, D), f32)}
+    mlp_logical: dict[str, Any] = {"norm": ("layer", "norm")}
+    if cfg.norm == "layernorm":
+        mlp_shapes["norm_bias"] = L.sds((Ln, D), f32)
+        mlp_logical["norm_bias"] = ("layer", "norm")
+
+    dense_ff = 0
+    if not cfg.moe:
+        dense_ff = cfg.d_ff
+    else:
+        if cfg.n_shared_experts:
+            dense_ff = cfg.n_shared_experts * cfg.d_exp
+        if cfg.moe_dense_residual:
+            dense_ff = cfg.d_ff
+    if dense_ff:
+        mlp_shapes.update({
+            "w_gate": L.sds((Ln, D, dense_ff), dt),
+            "w_up": L.sds((Ln, D, dense_ff), dt),
+            "w_down": L.sds((Ln, dense_ff, D), dt),
+        })
+        mlp_logical.update({
+            "w_gate": ("layer", "embed", "mlp"),
+            "w_up": ("layer", "embed", "mlp"),
+            "w_down": ("layer", "mlp", "embed"),
+        })
+    if cfg.moe:
+        e_shapes, e_logical = MOE.expert_specs(cfg, dt)
+        mlp_shapes["moe"] = e_shapes
+        mlp_logical["moe"] = e_logical
+    shapes["layers"]["mlp"] = mlp_shapes
+    logical["layers"]["mlp"] = mlp_logical
+
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = L.sds((cfg.vocab_size, D), dt)
+        logical["lm_head"] = ("vocab", "embed")
+    return shapes, logical
+
+
+def init_params(cfg: LMConfig, rng):
+    shapes, _ = param_specs(cfg)
+    return L.init_tree(rng, shapes)
+
+
+def abstract_params(cfg: LMConfig):
+    return param_specs(cfg)[0]
+
+
+# --------------------------------------------------------------- forward ---
+
+def _layer_body(cfg: LMConfig, num_groups: int, attn_impl: str,
+                x, w, positions, cache, cache_pos):
+    """One transformer layer. cache: dict or None."""
+    attn_out, new_cache = L.attention_block(
+        x, w["attn"], cfg, positions=positions, causal=True,
+        cache=cache, cache_pos=cache_pos, attn_impl=attn_impl)
+    x = x + attn_out
+
+    wm = w["mlp"]
+    xn = L.norm_apply(cfg.norm, x, wm["norm"], wm.get("norm_bias"))
+    aux = None
+    if cfg.moe:
+        y, aux = MOE.moe_ffn(xn, wm["moe"], cfg, num_groups=num_groups)
+        if "w_gate" in wm:           # shared experts / Arctic dense residual
+            y = y + L.swiglu(xn, wm)
+    else:
+        y = L.swiglu(xn, wm)
+    x = x + y
+    # pin the residual replicated on non-batch dims: remat saves it across
+    # the fwd/bwd boundary, and unconstrained specs let SPMD re-shard it
+    # pathologically across pods (EXPERIMENTS.md §Perf it.1)
+    x = constraint(x, ("batch", "seq", "rep"))
+    return x, new_cache, aux
+
+
+def forward(cfg: LMConfig, params, tokens, *, positions=None,
+            num_groups: int = 1, attn_impl: str = "auto",
+            remat: str = "none", caches=None, cache_pos=None,
+            return_hidden: bool = False):
+    """tokens: (B,S) -> logits (B,S,V) [or hidden (B,S,D)].
+
+    ``caches``: stacked (L, B, Smax, KV, hd) k/v arrays for serving; returns
+    (out, new_caches) when provided.
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constraint(x, ("batch", "seq", "rep"))
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :] + (
+            0 if cache_pos is None else cache_pos)
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    serving = caches is not None
+
+    quant = serving and "k_scale" in caches
+
+    def body(carry, wl):
+        x = carry
+        if serving:
+            if quant:
+                w, ck, cv, cks, cvs = wl
+                cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            else:
+                w, ck, cv = wl
+                cache = {"k": ck, "v": cv}
+        else:
+            w, cache = wl, None
+        x, new_cache, aux = _layer_body(
+            cfg, num_groups, attn_impl, x, w, positions, cache, cache_pos)
+        if serving:
+            ys = tuple(new_cache[f] for f in
+                       (("k", "v", "k_scale", "v_scale") if quant
+                        else ("k", "v")))
+        else:
+            ys = aux["aux_loss"] if (cfg.moe and aux is not None) else None
+        return x, ys
+
+    if remat != "none" and not serving:
+        policy = None
+        if remat == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(body, policy=policy)
+
+    if serving:
+        xs = (params["layers"], caches["k"], caches["v"]) + (
+            (caches["k_scale"], caches["v_scale"]) if quant else ())
+    else:
+        xs = params["layers"]
+    x, ys = jax.lax.scan(body, x, xs,
+                         unroll=flags.layer_unroll("layers"))
+
+    x = L.rmsnorm(x, params["final_norm"]) if cfg.norm == "rmsnorm" \
+        else L.layernorm(x, params["final_norm"])
+    if return_hidden:
+        out = x
+    else:
+        head = params.get("lm_head", params["embed"])
+        out = x @ head.T.astype(x.dtype)
+        out = constraint(out, ("batch", "seq", "vocab"))
+    if serving:
+        names = ("k", "v", "k_scale", "v_scale") if quant else ("k", "v")
+        return out, dict(zip(names, ys))
+    aux_loss = jnp.mean(ys) if (cfg.moe and ys is not None) else jnp.zeros((), f32)
+    return out, aux_loss
+
+
+# ------------------------------------------------------------------ loss ---
+
+def chunked_xent(cfg: LMConfig, params, hidden, labels, *, chunk: int = 1024,
+                 label_smoothing: float = 0.0):
+    """Cross-entropy over a vocab-sharded head without materialising the full
+    fp32 (B,S,V) logits: scan over sequence chunks."""
+    B, S, D = hidden.shape
+    V = cfg.vocab_size
+    head = params.get("lm_head", params["embed"])
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    hc = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def step(tot, xs):
+        h, lbl = xs
+        logits = (h @ head.T.astype(h.dtype)).astype(f32)
+        logits = constraint(logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        oh = jax.nn.one_hot(lbl, V, dtype=logits.dtype)
+        true_logit = jnp.sum(logits * oh, axis=-1)
+        nll = lse - true_logit
+        if label_smoothing:
+            nll = (1 - label_smoothing) * nll + label_smoothing * (
+                lse - jnp.mean(logits, axis=-1))
+        return tot + jnp.sum(nll), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), f32), (hc, lc),
+                          unroll=flags.scan_unroll(n))
+    return tot / (B * S)
+
+
+def loss_and_metrics(cfg: LMConfig, params, batch, *, num_groups=1,
+                     remat="none", aux_weight=0.01, label_smoothing=0.0):
+    hidden, aux_loss = forward(
+        cfg, params, batch["tokens"], num_groups=num_groups, remat=remat,
+        return_hidden=True)
+    xent = chunked_xent(cfg, params, hidden, batch["labels"],
+                        label_smoothing=label_smoothing)
+    loss = xent + aux_weight * aux_loss
+    return loss, {"xent": xent, "aux_loss": aux_loss}
+
+
+# --------------------------------------------------------------- serving ---
+
+def cache_specs(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    if dtype is None:
+        dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    lg = ("layer", "batch", "seq_kv", "kv_heads", None)
+    shapes = {"k": L.sds(shape, dtype), "v": L.sds(shape, dtype)}
+    logical = {"k": lg, "v": lg}
+    if dtype == jnp.int8:   # per-(position, kv-head) fp32 scales (~3% extra)
+        sshape = shape[:-1] + (1,)
+        shapes["k_scale"] = L.sds(sshape, f32)
+        shapes["v_scale"] = L.sds(sshape, f32)
+        logical["k_scale"] = lg
+        logical["v_scale"] = lg
+    return shapes, logical
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    shapes, _ = cache_specs(cfg, batch, max_seq, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def prefill(cfg: LMConfig, params, tokens, caches, *, num_groups=1,
+            attn_impl: str = "auto"):
+    """Run the prompt through the model, filling ``caches`` from position 0.
+    Returns (last-token logits, caches). Only the final position goes
+    through the LM head — materialising (B,S,V) logits at a 32k prompt
+    would cost 100s of GB/device."""
+    hidden, caches = forward(cfg, params, tokens, caches=caches, cache_pos=0,
+                             num_groups=num_groups, attn_impl=attn_impl,
+                             return_hidden=True)
+    head = params.get("lm_head", params["embed"])
+    logits = hidden[:, -1] @ head.T.astype(hidden.dtype)
+    logits = constraint(logits, ("batch", "vocab"))
+    return logits, caches
+
+
+def decode_step(cfg: LMConfig, params, token, caches, pos, *, num_groups=1):
+    """One decode step: token (B,1) against caches filled up to ``pos``."""
+    out, caches = forward(cfg, params, token, caches=caches, cache_pos=pos,
+                          num_groups=num_groups)
+    return out[:, -1], caches

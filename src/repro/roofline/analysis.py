@@ -1,0 +1,162 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = per-device link bytes / link_bw
+
+``cost_analysis()`` is per-device (the SPMD-partitioned module), matching
+the assignment's global/chips formulation. Collective bytes are NOT in
+cost_analysis, so we parse the optimised HLO and apply standard ring-cost
+factors per collective kind using each op's replica-group size.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.roofline.hw import V5E, Chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{")
+
+
+def shape_bytes(s: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(s):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    """Per-device link bytes as a multiple of the op's (per-device) output/
+    input bytes, ring algorithm."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "all-gather":
+        return (n - 1) / n          # x output bytes (already gathered size)
+    if kind == "reduce-scatter":
+        return float(n - 1)         # x output bytes (the shard)
+    if kind == "all-to-all":
+        return (n - 1) / n
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device link bytes over every collective in the optimised HLO.
+    Returns {kind: bytes} plus 'total'."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_s, kind = m.group(1), m.group(2)
+        nbytes = shape_bytes(shape_s)
+        # find replica_groups on the same statement (up to end of line)
+        line_end = hlo_text.find("\n", m.end())
+        stmt = hlo_text[m.end(): line_end if line_end > 0 else None]
+        g = _GROUPS_RE.search(stmt)
+        gi = _GROUPS_IOTA_RE.search(stmt)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip() != ""])
+        elif gi:  # iota format: [n_groups, group_size]<=[total]
+            n = int(gi.group(2))
+        elif kind == "collective-permute":
+            n = 2
+        else:
+            n = 1
+        out[kind] = out.get(kind, 0.0) + nbytes * _ring_factor(kind, n)
+        out[f"{kind}_count"] = out.get(f"{kind}_count", 0.0) + 1
+    out["total"] = sum(v for k, v in out.items() if not k.endswith("_count"))
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    chips: int
+    chip: Chip = V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.chip.peak_bf16_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.chip.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / self.chip.ici_link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Perfect-overlap bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time,
+        }
+
+
+def analyze_compiled(compiled, chips: int) -> dict:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    rl = Roofline(flops, byts, coll["total"], chips)
+    ma = compiled.memory_analysis()
+    out = rl.as_dict()
+    out["collectives"] = {k: v for k, v in coll.items()}
+    out["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "code_bytes": ma.generated_code_size_in_bytes,
+    }
+    live = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    out["memory"]["live_bytes"] = live
+    out["memory"]["fits_hbm"] = bool(live <= V5E.hbm_bytes)
+    out["memory"]["hbm_frac"] = live / V5E.hbm_bytes
+    return out

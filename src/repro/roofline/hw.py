@@ -1,0 +1,29 @@
+"""Hardware constants for the roofline model (TPU v5e, public numbers)."""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_bf16_flops: float        # FLOP/s
+    hbm_bw: float                 # B/s
+    ici_link_bw: float            # B/s per link (one direction)
+    ici_links: int                # links per chip (2D torus: 4)
+    hbm_bytes: int
+    vmem_bytes: int
+    idle_w: float
+    peak_w: float
+
+
+V5E = Chip(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16 * (1 << 30),
+    vmem_bytes=128 * (1 << 20),
+    idle_w=70.0,
+    peak_w=170.0,
+)

@@ -1,0 +1,238 @@
+"""Analytic HBM model (traffic + capacity) per cell.
+
+Why analytic: the dry-run compiles for the CPU backend, whose
+``bytes accessed`` reflects *unfused* execution (every elementwise op
+round-trips full buffers) and whose buffer assignment upcasts bf16 — both
+wildly pessimistic versus TPU's fused pipelines. The memory roofline term
+therefore comes from this standard fusion-aware model (the same accounting
+MFU calculators use); the XLA numbers are still recorded as an upper bound.
+
+All byte counts are GLOBAL; divide by chips for the per-device term.
+Formulas are deliberately simple and disclosed in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+from repro.common.configs import (DiTConfig, LMConfig, MMDiTConfig, ShapeSpec,
+                                  TrainingConfig, VisionConfig)
+
+BF16 = 2
+F32 = 4
+
+# params_io bytes/param for a full train step (read fwd + read bwd + grad
+# write/read + optimizer state read/write + param write)
+_OPT_IO = {"adamw": 26, "adafactor": 12, "sgdm": 18}
+# optimizer state bytes/param (capacity)
+_OPT_CAP = {"adamw": 8, "adafactor": 0.1, "sgdm": 4}
+
+
+def _attn_scores_io(batch, heads, sq, skv, causal: bool, train: bool,
+                    flash: bool = False) -> float:
+    """HBM bytes for exact-attention score/softmax buffers. ~12 B/element
+    (f32 scores write+read, bf16 probs write+read) per pass; x3 with
+    backward. A flash/fused kernel keeps them in VMEM -> 0."""
+    if flash:
+        return 0.0
+    elems = batch * heads * float(sq) * float(skv) * (0.5 if causal else 1.0)
+    return elems * 12.0 * (3.0 if train else 1.0)
+
+
+def _lm_act_bytes_per_token_layer(cfg: LMConfig) -> float:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if cfg.moe:
+        f_eff = cfg.top_k * cfg.d_exp * cfg.capacity_factor \
+            + cfg.n_shared_experts * cfg.d_exp \
+            + (cfg.d_ff if cfg.moe_dense_residual else 0)
+    else:
+        f_eff = cfg.d_ff
+    per_tok = (H * hd) + 2 * (KV * hd) + (H * hd) + 3 * D + 2 * f_eff + D
+    return BF16 * per_tok
+
+
+def lm_traffic(cfg: LMConfig, shape: ShapeSpec, tcfg: TrainingConfig,
+               flash: bool = False) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    p = cfg.n_params()
+    L, H = cfg.n_layers, cfg.n_heads
+    act = _lm_act_bytes_per_token_layer(cfg)
+    kv_elem = (1 + F32 / cfg.hd) if cfg.kv_cache_dtype == "int8" else BF16
+    cache_bytes = 2 * L * B * S * cfg.n_kv_heads * cfg.hd * kv_elem
+
+    if shape.kind == "train":
+        tokens = B * S
+        out = {
+            "params_io": p * _OPT_IO[tcfg.optimizer],
+            "act_io": 3.0 * tokens * L * act,
+            "scores_io": L * _attn_scores_io(B, H, S, S, True, True, flash),
+            "xent_io": tokens * cfg.vocab_size * 12.0,
+        }
+    elif shape.kind == "prefill":
+        tokens = B * S
+        out = {
+            "params_io": p * BF16,
+            "act_io": 1.0 * tokens * L * act,
+            "scores_io": L * _attn_scores_io(B, H, S, S, True, False, flash),
+            "cache_io": cache_bytes,
+        }
+    else:  # decode: read weights once + stream the cache
+        if cfg.moe:
+            # only experts hit by the B*top_k routed tokens are read
+            hit = min(B * cfg.top_k, cfg.n_experts) / cfg.n_experts
+            expert_p = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model \
+                * cfg.d_exp
+            p_read = (p - expert_p) + hit * expert_p
+        else:
+            p_read = p
+        out = {
+            "params_io": p_read * BF16,
+            "cache_io": cache_bytes,
+            "act_io": 3 * B * L * act,
+        }
+    out["total"] = sum(out.values())
+    return out
+
+
+def lm_capacity(cfg: LMConfig, shape: ShapeSpec, tcfg: TrainingConfig,
+                chips: int, param_shards: int) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    p = cfg.n_params()
+    L, D = cfg.n_layers, cfg.d_model
+    out = {"params": p * BF16 / param_shards}
+    if shape.kind == "train":
+        out["opt"] = p * _OPT_CAP[tcfg.optimizer] / param_shards
+        out["grads"] = p * (F32 if tcfg.microbatch else BF16) / param_shards
+        tokens_local = B * S / min(chips, B * S)
+        saved_mult = 1.0 if tcfg.remat == "full" else 3.0
+        out["activations"] = saved_mult * L * tokens_local * D * BF16
+        out["transient"] = tokens_local * min(cfg.vocab_size, 8192) * F32
+    else:
+        kv_elem = (1 + F32 / cfg.hd) if cfg.kv_cache_dtype == "int8" else BF16
+        cache = 2 * L * B * S * cfg.n_kv_heads * cfg.hd * kv_elem
+        out["kv_cache"] = cache / chips
+        out["transient"] = B * S * D * BF16 / min(chips, max(B, 1) * 16)
+    out["total"] = sum(out.values())
+    return out
+
+
+def _dit_tokens_and_width(cfg, shape):
+    if isinstance(cfg, MMDiTConfig):
+        return cfg.n_img_tokens(shape.img_res) + cfg.txt_len, cfg.d_model, \
+            cfg.n_double_blocks + cfg.n_single_blocks, cfg.n_heads
+    return cfg.n_tokens(shape.img_res), cfg.d_model, cfg.n_layers, \
+        cfg.n_heads
+
+
+def dit_traffic(cfg, shape: ShapeSpec, tcfg: TrainingConfig,
+                flash: bool = False) -> dict:
+    n_tok, D, L, H = _dit_tokens_and_width(cfg, shape)
+    B = shape.global_batch
+    p = cfg.n_params()
+    train = shape.kind == "train"
+    act = BF16 * 12 * D
+    out = {
+        "params_io": p * (_OPT_IO[tcfg.optimizer] if train else BF16),
+        "act_io": (3.0 if train else 1.0) * B * n_tok * L * act,
+        "scores_io": L * _attn_scores_io(B, H, n_tok, n_tok, False, train,
+                                         flash),
+    }
+    out["total"] = sum(out.values())
+    return out
+
+
+def dit_capacity(cfg, shape: ShapeSpec, tcfg: TrainingConfig, chips: int,
+                 param_shards: int) -> dict:
+    n_tok, D, L, H = _dit_tokens_and_width(cfg, shape)
+    B = shape.global_batch
+    p = cfg.n_params()
+    train = shape.kind == "train"
+    out = {"params": p * BF16 / param_shards}
+    if train:
+        out["opt"] = p * _OPT_CAP[tcfg.optimizer] / param_shards
+        out["grads"] = p * BF16 / param_shards
+        tokens_local = B * n_tok / min(chips, B * 16)
+        out["activations"] = 3.0 * L * tokens_local * D * BF16
+    bl = max(B // min(B, max(chips // 16, 1)), 1)
+    out["transient"] = bl * (n_tok ** 2) * F32 / 16  # per-dev score chunk
+    out["total"] = sum(out.values())
+    return out
+
+
+def vision_feature_bytes(cfg: VisionConfig, img_res: int) -> float:
+    """Sum of feature-map bytes for one forward pass (per image)."""
+    import math
+    from repro.models.convnets import plan
+
+    cur = img_res
+    total = 0.0
+    for b in plan(cfg):
+        t = b["t"]
+        if t == "conv_bn":
+            cur = math.ceil(cur / b["s"])
+            total += cur * cur * b["cout"]
+        elif t == "maxpool":
+            cur = math.ceil(cur / b["s"])
+        elif t == "resnet_block":
+            mid_res = cur
+            cur = math.ceil(cur / b["s"])
+            total += mid_res * mid_res * b["mid"] + cur * cur * (b["mid"] + b["cout"])
+        elif t == "convnext_stem":
+            cur = cur // 4
+            total += cur * cur * b["cout"]
+        elif t == "convnext_down":
+            cur = cur // 2
+            total += cur * cur * b["cout"]
+        elif t == "convnext_block":
+            total += cur * cur * b["dim"] * 6
+        elif t == "mbconv":
+            mid = b["cin"] * b["e"]
+            total += cur * cur * mid
+            cur = math.ceil(cur / b["s"])
+            total += cur * cur * (mid + b["cout"])
+    return total * BF16
+
+
+def vision_traffic(cfg: VisionConfig, shape: ShapeSpec,
+                   tcfg: TrainingConfig) -> dict:
+    p = cfg.n_params()
+    train = shape.kind == "train"
+    feats = vision_feature_bytes(cfg, shape.img_res) * shape.global_batch
+    out = {
+        "params_io": p * (_OPT_IO[tcfg.optimizer] if train else BF16),
+        "act_io": (3.0 if train else 1.0) * feats * 2,   # write + read
+    }
+    out["total"] = sum(out.values())
+    return out
+
+
+def vision_capacity(cfg: VisionConfig, shape: ShapeSpec,
+                    tcfg: TrainingConfig, chips: int,
+                    param_shards: int) -> dict:
+    p = cfg.n_params()
+    train = shape.kind == "train"
+    out = {"params": p * BF16 / param_shards}
+    feats = vision_feature_bytes(cfg, shape.img_res)
+    local_imgs = max(shape.global_batch / chips, 1.0 / 16)
+    if train:
+        out["opt"] = p * _OPT_CAP[tcfg.optimizer] / param_shards
+        out["grads"] = p * F32 / param_shards
+        out["activations"] = feats * local_imgs
+    else:
+        out["activations"] = feats * local_imgs * 0.25   # live window
+    out["total"] = sum(out.values())
+    return out
+
+
+def cell_memory(cfg, shape: ShapeSpec, tcfg: TrainingConfig, chips: int,
+                param_shards: int, flash: bool = False) -> dict:
+    if isinstance(cfg, LMConfig):
+        t = lm_traffic(cfg, shape, tcfg, flash)
+        c = lm_capacity(cfg, shape, tcfg, chips, param_shards)
+    elif isinstance(cfg, (DiTConfig, MMDiTConfig)):
+        t = dit_traffic(cfg, shape, tcfg, flash)
+        c = dit_capacity(cfg, shape, tcfg, chips, param_shards)
+    elif isinstance(cfg, VisionConfig):
+        t = vision_traffic(cfg, shape, tcfg)
+        c = vision_capacity(cfg, shape, tcfg, chips, param_shards)
+    else:
+        raise TypeError(type(cfg))
+    return {"traffic": t, "capacity": c}

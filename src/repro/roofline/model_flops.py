@@ -1,0 +1,127 @@
+"""Analytic MODEL_FLOPS per cell (the "useful work" numerator).
+
+LM: 6·N_active·tokens for train, 2·N_active·tokens for inference matmuls,
+plus exact attention-score/value FLOPs (which 6ND omits). Diffusion/vision:
+2·MACs per forward (x3 for training). The roofline report uses
+MODEL_FLOPS / HLO_FLOPs to expose remat and dispatch waste."""
+
+from __future__ import annotations
+
+import math
+
+from repro.common.configs import (DiTConfig, LMConfig, MMDiTConfig, ShapeSpec,
+                                  VisionConfig)
+
+
+def _lm_attention_flops(cfg: LMConfig, batch: int, sq: int, skv: int) -> float:
+    # QK^T + PV: 2 matmuls, 2*sq*skv*hd MACs each per head -> FLOPs = 4*...
+    return 4.0 * batch * cfg.n_heads * cfg.hd * float(sq) * float(skv)
+
+
+def lm_flops(cfg: LMConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    n_act = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = B * S
+        dense = 6.0 * n_act * tokens
+        attn = 3.0 * cfg.n_layers * _lm_attention_flops(cfg, B, S, S) / 2.0
+        # causal: half the S^2 work; x3 for fwd+bwd
+        return {"model_flops": dense + attn, "flops_6nd": dense}
+    if shape.kind == "prefill":
+        tokens = B * S
+        dense = 2.0 * n_act * tokens
+        attn = cfg.n_layers * _lm_attention_flops(cfg, B, S, S) / 2.0
+        return {"model_flops": dense + attn, "flops_6nd": dense}
+    # decode: one token per sequence against an S-token cache
+    dense = 2.0 * n_act * B
+    attn = cfg.n_layers * _lm_attention_flops(cfg, B, 1, S)
+    return {"model_flops": dense + attn, "flops_6nd": dense}
+
+
+def dit_flops(cfg, shape: ShapeSpec) -> dict:
+    if isinstance(cfg, MMDiTConfig):
+        n_tok = cfg.n_img_tokens(shape.img_res) + cfg.txt_len
+        d = cfg.d_model
+        # double blocks: two streams share joint attention
+        per_tok_params = (cfg.n_double_blocks * 2 + cfg.n_single_blocks) \
+            * 12 * d * d
+        attn_layers = cfg.n_double_blocks + cfg.n_single_blocks
+    else:
+        n_tok = cfg.n_tokens(shape.img_res)
+        d = cfg.d_model
+        per_tok_params = cfg.n_layers * 18 * d * d
+        attn_layers = cfg.n_layers
+    B = shape.global_batch
+    dense = 2.0 * per_tok_params * n_tok * B
+    attn = attn_layers * 4.0 * B * n_tok * n_tok * d
+    fwd = dense + attn
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return {"model_flops": mult * fwd, "flops_6nd": mult * dense,
+            "steps": shape.steps}
+
+
+def vision_flops(cfg: VisionConfig, shape: ShapeSpec) -> dict:
+    from repro.models.convnets import plan
+
+    res = shape.img_res
+    macs = 0.0
+    cur = res
+
+    def conv_macs(h, k, cin, cout, stride, groups=1):
+        oh = math.ceil(h / stride)
+        return oh * oh * k * k * cin * cout / groups, oh
+
+    for b in plan(cfg):
+        t = b["t"]
+        if t == "conv_bn":
+            m, cur = conv_macs(cur, b["k"], b["cin"], b["cout"], b["s"])
+            macs += m
+        elif t == "maxpool":
+            cur = math.ceil(cur / b["s"])
+        elif t == "resnet_block":
+            m1, _ = conv_macs(cur, 1, b["cin"], b["mid"], 1)
+            m2, nxt = conv_macs(cur, 3, b["mid"], b["mid"], b["s"])
+            m3, _ = conv_macs(nxt, 1, b["mid"], b["cout"], 1)
+            macs += m1 + m2 + m3
+            if b["cin"] != b["cout"] or b["s"] > 1:
+                mp, _ = conv_macs(cur, 1, b["cin"], b["cout"], b["s"])
+                macs += mp
+            cur = nxt
+        elif t == "convnext_stem":
+            m, cur = conv_macs(cur, 4, 3, b["cout"], 4)
+            macs += m
+        elif t == "convnext_down":
+            m, cur = conv_macs(cur, 2, b["cin"], b["cout"], 2)
+            macs += m
+        elif t == "convnext_block":
+            d = b["dim"]
+            mdw, _ = conv_macs(cur, 7, d, d, 1, groups=d)
+            macs += mdw + cur * cur * d * 4 * d * 2
+        elif t == "mbconv":
+            cin, cout, e, k = b["cin"], b["cout"], b["e"], b["k"]
+            mid = cin * e
+            if e != 1:
+                m, _ = conv_macs(cur, 1, cin, mid, 1)
+                macs += m
+            mdw, nxt = conv_macs(cur, k, mid, mid, b["s"], groups=mid)
+            macs += mdw
+            se = max(1, cin // 4)
+            macs += mid * se * 2
+            mp, _ = conv_macs(nxt, 1, mid, cout, 1)
+            macs += mp
+            cur = nxt
+        elif t == "head":
+            macs += b["cin"] * b["classes"]
+    fwd = 2.0 * macs * shape.global_batch
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return {"model_flops": mult * fwd, "flops_6nd": mult * fwd}
+
+
+def cell_model_flops(cfg, shape: ShapeSpec) -> dict:
+    if isinstance(cfg, LMConfig):
+        return lm_flops(cfg, shape)
+    if isinstance(cfg, (DiTConfig, MMDiTConfig)):
+        return dit_flops(cfg, shape)
+    if isinstance(cfg, VisionConfig):
+        return vision_flops(cfg, shape)
+    raise TypeError(type(cfg))

@@ -1,0 +1,73 @@
+"""Per-pair executors.
+
+Two modes:
+  * ``real``  — actually run a (tiny) detection model on this host, measuring
+    wall-clock service time (used by the end-to-end example); profiled T/E
+    still drive the *balancer's* expectations, mirroring the paper's split
+    between offline profiles and live execution.
+  * ``modelled`` — service time/energy drawn from the ProfileTable (used for
+    large fleets; identical queue semantics).
+
+Each executor is a FIFO: ``submit`` returns the response-ready time given
+the queue; the gateway reads ``outstanding(now)`` as q_p.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profiles import ProfileTable
+from repro.models import detection
+from repro.serving.request import Request, Response
+
+
+@dataclass
+class Executor:
+    pair: int
+    name: str
+    prof: ProfileTable
+    mode: str = "modelled"            # modelled | real
+    tier: str = "ssd_v1"              # detection tier for real mode
+    params: Any = None
+    avail_s: float = 0.0
+    finish_times: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.mode == "real" and self.params is None:
+            self.params = detection.init_params(
+                self.tier, jax.random.PRNGKey(self.pair))
+            self._fwd = jax.jit(
+                lambda p, x: detection.forward(self.tier, p, x))
+
+    def outstanding(self, now: float) -> int:
+        self.finish_times = [t for t in self.finish_times if t > now]
+        return len(self.finish_times)
+
+    def submit(self, req: Request, g_true: int, now: float) -> Response:
+        start = max(now, self.avail_s)
+        if self.mode == "real":
+            t0 = time.perf_counter()
+            preds = self._fwd(self.params, req.payload[None])
+            preds = jax.block_until_ready(preds)
+            service = time.perf_counter() - t0
+            count = int(detection.count_objects(preds)[0])
+            dets = np.asarray(preds[0])
+        else:
+            service = float(self.prof.T[self.pair, g_true]) / 1000.0
+            count = -1
+            dets = None
+        finish = start + service
+        self.avail_s = finish
+        self.finish_times.append(finish)
+        return Response(
+            rid=req.rid, stream_id=req.stream_id, pair=self.pair,
+            start_s=start, finish_s=finish, detections=dets,
+            detected_count=count,
+            energy_mwh=float(self.prof.E[self.pair, g_true]),
+            map_proxy=float(self.prof.mAP[self.pair, g_true]))

@@ -1,0 +1,92 @@
+"""The gateway: per-request (or windowed) policy decisions.
+
+Holds the offline ProfileTable, optional online-EWMA adaptation state, and
+the per-stream estimator state (last detected count). Per-request decisions
+use the jitted Algorithm-1 scorer; batched routing windows go through the
+fused ``moscore`` Pallas kernel — identical results (tests assert so)."""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator as EST
+from repro.core import online as ONL
+from repro.core.policies import POLICY_CODES, policy_scores
+from repro.core.profiles import ProfileTable
+from repro.kernels.moscore import moscore_route
+
+
+@dataclass
+class Gateway:
+    prof: ProfileTable
+    policy: str = "MO"
+    gamma: float = 0.5
+    delta: float = 20.0
+    online: bool = False
+    _rr: int = 0
+    _stream_counts: dict = field(default_factory=dict)
+    _online_state: Any = None
+    _rng: Any = None
+
+    def __post_init__(self):
+        self._rng = jax.random.PRNGKey(1234)
+        if self.online:
+            self._online_state = ONL.init_state(self.prof)
+        code = POLICY_CODES[self.policy]
+
+        @jax.jit
+        def _score(T, E, mAP, g, q, rnd, rr, gamma, delta):
+            prof = ProfileTable(T, E, mAP)
+            return policy_scores(code, prof, g, q, rnd, rr, gamma, delta)
+
+        self._score = _score
+
+    # -- estimator ----------------------------------------------------------
+    def estimate_group(self, stream_id: int) -> int:
+        cnt = self._stream_counts.get(stream_id, 0)
+        return int(EST.group_of_count(jnp.asarray(cnt), self.prof.n_groups))
+
+    def observe_detections(self, stream_id: int, detected_count: int) -> None:
+        self._stream_counts[stream_id] = detected_count
+
+    def observe_latency(self, pair: int, group: int, latency_ms: float,
+                        energy_mwh: float | None = None) -> None:
+        if self.online:
+            self._online_state = ONL.observe(
+                self._online_state, pair, group, latency_ms, energy_mwh)
+
+    def _tables(self) -> ProfileTable:
+        if self.online:
+            return ONL.as_profile(self._online_state, self.prof)
+        return self.prof
+
+    # -- decisions ----------------------------------------------------------
+    def route(self, stream_id: int, queue_depths) -> tuple[int, int]:
+        """One request -> (pair, est_group)."""
+        g = self.estimate_group(stream_id)
+        self._rng, k = jax.random.split(self._rng)
+        p = self._tables()
+        scores = self._score(p.T, p.E, p.mAP, g,
+                             jnp.asarray(queue_depths, jnp.float32), k,
+                             self._rr % self.prof.n_pairs,
+                             self.gamma, self.delta)
+        self._rr += 1
+        return int(jnp.argmin(scores)), g
+
+    def route_window(self, stream_ids, queue_depths):
+        """Batched routing window through the fused kernel (MO policy only);
+        returns (pairs (W,), est_groups (W,), q_after)."""
+        assert self.policy == "MO", "windowed routing is the MO fast path"
+        gs = jnp.asarray([self.estimate_group(s) for s in stream_ids],
+                         jnp.int32)
+        p = self._tables()
+        pairs, q = moscore_route(p.T, p.E, p.mAP, gs,
+                                 jnp.asarray(queue_depths, jnp.float32),
+                                 delta=self.delta, gamma=self.gamma)
+        return np.asarray(pairs), np.asarray(gs), np.asarray(q)

@@ -1,0 +1,32 @@
+"""Request/response records for the heterogeneous serving fleet."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class Request:
+    rid: int
+    stream_id: int            # video stream / user id (estimator state key)
+    arrival_s: float
+    payload: Any = None       # image array (or token array for LM cells)
+    est_group: int = 0        # estimated complexity class (set by gateway)
+
+
+@dataclass
+class Response:
+    rid: int
+    stream_id: int
+    pair: int                 # device-model pair the request ran on
+    start_s: float
+    finish_s: float
+    detections: Any = None
+    detected_count: int = 0
+    energy_mwh: float = 0.0
+    map_proxy: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s  # caller subtracts arrival

@@ -1,0 +1,5 @@
+from repro.training.optimizer import make_optimizer
+from repro.training.schedule import warmup_cosine
+from repro.training.train_loop import TrainState, make_train_step
+
+__all__ = ["make_optimizer", "warmup_cosine", "TrainState", "make_train_step"]

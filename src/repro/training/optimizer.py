@@ -1,0 +1,136 @@
+"""Optimizers (from scratch — no optax in this environment).
+
+* ``adamw``     — fp32 m/v, decoupled weight decay. Memory 8 B/param extra.
+* ``adafactor`` — factored second moment (Shazeer & Stern), no first moment.
+                  The only optimizer that fits ≥100 B-param configs on one
+                  v5e pod (DESIGN.md §7); default for arctic-480b.
+* ``sgdm``      — momentum; used by the ResNet-family vision configs.
+
+State layout mirrors the param tree so FSDP shardings apply verbatim.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array, float], tuple[Any, Any]]
+    # update(grads, opt_state, params, step, lr) -> (new_params, new_state)
+
+
+def _adamw(b1: float, b2: float, eps: float, wd: float) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, f32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step, lr):
+        t = step.astype(f32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(f32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if wd and p.ndim >= 2:
+                u = u + wd * p.astype(f32)
+            return (p.astype(f32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def _adafactor(eps: float = 1e-30, clip: float = 1.0,
+               min_dim_factored: int = 128) -> Optimizer:
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored \
+            and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def st(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], f32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], f32)}
+            return {"v": jnp.zeros(p.shape, f32)}
+        return jax.tree.map(st, params, is_leaf=lambda x: hasattr(x, "shape"))
+
+    def update(grads, state, params, step, lr):
+        t = step.astype(f32) + 1.0
+        beta2 = 1.0 - t ** -0.8
+
+        def upd(g, s, p):
+            gf = g.astype(f32)
+            g2 = jnp.square(gf) + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                u = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :])
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = gf / jnp.sqrt(v)
+                ns = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(p.astype(f32)))),
+                                1e-3)
+            return (p.astype(f32) - lr * scale * u).astype(p.dtype), ns
+
+        out = jax.tree.map(upd, grads, state, params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("v" in x or "vr" in x))
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def _sgdm(momentum: float, wd: float) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)}
+
+    def update(grads, state, params, step, lr):
+        def upd(g, m, p):
+            gf = g.astype(f32)
+            if wd and p.ndim >= 2:
+                gf = gf + wd * p.astype(f32)
+            m = momentum * m + gf
+            return (p.astype(f32) - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state["mom"], params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mom": new_m}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(tcfg) -> Optimizer:
+    if tcfg.optimizer == "adamw":
+        return _adamw(tcfg.b1, tcfg.b2, 1e-8, tcfg.weight_decay)
+    if tcfg.optimizer == "adafactor":
+        return _adafactor()
+    if tcfg.optimizer == "sgdm":
+        return _sgdm(0.9, tcfg.weight_decay)
+    raise ValueError(tcfg.optimizer)

@@ -1,0 +1,21 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    s = step.astype(f32)
+    warm = base_lr * s / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = base_lr * (final_frac + (1 - final_frac)
+                     * 0.5 * (1.0 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant(step, base_lr: float):
+    return jnp.full_like(step, base_lr, dtype=f32)

@@ -1,0 +1,125 @@
+"""Generic train-step builder: loss -> grads (optionally microbatched) ->
+clip -> schedule -> optimizer. Works for every family in the zoo; the loss
+callable owns all model specifics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.configs import TrainingConfig
+from repro.common import flags
+from repro.training.optimizer import make_optimizer
+from repro.training.schedule import warmup_cosine
+
+f32 = jnp.float32
+
+
+def TrainState(params, opt_state, step=None, extra=None):
+    st = {"params": params, "opt": opt_state,
+          "step": step if step is not None else jnp.zeros((), jnp.int32)}
+    if extra is not None:
+        st["extra"] = extra
+    return st
+
+
+def init_state(loss_params, tcfg: TrainingConfig, extra=None):
+    opt = make_optimizer(tcfg)
+    return TrainState(loss_params, opt.init(loss_params), extra=extra)
+
+
+def abstract_state(abstract_params, tcfg: TrainingConfig, extra=None):
+    """Shape-only TrainState for dry-run lowering (no allocation)."""
+    opt = make_optimizer(tcfg)
+    opt_shapes = jax.eval_shape(opt.init, abstract_params)
+    st = {"params": abstract_params, "opt": opt_shapes,
+          "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if extra is not None:
+        st["extra"] = extra
+    return st
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(f32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(f32) * scale).astype(g.dtype), tree), n
+
+
+def make_train_step(loss_fn: Callable, tcfg: TrainingConfig,
+                    has_extra_state: bool = False):
+    """loss_fn(params, batch[, extra]) -> (loss, metrics[, new_extra]).
+
+    Returns step(state, batch) -> (state, metrics). If ``tcfg.microbatch``
+    > 0, the batch's leading dim is split into microbatches and gradients
+    accumulate in fp32 via lax.scan (sequential — the standard memory/
+    throughput trade; also the hook where pipeline-parallel schedules would
+    attach).
+    """
+    opt = make_optimizer(tcfg)
+
+    def compute_grads(params, batch, extra):
+        if has_extra_state:
+            def wrapped(p):
+                loss, (metrics, new_extra) = loss_fn(p, batch, extra)
+                return loss, (metrics, new_extra)
+            (loss, (metrics, new_extra)), grads = jax.value_and_grad(
+                wrapped, has_aux=True)(params)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch), has_aux=True)(params)
+            new_extra = extra
+        return loss, metrics, grads, new_extra
+
+    def step(state, batch):
+        params = state["params"]
+        extra = state.get("extra")
+        if tcfg.microbatch and tcfg.microbatch > 0:
+            def split(x):
+                b = x.shape[0]
+                assert b % tcfg.microbatch == 0, (b, tcfg.microbatch)
+                return x.reshape(tcfg.microbatch, b // tcfg.microbatch,
+                                 *x.shape[1:])
+            mbatch = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc, extra_c = carry
+                loss, metrics, grads, new_extra = compute_grads(
+                    params, mb, extra_c)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(f32) / tcfg.microbatch,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / tcfg.microbatch, new_extra), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+            (grads, loss, new_extra), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), f32), extra), mbatch,
+                unroll=flags.layer_unroll("micro"))
+            metrics = {}
+        else:
+            loss, metrics, grads, new_extra = compute_grads(
+                params, batch, extra)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = warmup_cosine(state["step"], tcfg.lr, tcfg.warmup_steps,
+                           tcfg.total_steps)
+        new_params, new_opt = opt.update(grads, state["opt"], params,
+                                         state["step"], lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if new_extra is not None:
+            new_state["extra"] = new_extra
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out_metrics.update({k: v for k, v in metrics.items()
+                            if jnp.ndim(v) == 0})
+        return new_state, out_metrics
+
+    return step

@@ -1,0 +1,50 @@
+"""Estimator properties (hypothesis where it pays)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import (group_of_count, markov_transition,
+                                  noisy_detected_count, stationary)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.floats(0.5, 0.99), st.floats(0.5, 0.9))
+def test_transition_is_stochastic(n, stick, drift):
+    P = np.asarray(markov_transition(n, stick, drift))
+    np.testing.assert_allclose(P.sum(1), 1.0, rtol=1e-5)
+    assert (P >= -1e-9).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 8),
+       st.floats(1.0, 99.0))
+def test_detected_count_bounds(seed, true_count, map_pg):
+    rng = jax.random.PRNGKey(seed)
+    det = noisy_detected_count(rng, jnp.asarray(true_count),
+                               jnp.asarray(map_pg))
+    assert 0 <= int(det) <= min(true_count, 8) + 1   # +1 false positive
+
+
+def test_detection_monotone_in_accuracy():
+    """Expected detected count increases with mAP (1000-sample means)."""
+    rngs = jax.random.split(jax.random.PRNGKey(0), 1000)
+    def mean_det(m):
+        f = jax.vmap(lambda r: noisy_detected_count(
+            r, jnp.asarray(4), jnp.asarray(m)))
+        return float(jnp.mean(f(rngs)))
+    assert mean_det(90.0) > mean_det(10.0)
+    assert mean_det(90.0) > 3.5      # strong detectors count ~right
+
+
+def test_group_of_count_clips():
+    assert int(group_of_count(jnp.asarray(0))) == 0
+    assert int(group_of_count(jnp.asarray(4))) == 4
+    assert int(group_of_count(jnp.asarray(99))) == 4
+
+
+def test_stationary_skewed_up():
+    pi = np.asarray(stationary(markov_transition(5, 0.85, 0.62)))
+    assert pi.argmax() >= 2          # busy-crossing: mass on complex scenes
+    np.testing.assert_allclose(pi.sum(), 1.0, rtol=1e-4)

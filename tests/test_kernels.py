@@ -1,0 +1,91 @@
+"""Kernel validation: shape/dtype sweeps against the pure-jnp oracles,
+executed in Pallas interpret mode (kernel bodies run on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, ref_attention
+from repro.kernels.decode_attention import (decode_attention,
+                                            ref_decode_attention)
+from repro.kernels.moscore import moscore_route, ref_moscore_route
+from repro.core.profiles import paper_fleet, synthetic_fleet
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,d", [
+    (1, 128, 128, 2, 2, 64),
+    (2, 256, 256, 4, 2, 64),
+    (1, 512, 512, 2, 1, 128),
+    (2, 128, 512, 2, 2, 64),     # cross-length (non-causal only)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, sq, sk, h, kv, d, dtype):
+    rng = jax.random.PRNGKey(0)
+    kq, kk, kv_ = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (b, sq, h, d), dtype)
+    k = jax.random.normal(kk, (b, sk, kv, d), dtype)
+    v = jax.random.normal(kv_, (b, sk, kv, d), dtype)
+    causal = sq == sk
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=128)
+    ref = ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,partial_len", [
+    (1, 512, 4, 4, 64, None),
+    (2, 1024, 8, 2, 128, None),
+    (2, 512, 4, 2, 64, 300),     # partially-filled cache
+    (1, 2048, 2, 1, 128, 17),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, s, h, kv, d, partial_len, dtype):
+    rng = jax.random.PRNGKey(1)
+    kq, kk, kv_ = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (b, h, d), dtype)
+    k = jax.random.normal(kk, (b, s, kv, d), dtype)
+    v = jax.random.normal(kv_, (b, s, kv, d), dtype)
+    kv_len = None if partial_len is None \
+        else jnp.full((b,), partial_len, jnp.int32)
+    out = decode_attention(q, k, v, kv_len, n_splits=4)
+    ref = ref_decode_attention(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("n_pairs,window,delta,gamma", [
+    (5, 64, 20.0, 0.5),
+    (5, 256, 20.0, 0.0),
+    (37, 128, 10.0, 1.0),
+    (200, 64, 30.0, 0.25),
+])
+def test_moscore(n_pairs, window, delta, gamma):
+    rng = jax.random.PRNGKey(2)
+    prof = paper_fleet() if n_pairs == 5 else synthetic_fleet(rng, n_pairs)
+    gs = jax.random.randint(rng, (window,), 0, prof.n_groups)
+    q0 = jax.random.randint(jax.random.fold_in(rng, 1), (prof.n_pairs,),
+                            0, 4).astype(jnp.float32)
+    got_p, got_q = moscore_route(prof.T, prof.E, prof.mAP, gs, q0,
+                                 delta=delta, gamma=gamma)
+    ref_p, ref_q = ref_moscore_route(prof.T, prof.E, prof.mAP, gs, q0,
+                                     delta=delta, gamma=gamma)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(ref_p))
+    np.testing.assert_allclose(np.asarray(got_q), np.asarray(ref_q))
+
+
+def test_moscore_respects_accuracy_floor():
+    """Property: every choice is feasible for its (estimated) group."""
+    prof = paper_fleet()
+    rng = jax.random.PRNGKey(3)
+    gs = jax.random.randint(rng, (512,), 0, prof.n_groups)
+    q0 = jnp.zeros((prof.n_pairs,))
+    ps, _ = moscore_route(prof.T, prof.E, prof.mAP, gs, q0, delta=15.0)
+    thr = jnp.max(prof.mAP, axis=0) - 15.0
+    ok = prof.mAP[ps, gs] >= thr[gs]
+    assert bool(jnp.all(ok))

@@ -1,0 +1,58 @@
+"""int8 KV-cache quantisation: correctness vs the bf16 cache path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.common.configs import LMConfig
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                   d_ff=128, vocab_size=128, dtype="float32")
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    tok = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 128)
+    return cfg, cfg8, params, tok
+
+
+def test_cache_layout(setup):
+    _, cfg8, _, _ = setup
+    c8 = T.init_cache(cfg8, 2, 32)
+    assert c8["k"].dtype == jnp.int8
+    assert c8["k_scale"].shape == (2, 2, 32, 2, 1)
+
+
+def test_prefill_decode_close_to_bf16(setup):
+    cfg, cfg8, params, tok = setup
+    c16 = T.init_cache(cfg, 2, 32)
+    c8 = T.init_cache(cfg8, 2, 32)
+    l16, c16 = T.prefill(cfg, params, tok, c16)
+    l8, c8 = T.prefill(cfg8, params, tok, c8)
+    rel = float(jnp.max(jnp.abs(l16 - l8))) / float(jnp.max(jnp.abs(l16)))
+    assert rel < 0.05, rel
+    nxt = jnp.argmax(l16, -1)[:, None].astype(jnp.int32)
+    d16, _ = T.decode_step(cfg, params, nxt, c16, 16)
+    d8, _ = T.decode_step(cfg8, params, nxt, c8, 16)
+    rel2 = float(jnp.max(jnp.abs(d16 - d8))) / float(jnp.max(jnp.abs(d16)))
+    assert rel2 < 0.05, rel2
+    # greedy next-token agreement
+    assert jnp.array_equal(jnp.argmax(d16, -1), jnp.argmax(d8, -1))
+
+
+def test_cache_bytes_halved():
+    from repro.roofline.memtraffic import lm_capacity
+    from repro.common.configs import ShapeSpec, TrainingConfig
+
+    cfg = LMConfig(name="t", n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+                   d_ff=512, vocab_size=1000)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    sh = ShapeSpec("decode", "decode", global_batch=8, seq_len=1024)
+    t = TrainingConfig()
+    c16 = lm_capacity(cfg, sh, t, 256, 16)["kv_cache"]
+    c8 = lm_capacity(cfg8, sh, t, 256, 16)["kv_cache"]
+    assert c8 / c16 < 0.58          # 0.5 + scale overhead

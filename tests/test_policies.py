@@ -1,0 +1,106 @@
+"""Unit + property tests for the paper's Algorithm 1 and baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import (POLICY_CODES, mo_scores, mo_select,
+                                 mo_select_batch, policy_scores)
+from repro.core.profiles import ProfileTable, paper_fleet, synthetic_fleet
+
+
+@st.composite
+def profile_and_request(draw):
+    P = draw(st.integers(2, 24))
+    G = draw(st.integers(2, 6))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    T = rng.uniform(10, 500, (P, G))
+    E = rng.uniform(0.01, 0.5, (P, G))
+    mAP = rng.uniform(1, 99, (P, G))
+    g = draw(st.integers(0, G - 1))
+    q = rng.integers(0, 10, P).astype(np.float32)
+    delta = draw(st.floats(0.0, 60.0))
+    gamma = draw(st.floats(0.0, 1.0))
+    return (ProfileTable(jnp.asarray(T), jnp.asarray(E), jnp.asarray(mAP)),
+            g, jnp.asarray(q), delta, gamma)
+
+
+@settings(max_examples=60, deadline=None)
+@given(profile_and_request())
+def test_mo_select_always_feasible(case):
+    """Invariant: the selected pair always satisfies the accuracy floor."""
+    prof, g, q, delta, gamma = case
+    p, J, feasible = mo_select(prof, g, q, delta=delta, gamma=gamma)
+    thr = float(jnp.max(prof.mAP[:, g])) - delta
+    assert float(prof.mAP[int(p), g]) >= thr - 1e-6
+    assert bool(feasible[int(p)])
+
+
+@settings(max_examples=40, deadline=None)
+@given(profile_and_request())
+def test_mo_scores_normalised(case):
+    """Scores of feasible pairs lie in [0, 1] (weighted sum of min-max
+    normalised terms)."""
+    prof, g, q, delta, gamma = case
+    J, feasible = mo_scores(prof.T[:, g], prof.E[:, g], prof.mAP[:, g], q,
+                            delta=delta, gamma=gamma)
+    Jf = np.asarray(J)[np.asarray(feasible)]
+    assert (Jf >= -1e-6).all() and (Jf <= 1 + 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(profile_and_request())
+def test_delta_zero_selects_best_accuracy(case):
+    """With delta=0 only max-mAP pairs are feasible."""
+    prof, g, q, _, gamma = case
+    p, _, feasible = mo_select(prof, g, q, delta=0.0, gamma=gamma)
+    assert float(prof.mAP[int(p), g]) == pytest.approx(
+        float(jnp.max(prof.mAP[:, g])), abs=1e-5)
+
+
+def test_queue_feedback_spreads_load():
+    """A window of identical requests must not all land on one pair when a
+    fast-but-finite pair exists (expected-latency grows with queue)."""
+    prof = paper_fleet()
+    gs = jnp.full((40,), 4, jnp.int32)       # all complex scenes
+    ps, q = mo_select_batch(prof, gs, jnp.zeros(5), delta=20.0, gamma=1.0)
+    used = np.unique(np.asarray(ps))
+    assert len(used) >= 2, "queue feedback should spread load"
+    # only accuracy-feasible pairs used (n3, n4)
+    assert set(used.tolist()) <= {2, 3}
+
+
+def test_policy_scores_fixed_configs():
+    prof = paper_fleet()
+    q = jnp.zeros(5)
+    rnd = jax.random.PRNGKey(0)
+    le = policy_scores(POLICY_CODES["LE"], prof, 2, q, rnd, 0, 0.5, 20.0)
+    ha = policy_scores(POLICY_CODES["HA"], prof, 2, q, rnd, 0, 0.5, 20.0)
+    assert int(jnp.argmin(le)) == 4          # orin/ssd_v1 lowest energy
+    assert int(jnp.argmin(ha)) == 2          # aihat/yolov8s best mean mAP
+
+
+def test_rr_cycles():
+    prof = paper_fleet()
+    q = jnp.zeros(5)
+    rnd = jax.random.PRNGKey(0)
+    picks = [int(jnp.argmin(policy_scores(
+        POLICY_CODES["RR"], prof, 0, q, rnd, c, 0.5, 20.0)))
+        for c in range(10)]
+    assert picks == [0, 1, 2, 3, 4, 0, 1, 2, 3, 4]
+
+
+def test_gateway_matches_kernel():
+    """Gateway scan path == fused kernel path, bit-for-bit assignments."""
+    from repro.kernels.moscore import moscore_route
+
+    prof = synthetic_fleet(jax.random.PRNGKey(3), 17)
+    gs = jax.random.randint(jax.random.PRNGKey(4), (128,), 0, 5)
+    q0 = jnp.zeros((17,))
+    ps_ref, q_ref = mo_select_batch(prof, gs, q0, delta=15.0, gamma=0.3)
+    ps_k, q_k = moscore_route(prof.T, prof.E, prof.mAP, gs, q0,
+                              delta=15.0, gamma=0.3)
+    np.testing.assert_array_equal(np.asarray(ps_ref), np.asarray(ps_k))
+    np.testing.assert_allclose(np.asarray(q_ref), np.asarray(q_k))

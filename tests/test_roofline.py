@@ -1,0 +1,94 @@
+"""Roofline analysis machinery: HLO parsing, ring cost model, analytic
+FLOPs/memory models."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.configs import LMConfig, ShapeSpec, TrainingConfig
+from repro.roofline.analysis import (Roofline, _ring_factor,
+                                     collective_bytes, shape_bytes)
+from repro.roofline.hw import V5E
+from repro.roofline.memtraffic import cell_memory, lm_traffic
+from repro.roofline.model_flops import cell_model_flops, lm_flops
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,128]{1,0}") == 16 * 128 * 2
+    assert shape_bytes("f32[]") == 4
+    assert shape_bytes("(bf16[4,4]{1,0}, f32[2]{0})") == 32 + 8
+    assert shape_bytes("s8[10]{0}") == 10
+    assert shape_bytes("pred[8]{0}") == 8
+
+
+def test_collective_parse_iota_groups():
+    hlo = """
+  %ar.1 = f32[8,16]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+  %ag.2 = bf16[4,32]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={1}
+"""
+    out = collective_bytes(hlo)
+    ar = 8 * 16 * 4 * _ring_factor("all-reduce", 16)
+    ag = 4 * 32 * 2 * _ring_factor("all-gather", 4)
+    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["all-gather"] == pytest.approx(ag)
+    assert out["total"] == pytest.approx(ar + ag)
+
+
+def test_ring_factors():
+    assert _ring_factor("all-reduce", 2) == 1.0
+    assert _ring_factor("all-reduce", 16) == pytest.approx(2 * 15 / 16)
+    assert _ring_factor("all-gather", 1) == 0.0
+    assert _ring_factor("collective-permute", 2) == 1.0
+
+
+def test_roofline_terms_and_dominance():
+    rl = Roofline(flops_per_device=197e12, bytes_per_device=819e9 / 2,
+                  coll_bytes_per_device=50e9 * 2, chips=256)
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(0.5)
+    assert rl.t_collective == pytest.approx(2.0)
+    assert rl.dominant == "collective"
+    assert rl.step_time == pytest.approx(2.0)
+
+
+@pytest.fixture()
+def lm_cfg():
+    return LMConfig(name="t", n_layers=4, d_model=512, n_heads=8,
+                    n_kv_heads=8, d_ff=2048, vocab_size=32000)
+
+
+def test_lm_flops_scaling(lm_cfg):
+    tr = ShapeSpec("t", "train", global_batch=8, seq_len=1024)
+    pf = ShapeSpec("p", "prefill", global_batch=8, seq_len=1024)
+    f_tr = lm_flops(lm_cfg, tr)
+    f_pf = lm_flops(lm_cfg, pf)
+    # train = fwd + bwd = 3x inference matmuls
+    assert f_tr["flops_6nd"] == pytest.approx(3 * f_pf["flops_6nd"])
+    # 6ND exactly
+    assert f_tr["flops_6nd"] == pytest.approx(
+        6 * lm_cfg.n_params() * 8 * 1024)
+
+
+def test_decode_traffic_dominated_by_cache(lm_cfg):
+    dec = ShapeSpec("d", "decode", global_batch=32, seq_len=8192)
+    t = lm_traffic(lm_cfg, dec, TrainingConfig())
+    cache = 2 * 4 * 32 * 8192 * 8 * 64 * 2
+    assert t["cache_io"] == pytest.approx(cache)
+    assert t["cache_io"] > t["params_io"]
+
+
+def test_capacity_fits_flags(lm_cfg):
+    dec = ShapeSpec("d", "decode", global_batch=32, seq_len=8192)
+    m = cell_memory(lm_cfg, dec, TrainingConfig(), chips=256,
+                    param_shards=16)
+    assert m["capacity"]["total"] < V5E.hbm_bytes
+    assert set(m["traffic"]) >= {"params_io", "cache_io", "total"}
+
+
+def test_model_flops_all_families():
+    from repro import configs as C
+    for aid in C.ARCH_IDS:
+        arch = C.get(aid)
+        for sh in arch.shapes:
+            f = cell_model_flops(arch.config, sh)
+            assert f["model_flops"] > 0, (aid, sh.name)

@@ -1,0 +1,79 @@
+"""Serving runtime: gateway, executors, end-to-end engine, online
+adaptation, hierarchical balancing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import online as ONL
+from repro.core.hierarchy import hierarchical_select, pod_aggregate
+from repro.core.profiles import paper_fleet, synthetic_fleet
+from repro.serving.engine import ServingEngine
+from repro.serving.gateway import Gateway
+
+
+def test_engine_modelled_mo_beats_ha_on_latency():
+    prof = paper_fleet()
+    res = {}
+    for pol in ("MO", "HA"):
+        eng = ServingEngine.build(prof, policy=pol, n_streams=8,
+                                  mode="modelled", seed=1)
+        res[pol] = eng.summarize(eng.run(n_requests=250, concurrency=8))
+    assert res["MO"]["latency_ms"] < 0.6 * res["HA"]["latency_ms"]
+    assert res["MO"]["map"] > res["HA"]["map"] - 12
+
+
+def test_engine_real_detectors_close_the_loop():
+    """Real mode: detection counts come from actual model output and feed
+    the estimator; latency is wall-clock."""
+    prof = paper_fleet()
+    tiers = ["ssd_v1", "ssd_lite", "yolo_m", "yolo_s", "ssd_v1"]
+    eng = ServingEngine.build(prof, policy="MO", n_streams=4, mode="real",
+                              tiers=tiers, img_res=64, seed=0)
+    recs = eng.run(n_requests=40, concurrency=4)
+    s = eng.summarize(recs)
+    assert s["latency_ms"] > 0
+    assert 0.0 <= s["estimator_acc"] <= 1.0
+    assert len(np.unique(recs["pair"])) >= 2
+
+
+def test_gateway_respects_feasibility():
+    prof = paper_fleet()
+    gw = Gateway(prof, policy="MO", delta=10.0)
+    gw._stream_counts[0] = 4          # complex scene
+    pair, g = gw.route(0, np.zeros(5))
+    thr = float(jnp.max(prof.mAP[:, g])) - 10.0
+    assert float(prof.mAP[pair, g]) >= thr
+
+
+def test_online_adaptation_tracks_drift():
+    """A pair that slows 3x is learned by the EWMA and traffic shifts."""
+    prof = paper_fleet()
+    st = ONL.init_state(prof)
+    for _ in range(200):
+        st = ONL.observe(st, 0, 2, 300.0)     # n1 now 3x slower at g2
+    adapted = ONL.as_profile(st, prof)
+    assert float(adapted.T[0, 2]) > 2.0 * float(prof.T[0, 2])
+    # static table keeps stale estimate
+    gap = ONL.drift_robustness_gap(
+        prof, adapted, st)
+    assert gap["adapted_T_rms"] < gap["static_T_rms"]
+
+
+def test_hierarchical_matches_flat_when_synced():
+    """With fresh pod queues and delta=inf-ish tolerance inside the chosen
+    pod, two-level selection stays accuracy-feasible and picks inside the
+    chosen pod."""
+    prof = synthetic_fleet(jax.random.PRNGKey(0), 16)
+    pod_of = jnp.asarray([i // 8 for i in range(16)])
+    pods = pod_aggregate(prof, pod_of)
+    q = jnp.zeros(16)
+    qp = jnp.zeros(2)
+    pair, pod = hierarchical_select(prof, pods, pod_of, 3, q, qp,
+                                    delta=25.0, gamma=0.5)
+    assert int(pod_of[int(pair)]) == int(pod)
+    thr = float(jnp.max(prof.mAP[:, 3])) - 25.0
+    # within-pod feasibility (relative to the pod's own best)
+    in_pod = np.asarray(pod_of) == int(pod)
+    pod_thr = float(np.max(np.asarray(prof.mAP)[in_pod, 3])) - 25.0
+    assert float(prof.mAP[int(pair), 3]) >= pod_thr

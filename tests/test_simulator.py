@@ -1,0 +1,85 @@
+"""Simulator invariants (property-based where it pays)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import markov_transition, stationary
+from repro.core.profiles import paper_fleet, synthetic_fleet
+from repro.core.simulator import SimConfig, simulate, summarize
+
+
+def test_littles_law():
+    """Closed-loop: concurrency = throughput x mean latency (±10%)."""
+    prof = paper_fleet()
+    for users in (3, 10):
+        cfg = SimConfig(n_users=users, n_requests=2500, policy="MO")
+        recs = simulate(prof, cfg)
+        s = summarize(recs, prof, cfg)
+        n_eff = float(s["throughput_rps"] * s["latency_ms"] / 1000.0)
+        assert abs(n_eff - users) / users < 0.12, (users, n_eff)
+
+
+def test_fifo_no_overlap():
+    """Per-server: service intervals never overlap (single-server FIFO)."""
+    prof = paper_fleet()
+    cfg = SimConfig(n_users=8, n_requests=1200, policy="RND", seed=3)
+    recs = simulate(prof, cfg)
+    arr = np.asarray(recs["t_arrival"])
+    lat = np.asarray(recs["latency"])
+    srv = np.asarray(recs["server"])
+    g = np.asarray(recs["g_true"])
+    T = np.asarray(prof.T) / 1000.0
+    finish = arr + lat
+    start = finish - T[srv, g]
+    for p in range(prof.n_pairs):
+        m = srv == p
+        if m.sum() < 2:
+            continue
+        order = np.argsort(start[m])
+        s, f = start[m][order], finish[m][order]
+        assert (s[1:] >= f[:-1] - 1e-6).all(), f"overlap on server {p}"
+
+
+def test_latency_at_least_service_time():
+    prof = paper_fleet()
+    cfg = SimConfig(n_users=15, n_requests=1500)
+    recs = simulate(prof, cfg)
+    T = np.asarray(prof.T) / 1000.0
+    tmin = T[np.asarray(recs["server"]), np.asarray(recs["g_true"])]
+    # 1 ms tolerance: sim times are f32, so latency = finish - arrival
+    # cancels to ~1e-4 s granularity late in long runs
+    assert (np.asarray(recs["latency"]) >= tmin - 1e-3).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 30))
+def test_synthetic_fleet_scales(seed, n_pairs):
+    prof = synthetic_fleet(jax.random.PRNGKey(seed), n_pairs)
+    cfg = SimConfig(n_users=6, n_requests=300, policy="MO", seed=seed)
+    recs = simulate(prof, cfg)
+    s = summarize(recs, prof, cfg)
+    assert np.isfinite(s["latency_ms"]) and s["latency_ms"] > 0
+    assert 0 < s["map"] <= 100
+
+
+def test_markov_chain_is_stochastic():
+    P = np.asarray(markov_transition(5))
+    np.testing.assert_allclose(P.sum(1), 1.0, rtol=1e-6)
+    assert (P >= 0).all()
+    pi = np.asarray(stationary(markov_transition(5)))
+    np.testing.assert_allclose(pi.sum(), 1.0, rtol=1e-5)
+    assert pi[3] > pi[0]     # busy-crossing skew
+
+
+def test_estimator_tracks_under_strong_models():
+    """With an always-accurate fleet, estimator accuracy ~= chain
+    stickiness-bound; with weak fleet it degrades (the paper's dynamic)."""
+    prof = paper_fleet()
+    strong = SimConfig(n_users=5, n_requests=1500, policy="HA")
+    weak = SimConfig(n_users=5, n_requests=1500, policy="LT")
+    s_acc = summarize(simulate(prof, strong), prof, strong)["estimator_acc"]
+    w_acc = summarize(simulate(prof, weak), prof, weak)["estimator_acc"]
+    assert s_acc > w_acc
+    assert s_acc > 0.6

@@ -1,0 +1,81 @@
+"""Training substrate: optimizers, schedules, microbatching, convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.configs import TrainingConfig
+from repro.training.optimizer import make_optimizer
+from repro.training.schedule import warmup_cosine
+from repro.training.train_loop import (TrainState, clip_by_global_norm,
+                                       init_state, make_train_step)
+
+
+def _quadratic_loss(params, batch):
+    loss = jnp.sum(jnp.square(params["w"] - 3.0)) \
+        + jnp.sum(jnp.square(params["b"] + 1.0))
+    return loss, {"l": loss}
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor", "sgdm"])
+def test_optimizers_descend(opt):
+    tcfg = TrainingConfig(optimizer=opt, lr=0.1, warmup_steps=0,
+                          total_steps=1000, weight_decay=0.0, grad_clip=1e9)
+    # start at 1.0, not 0: adafactor steps are relative to RMS(param), so a
+    # zero init deliberately moves at the 1e-3 epsilon floor
+    params = {"w": jnp.ones((128, 128)), "b": jnp.ones((4,))}
+    step = make_train_step(_quadratic_loss, tcfg)
+    state = init_state(params, tcfg)
+    losses = []
+    for _ in range(60):
+        state, m = step(state, {})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.2 * losses[0], (opt, losses[0], losses[-1])
+
+
+def test_microbatch_matches_full_batch():
+    """Gradient accumulation == full-batch gradients (linear loss)."""
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        loss = jnp.mean(jnp.square(pred - batch["y"]))
+        return loss, {}
+
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (16, 8))
+    y = jax.random.normal(jax.random.fold_in(rng, 1), (16, 4))
+    params = {"w": jnp.zeros((8, 4))}
+
+    outs = {}
+    for mb in (0, 4):
+        tcfg = TrainingConfig(optimizer="sgdm", lr=0.1, warmup_steps=0,
+                              microbatch=mb, weight_decay=0.0, grad_clip=1e9)
+        st = init_state(params, tcfg)
+        st, _ = make_train_step(loss_fn, tcfg)(st, {"x": x, "y": y})
+        outs[mb] = np.asarray(st["params"]["w"])
+    # microbatched MSE means over 1/4 batch; scale-adjust then compare
+    np.testing.assert_allclose(outs[4], outs[0], rtol=1e-4, atol=1e-5)
+
+
+def test_grad_clip():
+    tree = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) > 100
+    n2 = float(jnp.linalg.norm(clipped["a"]))
+    assert n2 == pytest.approx(1.0, rel=1e-4)
+
+
+def test_warmup_cosine_shape():
+    lr0 = float(warmup_cosine(jnp.asarray(0), 1.0, 10, 100))
+    lr_w = float(warmup_cosine(jnp.asarray(10), 1.0, 10, 100))
+    lr_end = float(warmup_cosine(jnp.asarray(100), 1.0, 10, 100))
+    assert lr0 == pytest.approx(0.0)
+    assert lr_w == pytest.approx(1.0)
+    assert lr_end == pytest.approx(0.1, rel=1e-3)
+
+
+def test_lm_training_loss_decreases():
+    """A few dozen steps on the reduced LM must show real learning."""
+    from repro.launch.train import train
+    _, losses = train("stablelm-3b", reduced=True, steps=40, log_every=5)
+    assert losses[-1] < losses[0] - 0.3, losses
