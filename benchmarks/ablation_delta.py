@@ -4,32 +4,40 @@
       the operator): sweeps the full latency/energy/accuracy frontier;
   (b) the output-based estimator vs an oracle (g_est == g_true): quantifies
       how much accuracy the paper's zero-cost estimator gives up.
-"""
 
-from dataclasses import replace
+Both ablations share ONE batched device program: the Δ × {output-based,
+oracle} grid is a single ``sweep_grid`` call instead of eight separate
+simulator runs."""
 
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import SimConfig, simulate, summarize
+from repro.core.simulator import sweep_grid
 
-
-def _run(prof, **kw):
-    cfg = SimConfig(n_users=15, n_requests=1500, policy="MO", **kw)
-    recs = simulate(prof, cfg)
-    return {k: float(v) for k, v in summarize(recs, prof, cfg).items()}
+DELTAS = (0.0, 5.0, 10.0, 20.0, 30.0, 45.0)
 
 
 def run() -> list[str]:
     prof = paper_fleet()
+    grid = sweep_grid(prof, policies=("MO",), user_levels=(15,),
+                      deltas=DELTAS, oracle=(False, True), seeds=(0,),
+                      n_requests=1500)
+
+    def at(metric, di, oi):
+        # (policy, users, gamma, delta, oracle, seed)
+        return float(grid[metric][0, 0, 0, di, oi, 0])
+
     rows = ["ablation.delta,latency_ms,energy_mwh,map,estimator_acc"]
-    for delta in (0.0, 5.0, 10.0, 20.0, 30.0, 45.0):
-        r = _run(prof, delta=delta)
-        rows.append(f"ablation.delta_{int(delta)},{r['latency_ms']:.0f},"
-                    f"{r['energy_mwh']:.4f},{r['map']:.1f},"
-                    f"{r['estimator_acc']:.3f}")
-    # estimator ablation at the headline operating point
-    for name, oracle in (("output_based", False), ("oracle", True)):
-        r = _run(prof, delta=20.0, oracle_estimator=oracle)
-        rows.append(f"ablation.estimator_{name},{r['latency_ms']:.0f},"
-                    f"{r['energy_mwh']:.4f},{r['map']:.1f},"
-                    f"{r['estimator_acc']:.3f}")
+    for di, delta in enumerate(DELTAS):
+        rows.append(f"ablation.delta_{int(delta)},"
+                    f"{at('latency_ms', di, 0):.0f},"
+                    f"{at('energy_mwh', di, 0):.4f},"
+                    f"{at('map', di, 0):.1f},"
+                    f"{at('estimator_acc', di, 0):.3f}")
+    # estimator ablation at the headline operating point (delta = 20)
+    d20 = DELTAS.index(20.0)
+    for name, oi in (("output_based", 0), ("oracle", 1)):
+        rows.append(f"ablation.estimator_{name},"
+                    f"{at('latency_ms', d20, oi):.0f},"
+                    f"{at('energy_mwh', d20, oi):.4f},"
+                    f"{at('map', d20, oi):.1f},"
+                    f"{at('estimator_acc', d20, oi):.3f}")
     return rows

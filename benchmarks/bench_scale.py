@@ -6,12 +6,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.hierarchy import hierarchical_select, pod_aggregate
 from repro.core.policies import mo_select
-from repro.core.profiles import synthetic_fleet
-from repro.core.simulator import SimConfig, simulate, summarize
+from repro.core.profiles import paper_fleet, synthetic_fleet
+from repro.core.simulator import SimConfig, simulate, summarize, sweep_grid
 from repro.kernels.moscore import moscore_route
 
 
@@ -52,4 +51,21 @@ def run() -> list[str]:
         prof, pods, pod_of, 3, q, qp, delta=20.0, gamma=0.5)[0])
     t_h = _time_us(h, jnp.zeros(256), jnp.zeros(8))
     rows.append(f"scale.hierarchical_256p_us,{t_h:.1f},,,")
+
+    # batched sweep engine: a 63-config Fig.4-style grid (7 policies x 3
+    # user levels x 3 seeds) as ONE fused device program. cold = trace +
+    # compile + run; warm = cached-trace rerun plus the host-side grid
+    # build (make_grid's per-config init draws) — the steady-state
+    # end-to-end cost the CI regression gate watches.
+    fleet = paper_fleet()
+    kw = dict(policies=("MO", "RR", "RND", "LC", "LE", "LT", "HA"),
+              user_levels=(5, 10, 15), seeds=(0, 1, 2), n_requests=400)
+    t0 = time.perf_counter()
+    sweep_grid(fleet, **kw)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep_grid(fleet, **kw)
+    t_warm = time.perf_counter() - t0
+    rows.append(f"scale.batched_sweep_63cfg_cold_s,{t_cold:.2f},,,")
+    rows.append(f"scale.batched_sweep_63cfg_warm_s,{t_warm:.2f},,,")
     return rows

@@ -1,7 +1,6 @@
 """Fig. 2: accuracy / energy / inference-time trade-offs across models for
 simple vs complex scenes (the motivation experiment)."""
 
-import numpy as np
 
 from repro.core.profiles import paper_fleet
 

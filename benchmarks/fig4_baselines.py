@@ -1,10 +1,12 @@
 """Fig. 4: all seven policies across concurrency levels, 3 seeds each
-(the paper's main comparison)."""
+(the paper's main comparison). The whole policy × users × seed grid runs
+as ONE batched device program via ``sweep_grid`` — a single jitted
+vmap(simulate + summarize) instead of one trace per configuration."""
 
 import numpy as np
 
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep
+from repro.core.simulator import sweep_grid
 
 POLICIES = ["MO", "RR", "RND", "LC", "LE", "LT", "HA"]
 USERS = [1, 3, 5, 7, 9, 11, 13, 15]
@@ -14,21 +16,26 @@ METRICS = ["latency_ms", "latency_p90_ms", "throughput_rps", "energy_mwh",
 
 def run(n_requests: int = 1500, seeds=(0, 1, 2)) -> list[str]:
     prof = paper_fleet()
-    res = sweep(prof, POLICIES, USERS, n_requests=n_requests, seeds=seeds)
+    grid = sweep_grid(prof, policies=POLICIES, user_levels=USERS,
+                      seeds=seeds, n_requests=n_requests)
+    # (policy, users, gamma, delta, oracle, seed) -> mean over seeds
+    res = {k: np.mean(v[:, :, 0, 0, 0, :], axis=-1)
+           for k, v in grid.items()}
     rows = ["fig4.policy,users," + ",".join(METRICS)]
-    for pol in POLICIES:
-        for i, u in enumerate(USERS):
-            vals = ",".join(f"{res[pol][m][i]:.3f}" for m in METRICS)
+    for i, pol in enumerate(POLICIES):
+        for j, u in enumerate(USERS):
+            vals = ",".join(f"{res[m][i, j]:.3f}" for m in METRICS)
             rows.append(f"fig4.{pol},{u},{vals}")
     # headline ratios at 15 users (paper §IV-C)
-    i15 = USERS.index(15)
-    mo, ha, lt, le = (res[p] for p in ("MO", "HA", "LT", "LE"))
+    j15 = USERS.index(15)
+    mo, ha, lt = (POLICIES.index(p) for p in ("MO", "HA", "LT"))
+    lat, en, mp = res["latency_ms"], res["energy_mwh"], res["map"]
     rows.append(f"fig4.headline_mo_vs_ha_latency,15,"
-                f"{mo['latency_ms'][i15] / ha['latency_ms'][i15]:.3f},,,,")
+                f"{lat[mo, j15] / lat[ha, j15]:.3f},,,,")
     rows.append(f"fig4.headline_mo_vs_ha_energy,15,"
-                f"{mo['energy_mwh'][i15] / ha['energy_mwh'][i15]:.3f},,,,")
+                f"{en[mo, j15] / en[ha, j15]:.3f},,,,")
     rows.append(f"fig4.headline_map_gap_pct,15,"
-                f"{100 * (ha['map'][i15] - mo['map'][i15]) / ha['map'][i15]:.2f},,,,")
+                f"{100 * (mp[ha, j15] - mp[mo, j15]) / mp[ha, j15]:.2f},,,,")
     rows.append(f"fig4.headline_mo_vs_lt_latency,15,"
-                f"{mo['latency_ms'][i15] / lt['latency_ms'][i15]:.3f},,,,")
+                f"{lat[mo, j15] / lat[lt, j15]:.3f},,,,")
     return rows

@@ -1,7 +1,11 @@
-"""Fig. 5: the gamma sweep (MO_gamma_{0,25,50,75,1})."""
+"""Fig. 5: the gamma sweep (MO_gamma_{0,25,50,75,1}). All gammas × user
+levels × seeds run as ONE batched device program via ``sweep_grid``
+(previously one ``sweep`` per gamma, each a Python loop of jits)."""
+
+import numpy as np
 
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep
+from repro.core.simulator import sweep_grid
 
 GAMMAS = [0.0, 0.25, 0.5, 0.75, 1.0]
 USERS = [1, 5, 10, 15]
@@ -11,11 +15,14 @@ METRICS = ["latency_ms", "latency_p90_ms", "throughput_rps", "energy_mwh",
 
 def run(n_requests: int = 1500, seeds=(0, 1)) -> list[str]:
     prof = paper_fleet()
+    grid = sweep_grid(prof, policies=("MO",), user_levels=USERS,
+                      gammas=GAMMAS, seeds=seeds, n_requests=n_requests)
+    # (policy, users, gamma, delta, oracle, seed) -> mean over seeds
+    res = {k: np.mean(v[0, :, :, 0, 0, :], axis=-1)
+           for k, v in grid.items()}
     rows = ["fig5.gamma,users," + ",".join(METRICS)]
-    for g in GAMMAS:
-        res = sweep(prof, ["MO"], USERS, n_requests=n_requests, gamma=g,
-                    seeds=seeds)["MO"]
-        for i, u in enumerate(USERS):
-            vals = ",".join(f"{res[m][i]:.3f}" for m in METRICS)
+    for gi, g in enumerate(GAMMAS):
+        for ui, u in enumerate(USERS):
+            vals = ",".join(f"{res[m][ui, gi]:.3f}" for m in METRICS)
             rows.append(f"fig5.MO_gamma_{int(g * 100)},{u},{vals}")
     return rows

@@ -1,10 +1,32 @@
 """Benchmark harness: one module per paper table/figure + kernels +
 roofline. Prints CSV: name,<columns...>.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only SUITE]
+                                          [--json PATH]
+
+Running benchmarks / CI
+-----------------------
+``--fast`` shrinks seeds/requests to CI size. ``--json PATH`` additionally
+writes a ``BENCH_*.json``-style artifact: per-suite CSV rows plus
+wall-clock seconds (``suites.<name>.seconds``) and environment metadata —
+the format ``scripts/check_bench.py`` validates and diffs against the
+committed baseline (``benchmarks/bench_baseline.json``), failing on >20%
+slowdown per suite. The GitHub workflow (``.github/workflows/ci.yml``)
+runs three jobs: ruff lint, the tier-1 pytest suite, and this runner in
+``--fast --json`` mode, uploading the JSON as a build artifact so every
+commit leaves a benchmark trajectory point:
+
+  PYTHONPATH=src python -m benchmarks.run --fast --json bench.json
+  python scripts/check_bench.py bench.json benchmarks/bench_baseline.json
+
+The sweep suites (fig4/fig5/ablation/scale) run on the batched engine
+(``repro.core.simulator.sweep_grid``): each grid is ONE jitted
+vmap(simulate + summarize) device program, so a full Fig. 4 sweep costs
+one compile + one launch instead of ~150.
 """
 
 import argparse
+import json
 import sys
 import time
 
@@ -14,6 +36,9 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="fewer seeds/requests (CI mode)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write a JSON artifact (per-suite rows + "
+                         "wall-clock) for CI / scripts/check_bench.py")
     args = ap.parse_args()
 
     from benchmarks import (ablation_delta, bench_kernels, bench_scale,
@@ -35,18 +60,49 @@ def main() -> None:
         "roofline": lambda: roofline_summary.run(),
     }
     if args.only:
-        suites = {k: v for k, v in suites.items() if k == args.only}
+        if args.only not in suites:
+            sys.exit(f"benchmarks.run: unknown suite {args.only!r} "
+                     f"(choose from: {', '.join(suites)})")
+        suites = {args.only: suites[args.only]}
 
+    report: dict[str, dict] = {}
     for name, fn in suites.items():
         t0 = time.time()
+        err = None
         try:
             rows = fn()
         except Exception as e:  # noqa: BLE001
-            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
-            continue
+            err = f"{type(e).__name__}: {e}"
+            rows = []
+            print(f"{name},ERROR,{err}", flush=True)
+        seconds = time.time() - t0
         for row in rows:
             print(row, flush=True)
-        print(f"bench.{name}.seconds,{time.time() - t0:.1f}", flush=True)
+        print(f"bench.{name}.seconds,{seconds:.1f}", flush=True)
+        report[name] = {"rows": rows, "seconds": round(seconds, 3),
+                        "error": err}
+
+    if args.json:
+        import jax
+
+        artifact = {
+            "schema": "repro-bench/v1",
+            "fast": bool(args.fast),
+            "created_unix": round(time.time(), 1),
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "suites": report,
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"bench.artifact,{args.json}", flush=True)
+
+    # a crashed suite fails the run (CI's bench job is only allow-failure
+    # on the *timing* gate, not on the benchmarks themselves)
+    errored = [k for k, v in report.items() if v["error"]]
+    if errored:
+        print(f"bench.errored,{';'.join(errored)}", flush=True)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

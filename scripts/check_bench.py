@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Validate a benchmark JSON artifact and gate on wall-clock regressions.
+
+  python scripts/check_bench.py NEW.json [BASELINE.json]
+         [--threshold 0.20] [--min-abs 0.5]
+
+Always validates NEW.json against the ``repro-bench/v1`` schema emitted by
+``benchmarks/run.py --json`` (suites present, no suite errors, numeric
+``seconds``). With a baseline, additionally fails when any suite's
+``bench.<name>.seconds`` regressed by more than ``--threshold`` (relative,
+default 20%) AND more than ``--min-abs`` seconds (absolute floor so
+sub-second suites don't flap on scheduler noise).
+
+Exit code 0 = artifact valid and within budget; 1 = invalid or regressed.
+Wired into CI's bench job as an allow-failure step until runner timing
+baselines stabilise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "repro-bench/v1"
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def validate(art: dict, label: str) -> list[str]:
+    errs = []
+    if art.get("schema") != SCHEMA:
+        errs.append(f"{label}: schema is {art.get('schema')!r}, "
+                    f"expected {SCHEMA!r}")
+        return errs
+    suites = art.get("suites")
+    if not isinstance(suites, dict) or not suites:
+        errs.append(f"{label}: no suites recorded")
+        return errs
+    for name, s in suites.items():
+        if s.get("error"):
+            errs.append(f"{label}: suite {name} errored: {s['error']}")
+        if not isinstance(s.get("seconds"), (int, float)):
+            errs.append(f"{label}: suite {name} has no numeric seconds")
+        if not s.get("error") and not s.get("rows"):
+            errs.append(f"{label}: suite {name} produced no rows")
+    return errs
+
+
+def compare(new: dict, base: dict, threshold: float,
+            min_abs: float) -> list[str]:
+    errs = []
+    for key in ("fast", "backend"):
+        if key in new and key in base and new[key] != base[key]:
+            errs.append(f"artifacts not comparable: {key} is "
+                        f"{new[key]!r} (new) vs {base[key]!r} (baseline)")
+    if errs:
+        return errs
+    for name, b in base["suites"].items():
+        n = new["suites"].get(name)
+        if n is None:
+            errs.append(f"suite {name} present in baseline but missing "
+                        f"from new run")
+            continue
+        t_new, t_base = n["seconds"], b["seconds"]
+        if t_new > t_base * (1 + threshold) and t_new - t_base > min_abs:
+            errs.append(f"bench.{name}.seconds regressed: "
+                        f"{t_base:.2f}s -> {t_new:.2f}s "
+                        f"(+{100 * (t_new / max(t_base, 1e-9) - 1):.0f}%, "
+                        f"threshold {100 * threshold:.0f}%)")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh artifact from benchmarks.run --json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="committed baseline to diff against")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max relative slowdown per suite (default 0.20)")
+    ap.add_argument("--min-abs", type=float, default=0.5,
+                    help="ignore regressions smaller than this many "
+                         "seconds (default 0.5)")
+    args = ap.parse_args(argv)
+
+    try:
+        new = load(args.new)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: FAIL: cannot read {args.new}: {e}")
+        return 1
+    errs = validate(new, "new")
+    if args.baseline and not errs:
+        try:
+            base = load(args.baseline)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"check_bench: FAIL: cannot read {args.baseline}: {e}")
+            return 1
+        errs += validate(base, "baseline")
+        if not errs:
+            errs += compare(new, base, args.threshold, args.min_abs)
+
+    for e in errs:
+        print(f"check_bench: FAIL: {e}")
+    if not errs:
+        n = len(new["suites"])
+        total = sum(s["seconds"] for s in new["suites"].values())
+        print(f"check_bench: OK: {n} suites, {total:.1f}s total"
+              + (", within budget of baseline" if args.baseline else ""))
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,7 +4,6 @@ longer than the device->host copy."""
 
 from __future__ import annotations
 
-import threading
 from concurrent.futures import ThreadPoolExecutor, Future
 
 import jax

@@ -8,7 +8,7 @@ they can be closed over by jitted step functions without retracing hazards.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Mapping
 
 

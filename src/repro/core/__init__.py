@@ -6,11 +6,16 @@ from repro.core.profiles import ProfileTable, paper_fleet, synthetic_fleet
 from repro.core.policies import (POLICY_CODES, mo_select, mo_select_batch,
                                  policy_scores)
 from repro.core.estimator import group_of_count, noisy_detected_count
-from repro.core.simulator import SimConfig, simulate, summarize
+from repro.core.simulator import (ConfigGrid, SimConfig, make_grid,
+                                  run_policy, simulate, simulate_batch,
+                                  summarize, summarize_batch, sweep,
+                                  sweep_grid)
 
 __all__ = [
     "ProfileTable", "paper_fleet", "synthetic_fleet",
     "POLICY_CODES", "mo_select", "mo_select_batch", "policy_scores",
     "group_of_count", "noisy_detected_count",
-    "SimConfig", "simulate", "summarize",
+    "ConfigGrid", "SimConfig", "make_grid", "run_policy",
+    "simulate", "simulate_batch", "summarize", "summarize_batch",
+    "sweep", "sweep_grid",
 ]

@@ -15,9 +15,7 @@ Staleness of the level-1 queue snapshot is the price of decentralisation;
 
 from __future__ import annotations
 
-from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.policies import mo_scores

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 f32 = jnp.float32
 

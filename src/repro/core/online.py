@@ -9,9 +9,7 @@ jitted gateway and the simulator."""
 
 from __future__ import annotations
 
-from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.profiles import ProfileTable

@@ -13,8 +13,6 @@ Algorithm 1) and in a queue-feedback batched form (:func:`mo_select_batch`,
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

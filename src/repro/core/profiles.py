@@ -7,8 +7,7 @@ for scale tests, and (c) roofline-derived TPU serving cells
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

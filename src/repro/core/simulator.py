@@ -3,10 +3,22 @@
 request in flight; the next request of a stream is issued when the previous
 response returns).
 
-Implemented as one ``lax.scan`` over dispatch events, so a full concurrency
-sweep across all seven policies jits once and runs in milliseconds — the
-property that lets the benchmarks sweep thousands of configurations and the
-tests assert the paper's orderings statistically.
+Implemented as one ``lax.scan`` over dispatch events whose per-config
+parameters (policy code, γ, Δ, stickiness, RNG state) are *traced*
+arguments, so an entire Fig. 4-style grid — policy × concurrency × γ ×
+seed — runs as ONE ``jax.vmap``-ped scan inside ONE jit
+(:func:`simulate_batch` / :func:`sweep_grid`): a single device program
+instead of one trace + launch per configuration. Differing concurrency
+levels share the trace by padding users to ``n_users_max`` and masking the
+padded streams to ``t = +inf`` so they never dispatch.
+
+Bit-exactness across batching: jax's threefry draws are not prefix-stable
+across shapes (the first U samples of a ``(U_max,)`` draw differ from a
+``(U,)`` draw), so the initial per-user complexity states are drawn
+per-config at grid-build time (:func:`make_grid`) with each config's own
+``n_users`` shape and passed into the scan as data. Every other draw in
+the loop is shape-independent, which makes a padded batched run reproduce
+each config's unpadded trajectory exactly.
 
 Faithfulness notes:
   * service time / energy / accuracy are drawn from ``ProfileTable`` at the
@@ -20,7 +32,10 @@ Faithfulness notes:
 
 from __future__ import annotations
 
+import functools
+import itertools
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -49,21 +64,96 @@ class SimConfig:
                                      # complexity knowledge; benchmarks)
 
 
-def simulate(prof: ProfileTable, cfg: SimConfig):
-    """Returns a dict of per-request record arrays (length n_requests)."""
+class ConfigGrid(NamedTuple):
+    """Struct-of-arrays batch of simulator configs — the traced leaves of a
+    ``SimConfig``. All fields have leading dim (B,); ``rng`` is the (B, 2)
+    uint32 scan key and ``true0`` the (B, n_users_max) initial true object
+    counts, both drawn host-side per config (see module docstring).
+    ``simulate`` also uses it batch-less (scalar leaves, (U,) true0) so
+    single and vmapped paths share one by-name field access path."""
+
+    policy_code: jax.Array      # (B,) int32 index into POLICY_CODES
+    n_users: jax.Array          # (B,) int32 live concurrency (<= n_users_max)
+    gamma: jax.Array            # (B,) float32
+    delta: jax.Array            # (B,) float32
+    stickiness: jax.Array       # (B,) float32
+    oracle: jax.Array           # (B,) bool   g_est = g_true ablation
+    rng: jax.Array              # (B, 2) uint32
+    true0: jax.Array            # (B, n_users_max) int32
+
+    @property
+    def n_configs(self) -> int:
+        return int(self.policy_code.shape[0]) if self.policy_code.ndim \
+            else 1
+
+    @property
+    def n_users_max(self) -> int:
+        return int(self.true0.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "n_users"))
+def _init_draws(seed, stickiness, *, n_groups: int, n_users: int):
+    """Initial user states + scan key for one config, with the config's own
+    ``n_users``-shaped categorical draw (the shape-sensitive part)."""
+    P_trans = EST.markov_transition(n_groups, stickiness)
+    rng = jax.random.PRNGKey(seed)
+    k_init, rng = jax.random.split(rng)
+    pi0 = EST.stationary(P_trans)
+    true0 = jax.random.categorical(k_init, jnp.log(pi0 + 1e-9),
+                                   shape=(n_users,))
+    return true0.astype(i32), rng
+
+
+def make_grid(prof: ProfileTable, configs,
+              n_users_max: int | None = None) -> ConfigGrid:
+    """Pack an iterable of ``SimConfig`` into a padded ``ConfigGrid``.
+
+    ``n_requests``/``warmup_frac`` are scan-shape parameters, not grid
+    leaves — all configs in one batch must agree on them (they are passed
+    separately to :func:`simulate_batch` / :func:`summarize_batch`)."""
+    cfgs = list(configs)
+    if not cfgs:
+        raise ValueError("empty config grid")
+    if len({(c.n_requests, c.warmup_frac) for c in cfgs}) > 1:
+        raise ValueError(
+            "configs in one grid must agree on n_requests/warmup_frac "
+            "(they are scan-shape parameters, passed separately to "
+            "simulate_batch/summarize_batch)")
+    U = max(c.n_users for c in cfgs) if n_users_max is None else n_users_max
+    true0 = np.zeros((len(cfgs), U), np.int32)
+    rngs = np.zeros((len(cfgs), 2), np.uint32)
+    for i, c in enumerate(cfgs):
+        t0, r = _init_draws(c.seed, c.stickiness,
+                            n_groups=prof.n_groups, n_users=c.n_users)
+        true0[i, :c.n_users] = np.asarray(t0)
+        rngs[i] = np.asarray(r)
+    return ConfigGrid(
+        policy_code=jnp.asarray([POLICY_CODES[c.policy] for c in cfgs], i32),
+        n_users=jnp.asarray([c.n_users for c in cfgs], i32),
+        gamma=jnp.asarray([c.gamma for c in cfgs], f32),
+        delta=jnp.asarray([c.delta for c in cfgs], f32),
+        stickiness=jnp.asarray([c.stickiness for c in cfgs], f32),
+        oracle=jnp.asarray([c.oracle_estimator for c in cfgs], bool),
+        rng=jnp.asarray(rngs),
+        true0=jnp.asarray(true0),
+    )
+
+
+def _simulate_core(prof: ProfileTable, policy_code, n_users, gamma, delta,
+                   oracle, stickiness, rng, true0, *, n_requests: int):
+    """Trace body shared by the single and batched paths. Every config
+    parameter is a traced array; the only static shapes are ``n_requests``
+    (scan length) and ``true0``'s length (``n_users_max``). Padded users
+    (index >= n_users) sit at ``t_next = +inf`` and never dispatch."""
     P = prof.n_pairs
     G = prof.n_groups
-    U = cfg.n_users
-    code = POLICY_CODES[cfg.policy]
-    P_trans = EST.markov_transition(G, cfg.stickiness)
-    rng = jax.random.PRNGKey(cfg.seed)
-    k_init, rng = jax.random.split(rng)
-
-    pi0 = EST.stationary(P_trans)
-    true0 = jax.random.categorical(k_init, jnp.log(pi0 + 1e-9), shape=(U,))
+    U = true0.shape[0]
+    code = jnp.asarray(policy_code, i32)
+    P_trans = EST.markov_transition(G, stickiness)
+    mask = jnp.arange(U) < n_users
 
     carry = {
-        "t_next": jnp.arange(U, dtype=f32) * 1e-4,
+        "t_next": jnp.where(mask, jnp.arange(U, dtype=f32) * 1e-4, jnp.inf),
         "true_cnt": true0.astype(i32),
         "est_cnt": true0.astype(i32),
         "server_by_user": jnp.full((U,), -1, i32),
@@ -73,8 +163,9 @@ def simulate(prof: ProfileTable, cfg: SimConfig):
         "rng": rng,
     }
 
-    gamma = jnp.asarray(cfg.gamma, f32)
-    delta = jnp.asarray(cfg.delta, f32)
+    gamma = jnp.asarray(gamma, f32)
+    delta = jnp.asarray(delta, f32)
+    oracle = jnp.asarray(oracle, bool)
 
     def step(c, _):
         u = jnp.argmin(c["t_next"])
@@ -83,8 +174,8 @@ def simulate(prof: ProfileTable, cfg: SimConfig):
 
         new_true = EST.markov_step(k1, c["true_cnt"][u][None], P_trans)[0]
         g_true = EST.group_of_count(new_true, G)
-        g_est = g_true if cfg.oracle_estimator \
-            else EST.group_of_count(c["est_cnt"][u], G)
+        g_est = jnp.where(oracle, g_true,
+                          EST.group_of_count(c["est_cnt"][u], G))
 
         active = (c["finish_by_user"] > t) & (c["server_by_user"] >= 0)
         q = jnp.zeros((P,), f32).at[c["server_by_user"]].add(
@@ -123,17 +214,74 @@ def simulate(prof: ProfileTable, cfg: SimConfig):
         }
         return nc, rec
 
-    _, recs = jax.lax.scan(step, carry, None, length=cfg.n_requests)
+    _, recs = jax.lax.scan(step, carry, None, length=n_requests)
     return recs
 
 
-def summarize(recs, prof: ProfileTable, cfg: SimConfig):
-    """Aggregate a record set into the paper's Fig. 4/5 metrics."""
+def _simulate_config(prof, g: ConfigGrid, *, n_requests: int):
+    """One config (scalar ConfigGrid leaves) -> record arrays; fields are
+    accessed by name so batched and single paths can't transpose leaves."""
+    return _simulate_core(prof, g.policy_code, g.n_users, g.gamma, g.delta,
+                          g.oracle, g.stickiness, g.rng, g.true0,
+                          n_requests=n_requests)
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests",))
+def _simulate_one(prof, g: ConfigGrid, *, n_requests: int):
+    return _simulate_config(prof, g, n_requests=n_requests)
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests",))
+def _simulate_vmapped(prof, grid: ConfigGrid, *, n_requests: int):
+    return jax.vmap(
+        lambda g: _simulate_config(prof, g, n_requests=n_requests))(grid)
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests", "warmup"))
+def _sweep_fused(prof, grid: ConfigGrid, *, n_requests: int, warmup: int):
+    """simulate + summarize for every config, fused into one program so a
+    sweep returns (B,) metric vectors without materialising (B, N) records
+    on the host."""
+
+    def one(g):
+        recs = _simulate_config(prof, g, n_requests=n_requests)
+        return _summarize_core(recs, prof, warmup)
+
+    return jax.vmap(one)(grid)
+
+
+def simulate(prof: ProfileTable, cfg: SimConfig):
+    """Returns a dict of per-request record arrays (length n_requests)."""
+    true0, rng = _init_draws(cfg.seed, cfg.stickiness,
+                             n_groups=prof.n_groups, n_users=cfg.n_users)
+    g = ConfigGrid(
+        policy_code=jnp.asarray(POLICY_CODES[cfg.policy], i32),
+        n_users=jnp.asarray(cfg.n_users, i32),
+        gamma=jnp.asarray(cfg.gamma, f32),
+        delta=jnp.asarray(cfg.delta, f32),
+        stickiness=jnp.asarray(cfg.stickiness, f32),
+        oracle=jnp.asarray(cfg.oracle_estimator, bool),
+        rng=rng, true0=true0)
+    return _simulate_one(prof, g, n_requests=cfg.n_requests)
+
+
+def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int):
+    """Run every config in ``grid`` as ONE vmapped scan in ONE jit.
+
+    ``n_requests`` is required (no default) and must match the configs the
+    grid was built from — the grid carries only traced leaves, not scan
+    shapes. Returns record arrays with leading dims (B, n_requests); row b
+    is bit-identical to ``simulate(prof, cfg_b)`` for the matching
+    config."""
+    return _simulate_vmapped(prof, grid, n_requests=n_requests)
+
+
+def _summarize_core(recs, prof: ProfileTable, warmup: int):
     n = recs["latency"].shape[0]
-    w = int(n * cfg.warmup_frac)
-    sl = {k: v[w:] for k, v in recs.items()}
-    makespan = jnp.max(sl["t_arrival"] + sl["latency"]) - jnp.min(sl["t_arrival"])
-    n_eff = n - w
+    sl = {k: v[warmup:] for k, v in recs.items()}
+    makespan = jnp.max(sl["t_arrival"] + sl["latency"]) \
+        - jnp.min(sl["t_arrival"])
+    n_eff = n - warmup
     floor = prof.floor_mw if prof.floor_mw is not None \
         else jnp.zeros((prof.n_pairs,))
     floor_mwh = jnp.sum(floor) * makespan / 3600.0
@@ -149,6 +297,18 @@ def summarize(recs, prof: ProfileTable, cfg: SimConfig):
     }
 
 
+def summarize(recs, prof: ProfileTable, cfg: SimConfig):
+    """Aggregate a record set into the paper's Fig. 4/5 metrics."""
+    n = recs["latency"].shape[0]
+    return _summarize_core(recs, prof, int(n * cfg.warmup_frac))
+
+
+@functools.partial(jax.jit, static_argnames=("warmup",))
+def summarize_batch(recs, prof: ProfileTable, *, warmup: int):
+    """Batched :func:`summarize` over (B, n_requests) record arrays."""
+    return jax.vmap(lambda r: _summarize_core(r, prof, warmup))(recs)
+
+
 def run_policy(prof: ProfileTable, policy: str, n_users: int,
                n_requests: int = 2000, gamma: float = 0.5,
                delta: float = 20.0, seed: int = 0, stickiness: float = 0.85):
@@ -160,17 +320,47 @@ def run_policy(prof: ProfileTable, policy: str, n_users: int,
     return {k: float(v) for k, v in out.items()}
 
 
+SWEEP_AXES = ("policy", "users", "gamma", "delta", "oracle", "seed")
+
+
+def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
+               gammas=(0.5,), deltas=(20.0,), oracle=(False,),
+               seeds=(0, 1, 2), n_requests: int = 2000,
+               stickiness: float = 0.85, warmup_frac: float = 0.1):
+    """Cartesian-product sweep as a single fused device program.
+
+    Returns ``{metric: ndarray}`` with shape ``(len(policies),
+    len(user_levels), len(gammas), len(deltas), len(oracle), len(seeds))``
+    — axis order as in :data:`SWEEP_AXES`. The whole grid is one
+    ``vmap(simulate + summarize)`` under one jit; the trace is cached
+    across calls with the same batch size and scan length."""
+    combos = list(itertools.product(policies, user_levels, gammas, deltas,
+                                    oracle, seeds))
+    cfgs = [SimConfig(n_users=nu, n_requests=n_requests, policy=pol,
+                      gamma=ga, delta=de, stickiness=stickiness, seed=sd,
+                      warmup_frac=warmup_frac, oracle_estimator=orc)
+            for pol, nu, ga, de, orc, sd in combos]
+    grid = make_grid(prof, cfgs)
+    out = _sweep_fused(prof, grid, n_requests=n_requests,
+                       warmup=int(n_requests * warmup_frac))
+    shape = (len(policies), len(user_levels), len(gammas), len(deltas),
+             len(oracle), len(seeds))
+    return {k: np.asarray(v, np.float64).reshape(shape)
+            for k, v in out.items()}
+
+
 def sweep(prof: ProfileTable, policies, user_levels, n_requests: int = 2000,
           gamma: float = 0.5, delta: float = 20.0, seeds=(0, 1, 2)):
     """Full Fig. 4-style sweep; returns {policy: {metric: [per-level mean]}}.
-    Each configuration runs ``len(seeds)`` times (paper: 3 repetitions)."""
+    Each configuration runs ``len(seeds)`` times (paper: 3 repetitions).
+    The entire policies × user_levels × seeds grid executes as one batched
+    device program (:func:`sweep_grid`)."""
+    m = sweep_grid(prof, policies=policies, user_levels=user_levels,
+                   gammas=(gamma,), deltas=(delta,), seeds=seeds,
+                   n_requests=n_requests)
     out: dict[str, dict[str, list[float]]] = {}
-    for pol in policies:
-        out[pol] = {}
-        for nu in user_levels:
-            vals = [run_policy(prof, pol, nu, n_requests, gamma, delta, s)
-                    for s in seeds]
-            for k in vals[0]:
-                out[pol].setdefault(k, []).append(
-                    float(np.mean([v[k] for v in vals])))
+    for i, pol in enumerate(policies):
+        out[pol] = {k: [float(np.mean(v[i, j, 0, 0, 0, :]))
+                        for j in range(len(user_levels))]
+                    for k, v in m.items()}
     return out

@@ -7,8 +7,6 @@ global array (``jax.make_array_from_single_device_arrays``)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def device_put_sharded_batch(batch, sharding):
@@ -28,7 +26,6 @@ def device_put_sharded_batch(batch, sharding):
 
 def prefetch(iterator, size: int = 2):
     """Simple software pipeline: keep ``size`` batches in flight."""
-    import collections
     import threading
     import queue as q
 

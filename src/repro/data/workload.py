@@ -5,7 +5,7 @@ YOLOv8x-as-reference protocol with an exactly-known reference)."""
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

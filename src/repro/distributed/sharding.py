@@ -13,7 +13,7 @@ Physical mesh axes:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Any, Mapping, Sequence
 
 import jax

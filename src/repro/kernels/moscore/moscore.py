@@ -47,7 +47,9 @@ def _moscore_kernel(tg_ref, eg_ref, mg_ref, g_ref, q0_ref, out_ref, qf_ref,
         J = jnp.where(feasible, gamma * Ln + (1.0 - gamma) * En, BIG)
 
         sel = jnp.argmin(J[0]).astype(jnp.int32)
-        pl.store(out_ref, (w, 0), sel)
+        # index with a traced scalar, not a python int: older jax pallas
+        # rejects raw ints in store indexers
+        pl.store(out_ref, (w, jnp.asarray(0, jnp.int32)), sel)
         onehot = (jax.lax.broadcasted_iota(jnp.int32, (1, p), 1) == sel)
         return q + onehot.astype(q.dtype)
 

@@ -7,8 +7,28 @@ sets ``xla_force_host_platform_device_count``.
 
 from __future__ import annotations
 
+import math
+
 import jax
-from jax.sharding import AxisType, Mesh
+import numpy as np
+from jax.sharding import Mesh
+
+try:                                   # jax >= 0.5: explicit-axis-type API
+    from jax.sharding import AxisType
+except ImportError:                    # older jax: only Auto axes exist
+    AxisType = None
+
+
+def compat_mesh(shape, axes) -> Mesh:
+    """make_mesh across jax versions: pass axis_types where supported,
+    fall back to positional construction on older jax."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    devices = np.asarray(jax.devices()[:math.prod(shape)]).reshape(shape)
+    return Mesh(devices, axis_names=axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -18,8 +38,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     where gradient compression / hierarchical gateways attach."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
@@ -27,5 +46,4 @@ def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat_mesh((data, model), ("data", "model"))

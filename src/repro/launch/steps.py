@@ -9,13 +9,11 @@ is exactly one definition of what each cell computes.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common.configs import (DiTConfig, LMConfig, MMDiTConfig, ShapeSpec,
                                   TrainingConfig, VisionConfig)
@@ -103,7 +101,6 @@ def _num_groups(mesh, batch: int) -> int:
 # --------------------------------------------------------- optimizer axes --
 
 def _opt_logical(tcfg: TrainingConfig, p_logical, p_abstract):
-    is_tup = lambda x: isinstance(x, tuple)
     if tcfg.optimizer == "adamw":
         return {"m": p_logical, "v": p_logical}
     if tcfg.optimizer == "sgdm":
@@ -203,7 +200,6 @@ def _dit_cell(arch: Arch, shape: ShapeSpec, cfg: DiTConfig, mesh) -> Cell:
                 return dit.diffusion_loss(cfg, params, batch)
 
         step = TL.make_train_step(loss_fn, tcfg)
-        state_abs = TL.abstract_state(p_abs, tcfg)
         batch_abs = {"latents": lat, "labels": sds((B,), i32),
                      "t": sds((B,), i32), "noise": lat}
         b_log = {"latents": ("batch", None, None, None), "labels": ("batch",),
@@ -239,7 +235,6 @@ def _mmdit_cell(arch: Arch, shape: ShapeSpec, cfg: MMDiTConfig, mesh) -> Cell:
     lat = sds((B, lr, lr, C), dt)
     txt = sds((B, cfg.txt_len, cfg.d_txt), dt)
     pooled = sds((B, cfg.d_pooled), dt)
-    tl = {"latents/txt": None}
     lat_log = ("batch", None, None, None)
     txt_log = ("batch", "seq", None)
 

@@ -12,7 +12,6 @@ restart recovery (used by tests/test_fault_tolerance.py)."""
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
@@ -24,7 +23,6 @@ from repro.common.logging_util import log
 from repro.data.images import synthetic_diffusion_batch, synthetic_image_batch
 from repro.data.tokens import synthetic_lm_batch
 from repro.launch import steps as S
-from repro.launch.mesh import make_local_mesh
 
 
 def make_batch_fn(cell):

@@ -13,7 +13,6 @@ backbones are served by the same machinery through `repro.serving`.
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

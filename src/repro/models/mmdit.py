@@ -10,7 +10,6 @@ a documented simplification of Flux's 3-axis RoPE (DESIGN.md §9).
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

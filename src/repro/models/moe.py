@@ -26,7 +26,6 @@ routing. This is a beyond-paper feature, off by default.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

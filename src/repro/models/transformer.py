@@ -14,7 +14,6 @@ Exposes:
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

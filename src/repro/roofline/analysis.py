@@ -15,7 +15,6 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass
 
-import numpy as np
 
 from repro.roofline.hw import V5E, Chip
 

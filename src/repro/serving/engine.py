@@ -9,8 +9,7 @@ role)."""
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Any
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -16,10 +16,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.profiles import ProfileTable

@@ -7,7 +7,6 @@ fused ``moscore`` Pallas kernel — identical results (tests assert so)."""
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any
 

@@ -11,7 +11,6 @@ State layout mirrors the param tree so FSDP shardings apply verbatim.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -5,8 +5,7 @@ callable owns all model specifics.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

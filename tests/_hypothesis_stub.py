@@ -1,0 +1,78 @@
+"""A tiny deterministic stand-in for the slice of the `hypothesis` API the
+tier-1 tests use (``given``, ``settings``, ``strategies.integers/floats/
+composite``).
+
+Installed by ``conftest.py`` only when the real package is absent (the CI
+image pins just jax + numpy + pytest). Each ``@given`` test then runs a
+fixed number of seeded examples instead of hypothesis' adaptive search —
+weaker shrinking/coverage, but the property assertions still execute on a
+spread of inputs and stay deterministic across runs."""
+
+from __future__ import annotations
+
+import sys
+import types
+
+import numpy as np
+
+N_EXAMPLES = 10
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    """A strategy is just a sampler: rng -> value."""
+
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+
+def composite(fn):
+    def build(*args, **kwargs):
+        def sample(rng):
+            def draw(strategy):
+                return strategy.sample(rng)
+
+            return fn(draw, *args, **kwargs)
+
+        return _Strategy(sample)
+
+    return build
+
+
+def given(*strategies):
+    def deco(fn):
+        def runner():
+            for i in range(N_EXAMPLES):
+                rng = np.random.default_rng(_SEED + i)
+                fn(*[s.sample(rng) for s in strategies])
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco
+
+
+def settings(**_kwargs):
+    return lambda fn: fn
+
+
+def install() -> None:
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.composite = composite
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,17 @@
+"""Tier-1 test configuration.
+
+Optional-dependency gate: `hypothesis` is not part of the minimal runtime
+image; when it is missing, install the deterministic fallback from
+``_hypothesis_stub`` before the test modules import it, so the suite
+collects and the property tests run a fixed seeded-example sweep."""
+
+import sys
+from pathlib import Path
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()

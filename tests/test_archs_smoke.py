@@ -69,7 +69,6 @@ def test_smoke(arch_id, kind):
 
 def test_full_param_counts():
     """Full (non-reduced) configs match the published parameter counts."""
-    import numpy as np
     expect = {
         "deepseek-moe-16b": 16.4e9,
         "arctic-480b": 482e9,

@@ -1,0 +1,72 @@
+"""The CI benchmark gate (scripts/check_bench.py): artifact validation and
+regression comparison logic."""
+
+import importlib.util
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", REPO / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def _artifact(seconds=2.0, error=None, rows=("suite.a,1",)):
+    return {
+        "schema": "repro-bench/v1",
+        "fast": True,
+        "suites": {"fig4": {"rows": list(rows), "seconds": seconds,
+                            "error": error}},
+    }
+
+
+def test_validate_accepts_good_artifact():
+    assert check_bench.validate(_artifact(), "new") == []
+
+
+def test_validate_rejects_bad_schema_errors_and_empty_rows():
+    assert check_bench.validate({"schema": "nope"}, "new")
+    assert check_bench.validate(_artifact(error="Boom: x"), "new")
+    assert check_bench.validate(_artifact(rows=()), "new")
+    art = _artifact()
+    art["suites"]["fig4"]["seconds"] = "slow"
+    assert check_bench.validate(art, "new")
+
+
+def test_compare_flags_only_real_regressions():
+    base = _artifact(seconds=10.0)
+    # +50% and > min_abs: fail
+    assert check_bench.compare(_artifact(seconds=15.0), base, 0.20, 0.5)
+    # +10%: within threshold
+    assert not check_bench.compare(_artifact(seconds=11.0), base, 0.20, 0.5)
+    # tiny suite: +100% but under the absolute floor
+    tiny_base = _artifact(seconds=0.2)
+    assert not check_bench.compare(_artifact(seconds=0.4), tiny_base,
+                                   0.20, 0.5)
+    # suite missing from the new run
+    gone = _artifact()
+    gone["suites"] = {}
+    assert check_bench.compare(gone, base, 0.20, 0.5)
+
+
+def test_compare_rejects_incomparable_artifacts():
+    base = _artifact(seconds=10.0)
+    slow_full = _artifact(seconds=60.0)
+    slow_full["fast"] = False
+    errs = check_bench.compare(slow_full, base, 0.20, 0.5)
+    assert errs and "not comparable" in errs[0]
+    gpu = _artifact(seconds=1.0)
+    gpu["backend"], base["backend"] = "gpu", "cpu"
+    errs = check_bench.compare(gpu, base, 0.20, 0.5)
+    assert errs and "backend" in errs[0]
+
+
+def test_main_end_to_end(tmp_path):
+    new = tmp_path / "new.json"
+    base = tmp_path / "base.json"
+    new.write_text(json.dumps(_artifact(seconds=2.0)))
+    base.write_text(json.dumps(_artifact(seconds=1.9)))
+    assert check_bench.main([str(new), str(base)]) == 0
+    base.write_text(json.dumps(_artifact(seconds=0.9)))
+    assert check_bench.main([str(new), str(base)]) == 1

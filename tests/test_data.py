@@ -1,7 +1,6 @@
 """Data pipeline tests."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.images import synthetic_diffusion_batch, synthetic_image_batch

@@ -1,8 +1,6 @@
 """Roofline analysis machinery: HLO parsing, ring cost model, analytic
 FLOPs/memory models."""
 
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.common.configs import LMConfig, ShapeSpec, TrainingConfig

@@ -72,7 +72,6 @@ def test_hierarchical_matches_flat_when_synced():
     pair, pod = hierarchical_select(prof, pods, pod_of, 3, q, qp,
                                     delta=25.0, gamma=0.5)
     assert int(pod_of[int(pair)]) == int(pod)
-    thr = float(jnp.max(prof.mAP[:, 3])) - 25.0
     # within-pod feasibility (relative to the pod's own best)
     in_pod = np.asarray(pod_of) == int(pod)
     pod_thr = float(np.max(np.asarray(prof.mAP)[in_pod, 3])) - 25.0

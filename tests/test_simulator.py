@@ -6,8 +6,11 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.estimator import markov_transition, stationary
+from repro.core.policies import mo_select_batch
 from repro.core.profiles import paper_fleet, synthetic_fleet
-from repro.core.simulator import SimConfig, simulate, summarize
+from repro.core.simulator import (SimConfig, make_grid, run_policy,
+                                  simulate, simulate_batch, summarize,
+                                  summarize_batch, sweep, sweep_grid)
 
 
 def test_littles_law():
@@ -71,6 +74,90 @@ def test_markov_chain_is_stochastic():
     pi = np.asarray(stationary(markov_transition(5)))
     np.testing.assert_allclose(pi.sum(), 1.0, rtol=1e-5)
     assert pi[3] > pi[0]     # busy-crossing skew
+
+
+def test_simulate_batch_matches_looped_run_policy():
+    """Batched engine == looped reference, bit-for-bit, on a 3-config grid
+    (records are bit-identical, so per-row `summarize` metrics are too)."""
+    prof = paper_fleet()
+    cfgs = [SimConfig(n_users=9, n_requests=500, policy="MO", gamma=0.25,
+                      seed=0),
+            SimConfig(n_users=9, n_requests=500, policy="LT", gamma=0.5,
+                      seed=1),
+            SimConfig(n_users=9, n_requests=500, policy="RR", gamma=0.75,
+                      seed=2)]
+    grid = make_grid(prof, cfgs)
+    recs = simulate_batch(prof, grid, n_requests=500)
+    for i, cfg in enumerate(cfgs):
+        row = {k: v[i] for k, v in recs.items()}
+        got = {k: float(v) for k, v in summarize(row, prof, cfg).items()}
+        want = run_policy(prof, cfg.policy, cfg.n_users, cfg.n_requests,
+                          cfg.gamma, cfg.delta, cfg.seed)
+        assert got == want, (cfg.policy, got, want)
+
+
+def test_simulate_batch_padding_is_exact():
+    """Mixed n_users levels share one padded trace; every row still equals
+    its own unpadded single run bit-for-bit (masked users never dispatch)."""
+    prof = paper_fleet()
+    cfgs = [SimConfig(n_users=u, n_requests=400, policy="MO", seed=u)
+            for u in (3, 7, 15)]
+    grid = make_grid(prof, cfgs)
+    assert grid.n_users_max == 15 and grid.n_configs == 3
+    recs = simulate_batch(prof, grid, n_requests=400)
+    for i, cfg in enumerate(cfgs):
+        ref = simulate(prof, cfg)
+        for k in ref:
+            np.testing.assert_array_equal(np.asarray(recs[k][i]),
+                                          np.asarray(ref[k]), err_msg=k)
+
+
+def test_summarize_batch_close_to_looped():
+    """Fused vmap summarize may reassociate reductions; it must stay within
+    float32 tolerance of the per-config path."""
+    prof = paper_fleet()
+    cfgs = [SimConfig(n_users=u, n_requests=400, policy=p, seed=s)
+            for u, p, s in [(5, "MO", 0), (15, "HA", 1)]]
+    grid = make_grid(prof, cfgs)
+    recs = simulate_batch(prof, grid, n_requests=400)
+    batched = summarize_batch(recs, prof, warmup=40)
+    for i, cfg in enumerate(cfgs):
+        ref = summarize(simulate(prof, cfg), prof, cfg)
+        for k in ref:
+            np.testing.assert_allclose(float(batched[k][i]), float(ref[k]),
+                                       rtol=1e-5, err_msg=k)
+
+
+def test_sweep_grid_axes_and_sweep_compat():
+    """sweep() (compat wrapper) agrees with indexing sweep_grid directly."""
+    prof = paper_fleet()
+    pols, users, seeds = ["MO", "LC"], [3, 7], (0, 1)
+    m = sweep_grid(prof, policies=pols, user_levels=users, seeds=seeds,
+                   n_requests=300)
+    assert m["latency_ms"].shape == (2, 2, 1, 1, 1, 2)
+    s = sweep(prof, pols, users, n_requests=300, seeds=seeds)
+    for i, p in enumerate(pols):
+        for j in range(len(users)):
+            np.testing.assert_allclose(
+                s[p]["latency_ms"][j],
+                np.mean(m["latency_ms"][i, j, 0, 0, 0, :]))
+
+
+def test_mo_select_batch_matches_moscore_kernel():
+    """Algorithm-1 window routing: lax.scan reference == Pallas kernel
+    (interpret mode) on a random window, bit-for-bit assignments."""
+    from repro.kernels.moscore import moscore_route
+
+    prof = paper_fleet()
+    rng = jax.random.PRNGKey(11)
+    gs = jax.random.randint(rng, (96,), 0, prof.n_groups)
+    q0 = jax.random.randint(jax.random.fold_in(rng, 1), (prof.n_pairs,),
+                            0, 3).astype(jnp.float32)
+    ps_ref, q_ref = mo_select_batch(prof, gs, q0, delta=20.0, gamma=0.6)
+    ps_k, q_k = moscore_route(prof.T, prof.E, prof.mAP, gs, q0,
+                              delta=20.0, gamma=0.6)
+    np.testing.assert_array_equal(np.asarray(ps_ref), np.asarray(ps_k))
+    np.testing.assert_allclose(np.asarray(q_ref), np.asarray(q_k))
 
 
 def test_estimator_tracks_under_strong_models():

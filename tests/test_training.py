@@ -6,10 +6,8 @@ import numpy as np
 import pytest
 
 from repro.common.configs import TrainingConfig
-from repro.training.optimizer import make_optimizer
 from repro.training.schedule import warmup_cosine
-from repro.training.train_loop import (TrainState, clip_by_global_norm,
-                                       init_state, make_train_step)
+from repro.training.train_loop import (clip_by_global_norm, init_state, make_train_step)
 
 
 def _quadratic_loss(params, batch):
