@@ -6,12 +6,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.profiles import paper_fleet
-from repro.kernels.decode_attention import decode_attention, ref_decode_attention
+from repro.core.policies import mo_select_batch
+from repro.core.profiles import ProfileTable, paper_fleet
+from repro.kernels.decode_attention import (decode_attention,
+                                            ref_decode_attention)
 from repro.kernels.flash_attention import flash_attention, ref_attention
 from repro.kernels.moscore import moscore_route
-from repro.core.policies import mo_select_batch
-from repro.core.profiles import ProfileTable
 
 
 def _time(fn, *args, n=5):

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.hierarchy import hierarchical_select, pod_aggregate
 from repro.core.policies import mo_select
-from repro.core.profiles import paper_fleet, synthetic_fleet
+from repro.core.profiles import paper_fleet, stack_profiles, synthetic_fleet
 from repro.core.simulator import SimConfig, simulate, summarize, sweep_grid
 from repro.kernels.moscore import moscore_route
 
@@ -68,4 +68,15 @@ def run() -> list[str]:
     t_warm = time.perf_counter() - t0
     rows.append(f"scale.batched_sweep_63cfg_cold_s,{t_cold:.2f},,,")
     rows.append(f"scale.batched_sweep_63cfg_warm_s,{t_warm:.2f},,,")
+
+    # fleet-axis batching: a 4-fleet synthetic robustness ensemble fused
+    # with the 63-config grid into ONE device program (252 fleet x config
+    # cells) — previously one sweep per fleet.
+    ensemble = stack_profiles([synthetic_fleet(jax.random.fold_in(rng, i), 5)
+                               for i in range(4)])
+    sweep_grid(ensemble, **kw)
+    t0 = time.perf_counter()
+    sweep_grid(ensemble, **kw)
+    t_ens = time.perf_counter() - t0
+    rows.append(f"scale.fleet_ensemble_4x63cfg_warm_s,{t_ens:.2f},,,")
     return rows

@@ -2,27 +2,37 @@
 roofline. Prints CSV: name,<columns...>.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only SUITE]
-                                          [--json PATH]
+                                          [--json PATH] [--sharded]
+
+Each suite is documented in ``docs/benchmarks.md``.
 
 Running benchmarks / CI
 -----------------------
-``--fast`` shrinks seeds/requests to CI size. ``--json PATH`` additionally
-writes a ``BENCH_*.json``-style artifact: per-suite CSV rows plus
-wall-clock seconds (``suites.<name>.seconds``) and environment metadata —
-the format ``scripts/check_bench.py`` validates and diffs against the
-committed baseline (``benchmarks/bench_baseline.json``), failing on >20%
-slowdown per suite. The GitHub workflow (``.github/workflows/ci.yml``)
-runs three jobs: ruff lint, the tier-1 pytest suite, and this runner in
+``--fast`` shrinks seeds/requests to CI size. ``--sharded`` is the
+multi-device fast path: it routes every sweep suite (fig4/fig5/ablation)
+through ``sweep_grid(..., mesh=make_sweep_mesh())``, sharding the config
+axis across all local devices — results are bit-identical to the default
+path, only faster on >1 device. ``--json PATH`` additionally writes a
+``BENCH_*.json``-style artifact: per-suite CSV rows plus wall-clock
+seconds (``suites.<name>.seconds``) and environment metadata — the format
+``scripts/check_bench.py`` validates and diffs against the committed
+baseline (``benchmarks/bench_baseline.json``), failing on >20% slowdown
+per suite and warning (``--strict``: failing) when a suite has no baseline
+entry. The GitHub workflow (``.github/workflows/ci.yml``) runs three jobs:
+ruff lint + docs link check, the tier-1 pytest suite, and this runner in
 ``--fast --json`` mode, uploading the JSON as a build artifact so every
 commit leaves a benchmark trajectory point:
 
   PYTHONPATH=src python -m benchmarks.run --fast --json bench.json
   python scripts/check_bench.py bench.json benchmarks/bench_baseline.json
 
-The sweep suites (fig4/fig5/ablation/scale) run on the batched engine
-(``repro.core.simulator.sweep_grid``): each grid is ONE jitted
-vmap(simulate + summarize) device program, so a full Fig. 4 sweep costs
-one compile + one launch instead of ~150.
+The sweep suites (fig4/fig5/ablation/scale/sweep_sharded) run on the
+batched engine (``repro.core.simulator.sweep_grid``): each grid is ONE
+jitted vmap(simulate + summarize) device program, so a full Fig. 4 sweep
+costs one compile + one launch instead of ~150. ``sweep_sharded`` reports
+the engine's configs/sec single-device vs sharded, and the
+memoized/vectorised ``make_grid`` build rate — the headline throughput
+numbers the regression gate tracks. See ``docs/sweep_engine.md``.
 """
 
 import argparse
@@ -39,23 +49,33 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a JSON artifact (per-suite rows + "
                          "wall-clock) for CI / scripts/check_bench.py")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the sweep suites sharded across all local "
+                         "devices (sweep_grid mesh= fast path; "
+                         "bit-identical results)")
     args = ap.parse_args()
 
     from benchmarks import (ablation_delta, bench_kernels, bench_scale,
                             fig2_motivation, fig4_baselines, fig5_gamma,
-                            roofline_summary, table1_pairs)
+                            roofline_summary, sweep_sharded, table1_pairs)
+
+    mesh = None
+    if args.sharded:
+        from repro.launch.mesh import make_sweep_mesh
+        mesh = make_sweep_mesh()
 
     suites = {
         "fig2": lambda: fig2_motivation.run(),
         "table1": lambda: table1_pairs.run(),
         "fig4": lambda: fig4_baselines.run(
             n_requests=600 if args.fast else 1500,
-            seeds=(0,) if args.fast else (0, 1, 2)),
+            seeds=(0,) if args.fast else (0, 1, 2), mesh=mesh),
         "fig5": lambda: fig5_gamma.run(
             n_requests=600 if args.fast else 1500,
-            seeds=(0,) if args.fast else (0, 1)),
-        "ablation": lambda: ablation_delta.run(),
+            seeds=(0,) if args.fast else (0, 1), mesh=mesh),
+        "ablation": lambda: ablation_delta.run(mesh=mesh),
         "scale": lambda: bench_scale.run(),
+        "sweep_sharded": lambda: sweep_sharded.run(),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: roofline_summary.run(),
     }

@@ -8,8 +8,10 @@ from repro.core.profiles import paper_fleet
 def run() -> list[str]:
     prof = paper_fleet()
     rows = ["table1.metric,winner"]
-    rows.append(f"table1.best_energy,{prof.names[int(np.argmin(np.asarray(prof.E).mean(1)))]}")
-    rows.append(f"table1.best_time,{prof.names[int(np.argmin(np.asarray(prof.T).mean(1)))]}")
+    best_e = int(np.argmin(np.asarray(prof.E).mean(1)))
+    best_t = int(np.argmin(np.asarray(prof.T).mean(1)))
+    rows.append(f"table1.best_energy,{prof.names[best_e]}")
+    rows.append(f"table1.best_time,{prof.names[best_t]}")
     for g in range(prof.n_groups):
         w = int(np.argmax(np.asarray(prof.mAP)[:, g]))
         rows.append(f"table1.best_map_group{g + 1},{prof.names[w]}")

@@ -5,8 +5,8 @@
 
 import jax.numpy as jnp
 
-from repro.core.profiles import paper_fleet
 from repro.core.policies import mo_select, mo_select_batch
+from repro.core.profiles import paper_fleet
 from repro.core.simulator import run_policy
 
 prof = paper_fleet()

@@ -2,7 +2,7 @@
 """Validate a benchmark JSON artifact and gate on wall-clock regressions.
 
   python scripts/check_bench.py NEW.json [BASELINE.json]
-         [--threshold 0.20] [--min-abs 0.5]
+         [--threshold 0.20] [--min-abs 0.5] [--strict]
 
 Always validates NEW.json against the ``repro-bench/v1`` schema emitted by
 ``benchmarks/run.py --json`` (suites present, no suite errors, numeric
@@ -11,9 +11,15 @@ Always validates NEW.json against the ``repro-bench/v1`` schema emitted by
 default 20%) AND more than ``--min-abs`` seconds (absolute floor so
 sub-second suites don't flap on scheduler noise).
 
-Exit code 0 = artifact valid and within budget; 1 = invalid or regressed.
-Wired into CI's bench job as an allow-failure step until runner timing
-baselines stabilise.
+A suite present in the new run but absent from the baseline is *stale
+baseline*: the comparison silently skips it, so the suite goes
+unmonitored. That prints a WARN line (an error under ``--strict``) telling
+you to regenerate ``benchmarks/bench_baseline.json`` — the failure mode
+where a newly added suite never gets a regression gate.
+
+Exit code 0 = artifact valid and within budget; 1 = invalid, regressed, or
+(``--strict``) stale baseline. Wired into CI's bench job as an
+allow-failure step until runner timing baselines stabilise.
 """
 
 from __future__ import annotations
@@ -74,6 +80,14 @@ def compare(new: dict, base: dict, threshold: float,
     return errs
 
 
+def stale_suites(new: dict, base: dict) -> list[str]:
+    """Suites recorded in the new run but absent from the baseline — they
+    bypass ``compare`` entirely, so regressions in them go unnoticed until
+    the baseline is regenerated."""
+    return [name for name in new.get("suites", {})
+            if name not in base.get("suites", {})]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="fresh artifact from benchmarks.run --json")
@@ -84,6 +98,9 @@ def main(argv=None) -> int:
     ap.add_argument("--min-abs", type=float, default=0.5,
                     help="ignore regressions smaller than this many "
                          "seconds (default 0.5)")
+    ap.add_argument("--strict", action="store_true",
+                    help="treat a stale baseline (new suites without a "
+                         "baseline entry) as a failure, not a warning")
     args = ap.parse_args(argv)
 
     try:
@@ -92,6 +109,7 @@ def main(argv=None) -> int:
         print(f"check_bench: FAIL: cannot read {args.new}: {e}")
         return 1
     errs = validate(new, "new")
+    warns: list[str] = []
     if args.baseline and not errs:
         try:
             base = load(args.baseline)
@@ -101,7 +119,15 @@ def main(argv=None) -> int:
         errs += validate(base, "baseline")
         if not errs:
             errs += compare(new, base, args.threshold, args.min_abs)
+            warns = [f"suite {s} has no baseline entry — unmonitored; "
+                     f"regenerate {args.baseline}"
+                     for s in stale_suites(new, base)]
+            if args.strict:
+                errs += warns
+                warns = []
 
+    for w in warns:
+        print(f"check_bench: WARN: {w}")
     for e in errs:
         print(f"check_bench: FAIL: {e}")
     if not errs:

@@ -1,5 +1,6 @@
-from repro.checkpoint.checkpointer import save_checkpoint, restore_checkpoint, latest_step
 from repro.checkpoint.async_ckpt import AsyncCheckpointer
+from repro.checkpoint.checkpointer import (latest_step, restore_checkpoint,
+                                           save_checkpoint)
 from repro.checkpoint.elastic import reshard_restore
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",

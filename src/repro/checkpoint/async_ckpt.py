@@ -4,7 +4,7 @@ longer than the device->host copy."""
 
 from __future__ import annotations
 
-from concurrent.futures import ThreadPoolExecutor, Future
+from concurrent.futures import Future, ThreadPoolExecutor
 
 import jax
 

@@ -1,15 +1,15 @@
 """Common substrate: configs, precision policy, tree and logging utilities."""
 
+from repro.common import treeutil
 from repro.common.configs import (
-    LMConfig,
     DiTConfig,
+    LMConfig,
     MMDiTConfig,
-    VisionConfig,
     ShapeSpec,
     TrainingConfig,
+    VisionConfig,
 )
-from repro.common.precision import Policy, DEFAULT_POLICY
-from repro.common import treeutil
+from repro.common.precision import DEFAULT_POLICY, Policy
 
 __all__ = [
     "LMConfig",

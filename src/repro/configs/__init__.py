@@ -5,7 +5,8 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import Arch, LM_SHAPES, DIFFUSION_SHAPES, VISION_SHAPES
+from repro.configs.base import (DIFFUSION_SHAPES, LM_SHAPES,
+                                VISION_SHAPES, Arch)
 
 _MODULES = {
     "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",

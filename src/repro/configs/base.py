@@ -42,7 +42,8 @@ FAMILY_SHAPES = {
 class Arch:
     id: str
     family: str                       # lm | diffusion | vision
-    config: Any                       # LMConfig | DiTConfig | MMDiTConfig | VisionConfig
+    config: Any                       # LMConfig | DiTConfig | MMDiTConfig
+                                      # | VisionConfig
     train: TrainingConfig
     reduced: Any                      # smoke-test-sized config, same family
     source: str = ""                  # citation tag from the assignment

@@ -1,7 +1,7 @@
 """convnext-b [arXiv:2201.03545; paper]: depths 3-3-27-3, dims
 128-256-512-1024, img_res=224."""
 
-from repro.common.configs import VisionConfig, TrainingConfig
+from repro.common.configs import TrainingConfig, VisionConfig
 from repro.configs.base import Arch
 
 CONFIG = VisionConfig(

@@ -1,7 +1,7 @@
 """efficientnet-b7 [arXiv:1905.11946; paper]: compound scaling width 2.0 /
 depth 3.1 over the B0 base, img_res=600."""
 
-from repro.common.configs import VisionConfig, TrainingConfig
+from repro.common.configs import TrainingConfig, VisionConfig
 from repro.configs.base import Arch
 
 CONFIG = VisionConfig(

@@ -1,7 +1,7 @@
 """resnet-50 [arXiv:1512.03385; paper]: depths 3-4-6-3, width 64,
 bottleneck 4x, img_res=224."""
 
-from repro.common.configs import VisionConfig, TrainingConfig
+from repro.common.configs import TrainingConfig, VisionConfig
 from repro.configs.base import Arch
 
 CONFIG = VisionConfig(

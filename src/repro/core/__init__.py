@@ -2,20 +2,21 @@
 heterogeneous inference fleets (profiles, two-stage balancer, baselines,
 estimator, fleet simulator, energy model, online adaptation, hierarchy)."""
 
-from repro.core.profiles import ProfileTable, paper_fleet, synthetic_fleet
+from repro.core.estimator import group_of_count, noisy_detected_count
 from repro.core.policies import (POLICY_CODES, mo_select, mo_select_batch,
                                  policy_scores)
-from repro.core.estimator import group_of_count, noisy_detected_count
-from repro.core.simulator import (ConfigGrid, SimConfig, make_grid,
-                                  run_policy, simulate, simulate_batch,
-                                  summarize, summarize_batch, sweep,
-                                  sweep_grid)
+from repro.core.profiles import (ProfileTable, paper_fleet, stack_profiles,
+                                 synthetic_fleet)
+from repro.core.simulator import (ConfigGrid, SimConfig, grid_cache_clear,
+                                  grid_cache_info, make_grid, run_policy,
+                                  simulate, simulate_batch, summarize,
+                                  summarize_batch, sweep, sweep_grid)
 
 __all__ = [
-    "ProfileTable", "paper_fleet", "synthetic_fleet",
+    "ProfileTable", "paper_fleet", "stack_profiles", "synthetic_fleet",
     "POLICY_CODES", "mo_select", "mo_select_batch", "policy_scores",
     "group_of_count", "noisy_detected_count",
-    "ConfigGrid", "SimConfig", "make_grid", "run_policy",
-    "simulate", "simulate_batch", "summarize", "summarize_batch",
-    "sweep", "sweep_grid",
+    "ConfigGrid", "SimConfig", "grid_cache_clear", "grid_cache_info",
+    "make_grid", "run_policy", "simulate", "simulate_batch", "summarize",
+    "summarize_batch", "sweep", "sweep_grid",
 ]

@@ -58,11 +58,13 @@ def markov_transition(n_states: int = 5, stickiness: float = 0.85,
 
 
 def stationary(P):
-    """Stationary distribution of a row-stochastic matrix (power iteration)."""
+    """Stationary distribution of a row-stochastic matrix (power iteration).
+    A ``fori_loop`` rather than an unrolled Python loop: the op sequence —
+    and hence the result, bit for bit — is identical, but the trace stays
+    200x smaller, which keeps ``make_grid``'s per-``n_users``-level draw
+    compiles cheap."""
     pi = jnp.ones((P.shape[0],)) / P.shape[0]
-    for _ in range(200):
-        pi = pi @ P
-    return pi
+    return jax.lax.fori_loop(0, 200, lambda _, p: p @ P, pi)
 
 
 def markov_step(rng, state, P):

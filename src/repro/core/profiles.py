@@ -3,11 +3,19 @@ inference time T[p,g] (ms), energy E[p,g] (mWh, excl. idle base power) and
 accuracy mAP[p,g] (0..100). Exactly the paper's profiling abstraction; the
 same interface is fed by (a) the paper-testbed numbers, (b) synthetic fleets
 for scale tests, and (c) roofline-derived TPU serving cells
-(``repro.core.energy.derive_tpu_profile``)."""
+(``repro.core.energy.derive_tpu_profile``).
+
+A ``ProfileTable`` may also be *stacked*: :func:`stack_profiles` joins F
+fleets of identical (P, G) shape into one table whose leaves carry a
+leading fleet axis (F, P, G). The batched simulator
+(``repro.core.simulator.simulate_batch`` / ``sweep_grid``) vmaps over that
+axis, fusing a whole fleet ensemble into the same device program — see
+``docs/sweep_engine.md``."""
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +29,15 @@ GROUP_NAMES = ("0_objects", "1_object", "2_objects", "3_objects", "4plus")
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class ProfileTable:
+    """Per-(pair, group) profiling table — the paper's offline measurements.
+
+    Leaves are either single-fleet, shape ``(P, G)`` float32, or *stacked*
+    (:func:`stack_profiles`), shape ``(F, P, G)`` with a leading fleet
+    axis; ``floor_mw`` is ``(P,)`` / ``(F, P)`` accordingly. Registered as
+    a pytree (``names`` is static aux data) so it can be passed straight
+    through ``jit`` / ``vmap`` / ``shard_map``.
+    """
+
     T: jax.Array            # (P, G) ms
     E: jax.Array            # (P, G) mWh / request
     mAP: jax.Array          # (P, G) in [0, 100]
@@ -37,17 +54,27 @@ class ProfileTable:
 
     @property
     def n_pairs(self) -> int:
-        return self.T.shape[0]
+        return self.T.shape[-2]
 
     @property
     def n_groups(self) -> int:
-        return self.T.shape[1]
+        return self.T.shape[-1]
+
+    @property
+    def is_stacked(self) -> bool:
+        """True when the leaves carry a leading fleet axis (F, P, G)."""
+        return self.T.ndim == 3
+
+    @property
+    def n_fleets(self) -> int:
+        return self.T.shape[0] if self.is_stacked else 1
 
     def save(self, path: str) -> None:
         np.savez(path, T=np.asarray(self.T), E=np.asarray(self.E),
                  mAP=np.asarray(self.mAP),
                  floor_mw=np.asarray(self.floor_mw)
-                 if self.floor_mw is not None else np.zeros(self.T.shape[0]),
+                 if self.floor_mw is not None
+                 else np.zeros(self.T.shape[:-1]),
                  names=np.array(self.names, dtype=object))
 
     @classmethod
@@ -95,6 +122,38 @@ def paper_fleet() -> ProfileTable:
     ])
     floor = jnp.array([60.0, 55.0, 225.0, 300.0, 250.0])   # mW active floor
     return ProfileTable(T, E, mAP, names, floor)
+
+
+def stack_profiles(profs: Sequence[ProfileTable]) -> ProfileTable:
+    """Stack same-shape fleets into one table with a leading fleet axis.
+
+    Every input must be unstacked and share one ``(P, G)`` shape; the
+    result has ``T``/``E``/``mAP`` of shape ``(F, P, G)`` and ``floor_mw``
+    of ``(F, P)`` (fleets without a floor contribute zeros). ``names`` are
+    taken from the first fleet — the fleet axis is an ensemble of
+    *hardware profiles*, not of node identities. The batched simulator
+    vmaps over this axis, so an ensemble sweep is one device program.
+    """
+    profs = list(profs)
+    if not profs:
+        raise ValueError("stack_profiles: empty fleet list")
+    if any(p.is_stacked for p in profs):
+        raise ValueError("stack_profiles: inputs must be unstacked (P, G) "
+                         "tables")
+    shapes = {p.T.shape for p in profs}
+    if len(shapes) > 1:
+        raise ValueError(f"stack_profiles: fleets disagree on (P, G): "
+                         f"{sorted(shapes)}")
+    P = profs[0].n_pairs
+    floors = [p.floor_mw if p.floor_mw is not None else jnp.zeros((P,))
+              for p in profs]
+    return ProfileTable(
+        T=jnp.stack([p.T for p in profs]),
+        E=jnp.stack([p.E for p in profs]),
+        mAP=jnp.stack([p.mAP for p in profs]),
+        names=profs[0].names,
+        floor_mw=jnp.stack(floors),
+    )
 
 
 def synthetic_fleet(rng, n_pairs: int, n_groups: int = 5,

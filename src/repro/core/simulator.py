@@ -20,6 +20,27 @@ per-config at grid-build time (:func:`make_grid`) with each config's own
 the loop is shape-independent, which makes a padded batched run reproduce
 each config's unpadded trajectory exactly.
 
+Scaling axes (see ``docs/sweep_engine.md`` for the full architecture
+guide): the batched engine composes three orthogonal batch dims in the
+fixed order **(fleet, config, user, time)** —
+
+  * **config** — the flat struct-of-arrays axis of :class:`ConfigGrid`
+    (one entry per policy × users × γ × Δ × oracle × seed combination),
+    vmapped always and optionally *sharded across devices* via
+    ``sweep_grid(..., mesh=...)`` (``shard_map`` over the config axis,
+    padded to a multiple of the device count, bit-identical results);
+  * **fleet** — an optional leading ensemble axis over same-shape
+    ``ProfileTable`` stacks (``repro.core.profiles.stack_profiles``),
+    vmapped outside the config axis;
+  * **user / time** — the per-config padded user streams and the
+    ``lax.scan`` over dispatch events.
+
+Grid building is memoized and vectorised: per-config initial draws depend
+only on (seed, stickiness, n_users), so :func:`make_grid` computes each
+distinct triple once (process-wide cache, see :func:`grid_cache_info`) and
+batches cache misses per ``n_users`` level with one vmapped threefry draw —
+a 10^5-config grid builds in milliseconds.
+
 Faithfulness notes:
   * service time / energy / accuracy are drawn from ``ProfileTable`` at the
     *true* complexity group; the policy only sees the *estimated* group
@@ -40,10 +61,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import estimator as EST
 from repro.core.policies import POLICY_CODES, policy_scores
 from repro.core.profiles import ProfileTable
+from repro.distributed.sharding import config_axis_spec, pad_leading
 
 f32 = jnp.float32
 i32 = jnp.int32
@@ -91,8 +115,7 @@ class ConfigGrid(NamedTuple):
         return int(self.true0.shape[-1])
 
 
-@functools.partial(jax.jit, static_argnames=("n_groups", "n_users"))
-def _init_draws(seed, stickiness, *, n_groups: int, n_users: int):
+def _init_draws_impl(seed, stickiness, *, n_groups: int, n_users: int):
     """Initial user states + scan key for one config, with the config's own
     ``n_users``-shaped categorical draw (the shape-sensitive part)."""
     P_trans = EST.markov_transition(n_groups, stickiness)
@@ -104,13 +127,91 @@ def _init_draws(seed, stickiness, *, n_groups: int, n_users: int):
     return true0.astype(i32), rng
 
 
+_init_draws = functools.partial(jax.jit, static_argnames=(
+    "n_groups", "n_users"))(_init_draws_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups",))
+def _init_priors_batch(seeds, stickiness, *, n_groups: int):
+    """Shape-independent half of the batched initial draw: per (seed,
+    stickiness) key, the stationary distribution and the split threefry
+    keys. One compile serves every ``n_users`` level — only the categorical
+    draw below is shape-sensitive. Threefry is counter-based, so each row
+    is bit-identical to its own scalar :func:`_init_draws` call."""
+
+    def one(seed, stick):
+        P_trans = EST.markov_transition(n_groups, stick)
+        rng = jax.random.PRNGKey(seed)
+        k_init, rng = jax.random.split(rng)
+        return EST.stationary(P_trans), k_init, rng
+
+    return jax.vmap(one)(seeds, stickiness)
+
+
+@functools.partial(jax.jit, static_argnames=("n_users",))
+def _init_categorical_batch(k_init, pi0, *, n_users: int):
+    """Shape-sensitive half: the config's own ``n_users``-shaped
+    categorical draw (cheap per-level compile), vmapped over keys."""
+    return jax.vmap(lambda k, p: jax.random.categorical(
+        k, jnp.log(p + 1e-9), shape=(n_users,)).astype(i32))(k_init, pi0)
+
+
+def _pow2_pad(items: list) -> list:
+    """Pad a work list to a power of two by repeating its head, bounding
+    the set of compiled batch shapes to O(log n) per static signature."""
+    return items + [items[0]] * ((1 << (len(items) - 1).bit_length())
+                                 - len(items))
+
+
+# (seed, stickiness, n_users, n_groups) -> (true0 (n_users,) i32, rng (2,)
+# u32) as numpy. The draw depends on nothing else, and a Fig. 4 grid of 168
+# configs has only 24 distinct triples — memoizing + batching misses per
+# n_users level is what lets 10^5-config grids build in milliseconds.
+_DRAW_CACHE: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
+_DRAW_STATS = {"hits": 0, "misses": 0}
+
+
+def grid_cache_info() -> dict[str, int]:
+    """Stats for the :func:`make_grid` initial-draw cache: per-config
+    ``hits``/``misses`` counters and the number of distinct draws held
+    (``size``). Process-wide; reset with :func:`grid_cache_clear`."""
+    return dict(_DRAW_STATS, size=len(_DRAW_CACHE))
+
+
+def grid_cache_clear() -> None:
+    """Drop all memoized initial draws and zero the hit/miss counters."""
+    _DRAW_CACHE.clear()
+    _DRAW_STATS.update(hits=0, misses=0)
+
+
 def make_grid(prof: ProfileTable, configs,
               n_users_max: int | None = None) -> ConfigGrid:
-    """Pack an iterable of ``SimConfig`` into a padded ``ConfigGrid``.
+    """Pack an iterable of :class:`SimConfig` into a padded
+    :class:`ConfigGrid`.
 
-    ``n_requests``/``warmup_frac`` are scan-shape parameters, not grid
-    leaves — all configs in one batch must agree on them (they are passed
-    separately to :func:`simulate_batch` / :func:`summarize_batch`)."""
+    Args:
+      prof: the fleet the grid will run against; only its ``n_groups``
+        enters the build (the initial complexity draw). A stacked table is
+        fine — all fleets share one group count.
+      configs: iterable of :class:`SimConfig`. All must agree on
+        ``n_requests``/``warmup_frac``: those are scan-*shape* parameters,
+        not traced grid leaves, and are passed separately to
+        :func:`simulate_batch` / :func:`summarize_batch`.
+      n_users_max: pad width of the user axis; defaults to the largest
+        ``n_users`` in the batch. Padded streams are masked to never
+        dispatch, so the pad width does not change results.
+
+    Returns:
+      A :class:`ConfigGrid` with leading dim ``B = len(configs)``
+      (struct-of-arrays; see the class docstring for leaf shapes/dtypes).
+
+    Determinism: each config's initial state is drawn with its own
+    ``n_users``-shaped threefry stream keyed on (seed, stickiness), so row
+    ``b`` of any batched/sharded run is bit-identical to the unbatched
+    ``simulate`` of config ``b``. Draws are memoized process-wide on
+    (seed, stickiness, n_users, n_groups) and cache misses are computed in
+    one vmapped batch per ``n_users`` level (see :func:`grid_cache_info`).
+    """
     cfgs = list(configs)
     if not cfgs:
         raise ValueError("empty config grid")
@@ -120,13 +221,32 @@ def make_grid(prof: ProfileTable, configs,
             "(they are scan-shape parameters, passed separately to "
             "simulate_batch/summarize_batch)")
     U = max(c.n_users for c in cfgs) if n_users_max is None else n_users_max
+    G = prof.n_groups
+
+    keys = [(c.seed, float(c.stickiness), c.n_users, G) for c in cfgs]
+    missing = sorted({k for k in keys if k not in _DRAW_CACHE})
+    _DRAW_STATS["misses"] += len(missing)
+    _DRAW_STATS["hits"] += len(keys) - len(missing)
+    if missing:
+        padded = _pow2_pad(missing)
+        pi0, k_init, rngs = _init_priors_batch(
+            jnp.asarray([k[0] for k in padded], i32),
+            jnp.asarray([k[1] for k in padded], f32), n_groups=G)
+        rngs = np.asarray(rngs)
+        for nu in sorted({k[2] for k in missing}):
+            idx = [i for i, k in enumerate(missing) if k[2] == nu]
+            sel = jnp.asarray(_pow2_pad(idx), i32)
+            t0s = np.asarray(_init_categorical_batch(
+                k_init[sel], pi0[sel], n_users=nu))
+            for j, i in enumerate(idx):
+                _DRAW_CACHE[missing[i]] = (t0s[j], rngs[i])
+
     true0 = np.zeros((len(cfgs), U), np.int32)
-    rngs = np.zeros((len(cfgs), 2), np.uint32)
-    for i, c in enumerate(cfgs):
-        t0, r = _init_draws(c.seed, c.stickiness,
-                            n_groups=prof.n_groups, n_users=c.n_users)
-        true0[i, :c.n_users] = np.asarray(t0)
-        rngs[i] = np.asarray(r)
+    rng = np.zeros((len(cfgs), 2), np.uint32)
+    for i, k in enumerate(keys):
+        t0, r = _DRAW_CACHE[k]
+        true0[i, :k[2]] = t0
+        rng[i] = r
     return ConfigGrid(
         policy_code=jnp.asarray([POLICY_CODES[c.policy] for c in cfgs], i32),
         n_users=jnp.asarray([c.n_users for c in cfgs], i32),
@@ -134,7 +254,7 @@ def make_grid(prof: ProfileTable, configs,
         delta=jnp.asarray([c.delta for c in cfgs], f32),
         stickiness=jnp.asarray([c.stickiness for c in cfgs], f32),
         oracle=jnp.asarray([c.oracle_estimator for c in cfgs], bool),
-        rng=jnp.asarray(rngs),
+        rng=jnp.asarray(rng),
         true0=jnp.asarray(true0),
     )
 
@@ -231,27 +351,87 @@ def _simulate_one(prof, g: ConfigGrid, *, n_requests: int):
     return _simulate_config(prof, g, n_requests=n_requests)
 
 
+def _over_fleet(fn, prof):
+    """Apply ``fn(single_fleet_prof)``, vmapping over the leading fleet
+    axis when ``prof`` is stacked. The fleet axis always batches OUTSIDE
+    the config axis — axis order (fleet, config, user, time)."""
+    if prof.is_stacked:
+        return jax.vmap(fn)(prof)
+    return fn(prof)
+
+
 @functools.partial(jax.jit, static_argnames=("n_requests",))
 def _simulate_vmapped(prof, grid: ConfigGrid, *, n_requests: int):
-    return jax.vmap(
-        lambda g: _simulate_config(prof, g, n_requests=n_requests))(grid)
+    return _over_fleet(
+        lambda pf: jax.vmap(
+            lambda g: _simulate_config(pf, g, n_requests=n_requests))(grid),
+        prof)
+
+
+def _fused_summaries(prof, grid: ConfigGrid, *, n_requests: int,
+                     warmup: int):
+    """The simulate + summarize composition over (fleet,) config — the ONE
+    source of truth shared by the single-device jit and the shard_map'ed
+    path, so the two can never drift apart and break the bit-identical
+    guarantee. Returns (B,) metric vectors — (F, B) for a stacked fleet —
+    without materialising (B, N) records."""
+
+    def per_fleet(pf):
+        def one(g):
+            recs = _simulate_config(pf, g, n_requests=n_requests)
+            return _summarize_core(recs, pf, warmup)
+
+        return jax.vmap(one)(grid)
+
+    return _over_fleet(per_fleet, prof)
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests", "warmup"))
 def _sweep_fused(prof, grid: ConfigGrid, *, n_requests: int, warmup: int):
-    """simulate + summarize for every config, fused into one program so a
-    sweep returns (B,) metric vectors without materialising (B, N) records
-    on the host."""
+    return _fused_summaries(prof, grid, n_requests=n_requests,
+                            warmup=warmup)
 
-    def one(g):
-        recs = _simulate_config(prof, g, n_requests=n_requests)
-        return _summarize_core(recs, prof, warmup)
 
-    return jax.vmap(one)(grid)
+@functools.lru_cache(maxsize=None)
+def _sweep_sharded_fn(mesh: Mesh, n_requests: int, warmup: int,
+                      stacked: bool):
+    """Build (and cache per mesh/shape signature) the shard_map'ed fused
+    sweep: the config axis is split over every mesh axis, the profile table
+    is replicated, and each shard runs the plain vmapped simulate +
+    summarize — no collectives, the grid is embarrassingly parallel."""
+    cspec = config_axis_spec(mesh)
+    out_spec = PartitionSpec(None, *cspec) if stacked else cspec
+
+    def inner(pf, g):
+        return _fused_summaries(pf, g, n_requests=n_requests,
+                                warmup=warmup)
+
+    return jax.jit(shard_map(inner, mesh=mesh,
+                             in_specs=(PartitionSpec(), cspec),
+                             out_specs=out_spec))
+
+
+def _sweep_summaries(prof, grid: ConfigGrid, *, n_requests: int,
+                     warmup: int, mesh: Mesh | None):
+    """Dispatch a fused sweep to the single-device or sharded path; both
+    return per-config summary dicts with config as the trailing axis of
+    each (B,) / (F, B) leaf, bit-identical to each other."""
+    if mesh is None:
+        return _sweep_fused(prof, grid, n_requests=n_requests, warmup=warmup)
+    n_dev = int(mesh.devices.size)
+    padded, n = pad_leading(grid, n_dev)
+    fn = _sweep_sharded_fn(mesh, n_requests, warmup, prof.is_stacked)
+    out = fn(prof, ConfigGrid(*map(jnp.asarray, padded)))
+    return {k: v[..., :n] for k, v in out.items()}
 
 
 def simulate(prof: ProfileTable, cfg: SimConfig):
-    """Returns a dict of per-request record arrays (length n_requests)."""
+    """Returns a dict of per-request record arrays (length n_requests).
+    Single-fleet only — stacked tables go through :func:`simulate_batch` /
+    :func:`sweep_grid`, which vmap the fleet axis."""
+    if prof.is_stacked:
+        raise ValueError("simulate() takes a single (P, G) ProfileTable; "
+                         "pass stacked tables to simulate_batch/sweep_grid")
     true0, rng = _init_draws(cfg.seed, cfg.stickiness,
                              n_groups=prof.n_groups, n_users=cfg.n_users)
     g = ConfigGrid(
@@ -268,11 +448,24 @@ def simulate(prof: ProfileTable, cfg: SimConfig):
 def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int):
     """Run every config in ``grid`` as ONE vmapped scan in ONE jit.
 
-    ``n_requests`` is required (no default) and must match the configs the
-    grid was built from — the grid carries only traced leaves, not scan
-    shapes. Returns record arrays with leading dims (B, n_requests); row b
-    is bit-identical to ``simulate(prof, cfg_b)`` for the matching
-    config."""
+    Args:
+      prof: fleet profile, either a single ``(P, G)`` table or a stacked
+        ``(F, P, G)`` ensemble (``repro.core.profiles.stack_profiles``);
+        a stacked table runs every fleet × config combination in the same
+        fused program.
+      grid: struct-of-arrays batch from :func:`make_grid`, leading dim B.
+      n_requests: scan length. Required (no default) and must match the
+        configs the grid was built from — the grid carries only traced
+        leaves, not scan shapes.
+
+    Returns:
+      Dict of float32/int32 record arrays with leading dims
+      ``(B, n_requests)`` — ``(F, B, n_requests)`` when ``prof`` is
+      stacked. Row ``b`` (of fleet ``f``) is bit-identical to
+      ``simulate(prof_f, cfg_b)`` for the matching config: padding users
+      to ``n_users_max`` and batching over configs/fleets never changes
+      any config's trajectory.
+    """
     return _simulate_vmapped(prof, grid, n_requests=n_requests)
 
 
@@ -298,15 +491,31 @@ def _summarize_core(recs, prof: ProfileTable, warmup: int):
 
 
 def summarize(recs, prof: ProfileTable, cfg: SimConfig):
-    """Aggregate a record set into the paper's Fig. 4/5 metrics."""
+    """Aggregate a record set into the paper's Fig. 4/5 metrics.
+    Single-fleet only (a stacked table's floor term would silently sum
+    over fleets); use :func:`summarize_batch` for ensembles."""
+    if prof.is_stacked:
+        raise ValueError("summarize() takes a single (P, G) ProfileTable; "
+                         "use summarize_batch for stacked tables")
     n = recs["latency"].shape[0]
     return _summarize_core(recs, prof, int(n * cfg.warmup_frac))
 
 
 @functools.partial(jax.jit, static_argnames=("warmup",))
 def summarize_batch(recs, prof: ProfileTable, *, warmup: int):
-    """Batched :func:`summarize` over (B, n_requests) record arrays."""
-    return jax.vmap(lambda r: _summarize_core(r, prof, warmup))(recs)
+    """Batched :func:`summarize` over ``(B, n_requests)`` record arrays
+    (``(F, B, n_requests)`` with a stacked ``prof`` — the fleet axis of
+    ``recs`` must match ``prof.n_fleets``). ``warmup`` is the number of
+    leading records dropped per config, usually
+    ``int(n_requests * warmup_frac)``. Returns ``(B,)`` / ``(F, B)``
+    float32 metric vectors; reductions are per config, so values match the
+    scalar :func:`summarize` to float32 tolerance (vmap may reassociate)."""
+    def per_fleet(r, pf):
+        return jax.vmap(lambda r1: _summarize_core(r1, pf, warmup))(r)
+
+    if prof.is_stacked:
+        return jax.vmap(per_fleet)(recs, prof)
+    return per_fleet(recs, prof)
 
 
 def run_policy(prof: ProfileTable, policy: str, n_users: int,
@@ -326,14 +535,33 @@ SWEEP_AXES = ("policy", "users", "gamma", "delta", "oracle", "seed")
 def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
                gammas=(0.5,), deltas=(20.0,), oracle=(False,),
                seeds=(0, 1, 2), n_requests: int = 2000,
-               stickiness: float = 0.85, warmup_frac: float = 0.1):
+               stickiness: float = 0.85, warmup_frac: float = 0.1,
+               mesh=None):
     """Cartesian-product sweep as a single fused device program.
 
-    Returns ``{metric: ndarray}`` with shape ``(len(policies),
-    len(user_levels), len(gammas), len(deltas), len(oracle), len(seeds))``
-    — axis order as in :data:`SWEEP_AXES`. The whole grid is one
-    ``vmap(simulate + summarize)`` under one jit; the trace is cached
-    across calls with the same batch size and scan length."""
+    Args:
+      prof: fleet profile; a stacked ``(F, P, G)`` ensemble sweeps every
+        fleet over the same grid in one program.
+      policies / user_levels / gammas / deltas / oracle / seeds: the grid
+        axes (axis order :data:`SWEEP_AXES`); their Cartesian product is
+        flattened into one :func:`make_grid` batch of
+        ``B = prod(axis lengths)`` configs.
+      n_requests, stickiness, warmup_frac: shared scalar parameters (scan
+        shape / chain stickiness / warmup fraction) for every config.
+      mesh: optional ``jax.sharding.Mesh`` (e.g.
+        ``repro.launch.mesh.make_sweep_mesh()``). When given, the flat
+        config axis is sharded over every mesh axis via ``shard_map``,
+        padding B up to a multiple of the device count; results are
+        bit-identical to the single-device path.
+
+    Returns:
+      ``{metric: float64 ndarray}`` with shape ``(len(policies),
+      len(user_levels), len(gammas), len(deltas), len(oracle),
+      len(seeds))``, with a leading fleet axis when ``prof`` is stacked.
+      The whole grid is one ``vmap(simulate + summarize)`` under one jit;
+      the trace is cached across calls with the same batch size, scan
+      length, and mesh.
+    """
     combos = list(itertools.product(policies, user_levels, gammas, deltas,
                                     oracle, seeds))
     cfgs = [SimConfig(n_users=nu, n_requests=n_requests, policy=pol,
@@ -341,10 +569,12 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
                       warmup_frac=warmup_frac, oracle_estimator=orc)
             for pol, nu, ga, de, orc, sd in combos]
     grid = make_grid(prof, cfgs)
-    out = _sweep_fused(prof, grid, n_requests=n_requests,
-                       warmup=int(n_requests * warmup_frac))
+    out = _sweep_summaries(prof, grid, n_requests=n_requests,
+                           warmup=int(n_requests * warmup_frac), mesh=mesh)
     shape = (len(policies), len(user_levels), len(gammas), len(deltas),
              len(oracle), len(seeds))
+    if prof.is_stacked:
+        shape = (prof.n_fleets,) + shape
     return {k: np.asarray(v, np.float64).reshape(shape)
             for k, v in out.items()}
 
@@ -354,7 +584,11 @@ def sweep(prof: ProfileTable, policies, user_levels, n_requests: int = 2000,
     """Full Fig. 4-style sweep; returns {policy: {metric: [per-level mean]}}.
     Each configuration runs ``len(seeds)`` times (paper: 3 repetitions).
     The entire policies × user_levels × seeds grid executes as one batched
-    device program (:func:`sweep_grid`)."""
+    device program (:func:`sweep_grid`). Single-fleet only — the per-policy
+    dict layout has no fleet axis; use :func:`sweep_grid` for ensembles."""
+    if prof.is_stacked:
+        raise ValueError("sweep() returns a per-policy dict with no fleet "
+                         "axis; pass stacked ProfileTables to sweep_grid()")
     m = sweep_grid(prof, policies=policies, user_levels=user_levels,
                    gammas=(gamma,), deltas=(delta,), seeds=seeds,
                    n_requests=n_requests)

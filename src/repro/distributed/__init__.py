@@ -1,9 +1,9 @@
 from repro.distributed.sharding import (
-    AxisRules,
     DEFAULT_RULES,
+    AxisRules,
+    batch_spec,
     logical_to_mesh,
     shard_tree,
-    batch_spec,
 )
 
 __all__ = [

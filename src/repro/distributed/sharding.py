@@ -109,6 +109,45 @@ def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def config_axis_spec(mesh: Mesh) -> P:
+    """PartitionSpec sharding an array's leading dim over EVERY mesh axis.
+
+    Used by the sharded sweep engine: a flat batch axis (the config axis of
+    a ``ConfigGrid``) has no preferred mesh factorisation, so it is split
+    across the product of all axes — a 1-D ``('config',)`` sweep mesh and a
+    2-D ``('data', 'model')`` serving mesh shard it equally well. Trailing
+    dims are replicated.
+    """
+    return P(mesh.axis_names)
+
+
+def pad_leading(tree: Any, multiple: int) -> tuple[Any, int]:
+    """Pad every leaf's leading dim up to a multiple of ``multiple`` by
+    repeating the first row; returns ``(padded_tree, original_length)``.
+
+    All leaves must agree on the leading dim. Repeating a *valid* row (not
+    zeros) keeps the padded rows on the exact code path of real ones, so
+    padding can never introduce NaNs/infs that would trip XLA debug checks;
+    callers slice the result back to ``original_length``.
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree, 0
+    n = {int(leaf.shape[0]) for leaf in leaves}
+    if len(n) != 1:
+        raise ValueError(f"pad_leading: leaves disagree on leading dim: "
+                         f"{sorted(n)}")
+    (n,) = n
+    pad = (-n) % multiple
+    if pad == 0:
+        return tree, n
+    padded = jax.tree.map(
+        lambda x: np.concatenate(
+            [np.asarray(x), np.repeat(np.asarray(x[:1]), pad, axis=0)]),
+        tree)
+    return padded, n
+
+
 def _present(mesh: Mesh, axes: Sequence[str] | None) -> tuple[str, ...] | None:
     """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""
     if axes is None:

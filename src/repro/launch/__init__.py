@@ -1,3 +1,3 @@
-from repro.launch.mesh import make_production_mesh, make_local_mesh
+from repro.launch.mesh import make_local_mesh, make_production_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh"]

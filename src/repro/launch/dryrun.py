@@ -28,8 +28,8 @@ import traceback
 
 import jax
 
-from repro.common import flags
 from repro import configs as C
+from repro.common import flags
 from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
 from repro.roofline.analysis import Roofline, collective_bytes

@@ -41,6 +41,16 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return compat_mesh(shape, axes)
 
 
+def make_sweep_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D ``('config',)`` mesh over local devices for sharded grid sweeps
+    (``repro.core.simulator.sweep_grid(..., mesh=...)``). The sweep shards
+    the flat config axis of a ``ConfigGrid`` across every mesh device; the
+    grid is embarrassingly parallel, so any device count works (the config
+    axis is padded up to a multiple of it)."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return compat_mesh((n,), ("config",))
+
+
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Mesh over however many local devices exist (tests / examples)."""
     n = len(jax.devices())

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.sharding import constraint
 from repro.common import flags
+from repro.distributed.sharding import constraint
 
 f32 = jnp.float32
 

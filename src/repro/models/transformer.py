@@ -19,8 +19,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.common.configs import LMConfig
 from repro.common import flags
+from repro.common.configs import LMConfig
 from repro.common.precision import parse_dtype
 from repro.distributed.sharding import constraint
 from repro.models import layers as L

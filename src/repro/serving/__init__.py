@@ -1,6 +1,6 @@
-from repro.serving.request import Request, Response
-from repro.serving.gateway import Gateway
-from repro.serving.executor import Executor
 from repro.serving.engine import ServingEngine
+from repro.serving.executor import Executor
+from repro.serving.gateway import Gateway
+from repro.serving.request import Request, Response
 
 __all__ = ["Request", "Response", "Gateway", "Executor", "ServingEngine"]

@@ -46,10 +46,12 @@ def _adamw(b1: float, b2: float, eps: float, wd: float) -> Optimizer:
             return (p.astype(f32) - lr * u).astype(p.dtype), m, v
 
         out = jax.tree.map(upd, grads, state["m"], state["v"], params)
-        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
-        return new_p, {"m": new_m, "v": new_v}
+
+        def pick(i):
+            return jax.tree.map(lambda o: o[i], out,
+                                is_leaf=lambda x: isinstance(x, tuple))
+
+        return pick(0), {"m": pick(1), "v": pick(2)}
 
     return Optimizer(init, update)
 

@@ -10,8 +10,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.common.configs import TrainingConfig
 from repro.common import flags
+from repro.common.configs import TrainingConfig
 from repro.training.optimizer import make_optimizer
 from repro.training.schedule import warmup_cosine
 

@@ -70,3 +70,29 @@ def test_main_end_to_end(tmp_path):
     assert check_bench.main([str(new), str(base)]) == 0
     base.write_text(json.dumps(_artifact(seconds=0.9)))
     assert check_bench.main([str(new), str(base)]) == 1
+
+
+def _with_extra_suite(art):
+    art["suites"]["sweep_sharded"] = {"rows": ["s.a,1"], "seconds": 1.0,
+                                      "error": None}
+    return art
+
+
+def test_stale_suites_detects_unmonitored():
+    base = _artifact()
+    new = _with_extra_suite(_artifact())
+    assert check_bench.stale_suites(new, base) == ["sweep_sharded"]
+    assert check_bench.stale_suites(_artifact(), base) == []
+
+
+def test_main_stale_baseline_warns_and_strict_fails(tmp_path, capsys):
+    new = tmp_path / "new.json"
+    base = tmp_path / "base.json"
+    new.write_text(json.dumps(_with_extra_suite(_artifact(seconds=2.0))))
+    base.write_text(json.dumps(_artifact(seconds=2.0)))
+    # default: warn but pass
+    assert check_bench.main([str(new), str(base)]) == 0
+    assert "WARN" in capsys.readouterr().out
+    # --strict: the stale baseline is a failure
+    assert check_bench.main([str(new), str(base), "--strict"]) == 1
+    assert "no baseline entry" in capsys.readouterr().out

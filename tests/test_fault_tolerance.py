@@ -10,12 +10,12 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
-                              restore_checkpoint, save_checkpoint,
-                              reshard_restore)
+                              reshard_restore, restore_checkpoint,
+                              save_checkpoint)
 from repro.checkpoint.checkpointer import all_steps
 from repro.training.compression import (compress_roundtrip,
-                                        compression_error, quantize_int8,
-                                        dequantize_int8)
+                                        compression_error, dequantize_int8,
+                                        quantize_int8)
 
 
 @pytest.fixture()

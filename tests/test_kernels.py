@@ -6,11 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention import flash_attention, ref_attention
+from repro.core.profiles import paper_fleet, synthetic_fleet
 from repro.kernels.decode_attention import (decode_attention,
                                             ref_decode_attention)
+from repro.kernels.flash_attention import flash_attention, ref_attention
 from repro.kernels.moscore import moscore_route, ref_moscore_route
-from repro.core.profiles import paper_fleet, synthetic_fleet
 
 
 def _tol(dtype):

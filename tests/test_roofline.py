@@ -20,10 +20,11 @@ def test_shape_bytes():
 
 
 def test_collective_parse_iota_groups():
-    hlo = """
-  %ar.1 = f32[8,16]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
-  %ag.2 = bf16[4,32]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={1}
-"""
+    hlo = (
+        "\n  %ar.1 = f32[8,16]{1,0} all-reduce(%x), channel_id=1, "
+        "replica_groups=[16,16]<=[256], to_apply=%add\n"
+        "  %ag.2 = bf16[4,32]{1,0} all-gather(%y), "
+        "replica_groups={{0,1,2,3}}, dimensions={1}\n")
     out = collective_bytes(hlo)
     ar = 8 * 16 * 4 * _ring_factor("all-reduce", 16)
     ag = 4 * 32 * 2 * _ring_factor("all-gather", 4)

@@ -1,0 +1,105 @@
+"""Multi-device sweep sharding: bit-identical results across meshes, and
+the padding helper's invariants. The in-process tests run on whatever
+devices exist (a 1-device mesh still exercises the shard_map path); the
+true multi-device guarantee is checked in a subprocess with 4 forced host
+devices, so it holds even on single-device CI runners."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.profiles import paper_fleet, stack_profiles, synthetic_fleet
+from repro.core.simulator import ConfigGrid, SimConfig, make_grid, sweep_grid
+from repro.distributed.sharding import config_axis_spec, pad_leading
+from repro.launch.mesh import make_sweep_mesh
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _small_sweep(mesh=None, prof=None):
+    return sweep_grid(prof if prof is not None else paper_fleet(),
+                      policies=("MO", "LT", "HA"), user_levels=(3, 7),
+                      seeds=(0, 1), n_requests=250, mesh=mesh)
+
+
+def test_sharded_equals_single_on_local_mesh():
+    """shard_map path == plain vmap path, bit for bit (any device count;
+    12 configs over the mesh exercises padding whenever the device count
+    doesn't divide 12)."""
+    ref = _small_sweep()
+    out = _small_sweep(mesh=make_sweep_mesh())
+    for k in ref:
+        np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
+
+
+def test_sharded_equals_single_stacked_fleet():
+    fleets = stack_profiles(
+        [synthetic_fleet(jax.random.PRNGKey(i), 5) for i in range(2)])
+    ref = _small_sweep(prof=fleets)
+    out = _small_sweep(mesh=make_sweep_mesh(), prof=fleets)
+    assert ref["latency_ms"].shape[0] == 2
+    for k in ref:
+        np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
+
+
+_SUBPROC_CHECK = """
+import jax, numpy as np
+from repro.core.profiles import paper_fleet
+from repro.core.simulator import sweep_grid
+from repro.launch.mesh import make_sweep_mesh
+
+assert len(jax.devices()) == 4, jax.devices()
+kw = dict(policies=("MO", "RR", "LC", "LT", "HA"), user_levels=(3, 7),
+          seeds=(0,), n_requests=150)          # 10 configs -> padded to 12
+prof = paper_fleet()
+ref = sweep_grid(prof, **kw)
+out = sweep_grid(prof, mesh=make_sweep_mesh(), **kw)
+for k in ref:
+    np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
+print("OK")
+"""
+
+
+def test_sharded_bitwise_in_forced_4_device_subprocess():
+    """Real multi-device bit-exactness, via xla_force_host_platform_device
+    _count=4 in a fresh process (the flag only takes effect at jax init)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=str(REPO / "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, "-c", _SUBPROC_CHECK], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout
+
+
+def test_pad_leading_pads_and_preserves():
+    prof = paper_fleet()
+    cfgs = [SimConfig(n_users=u, n_requests=100, seed=u) for u in (2, 5, 9)]
+    grid = make_grid(prof, cfgs)
+    padded, n = pad_leading(grid, 4)
+    assert n == 3
+    assert all(leaf.shape[0] == 4 for leaf in jax.tree.leaves(padded))
+    for name in ConfigGrid._fields:
+        a, b = np.asarray(getattr(padded, name)), \
+            np.asarray(getattr(grid, name))
+        np.testing.assert_array_equal(a[:3], b, err_msg=name)
+        np.testing.assert_array_equal(a[3], b[0], err_msg=name)
+    same, n = pad_leading(grid, 3)
+    assert n == 3 and same is grid
+
+
+def test_config_axis_spec_uses_every_mesh_axis():
+    mesh = make_sweep_mesh()
+    spec = config_axis_spec(mesh)
+    assert tuple(spec) == (mesh.axis_names,)
+    ragged = ConfigGrid(*(jnp.zeros((3,)),) * 6,
+                        jnp.zeros((2, 2)), jnp.zeros((3, 4)))
+    with pytest.raises(ValueError, match="leading dim"):
+        pad_leading(ragged, 4)
