@@ -3,6 +3,7 @@ roofline. Prints CSV: name,<columns...>.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only SUITE]
                                           [--json PATH] [--sharded]
+                                          [--workload {markov,trace}]
 
 Each suite is documented in ``docs/benchmarks.md``.
 
@@ -12,7 +13,12 @@ Running benchmarks / CI
 multi-device fast path: it routes every sweep suite (fig4/fig5/ablation)
 through ``sweep_grid(..., mesh=make_sweep_mesh())``, sharding the config
 axis across all local devices — results are bit-identical to the default
-path, only faster on >1 device. ``--json PATH`` additionally writes a
+path, only faster on >1 device. ``--workload trace`` swaps the sweep
+suites' scene-complexity source from the synthetic Markov chain to the
+bundled recorded trace (``repro.data.traces.bundled_trace``) — same
+grids, real video statistics; the dedicated ``workload_trace`` suite
+times the trace path against the Markov default either way.
+``--json PATH`` additionally writes a
 ``BENCH_*.json``-style artifact: per-suite CSV rows plus wall-clock
 seconds (``suites.<name>.seconds``) and environment metadata — the format
 ``scripts/check_bench.py`` validates and diffs against the committed
@@ -53,29 +59,44 @@ def main() -> None:
                     help="run the sweep suites sharded across all local "
                          "devices (sweep_grid mesh= fast path; "
                          "bit-identical results)")
+    ap.add_argument("--workload", choices=("markov", "trace"),
+                    default="markov",
+                    help="scene-complexity source for the sweep suites: "
+                         "the synthetic Markov chain (default) or the "
+                         "bundled recorded trace")
     args = ap.parse_args()
 
     from benchmarks import (ablation_delta, bench_kernels, bench_scale,
                             fig2_motivation, fig4_baselines, fig5_gamma,
-                            roofline_summary, sweep_sharded, table1_pairs)
+                            roofline_summary, sweep_sharded, table1_pairs,
+                            workload_trace)
 
     mesh = None
     if args.sharded:
         from repro.launch.mesh import make_sweep_mesh
         mesh = make_sweep_mesh()
+    workload = None
+    if args.workload == "trace":
+        from repro.data.traces import bundled_trace
+        workload = bundled_trace()
 
     suites = {
         "fig2": lambda: fig2_motivation.run(),
         "table1": lambda: table1_pairs.run(),
         "fig4": lambda: fig4_baselines.run(
             n_requests=600 if args.fast else 1500,
-            seeds=(0,) if args.fast else (0, 1, 2), mesh=mesh),
+            seeds=(0,) if args.fast else (0, 1, 2), mesh=mesh,
+            workload=workload),
         "fig5": lambda: fig5_gamma.run(
             n_requests=600 if args.fast else 1500,
-            seeds=(0,) if args.fast else (0, 1), mesh=mesh),
-        "ablation": lambda: ablation_delta.run(mesh=mesh),
+            seeds=(0,) if args.fast else (0, 1), mesh=mesh,
+            workload=workload),
+        "ablation": lambda: ablation_delta.run(mesh=mesh,
+                                               workload=workload),
         "scale": lambda: bench_scale.run(),
         "sweep_sharded": lambda: sweep_sharded.run(),
+        "workload_trace": lambda: workload_trace.run(
+            n_requests=250 if args.fast else 400),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: roofline_summary.run(),
     }
@@ -108,6 +129,7 @@ def main() -> None:
         artifact = {
             "schema": "repro-bench/v1",
             "fast": bool(args.fast),
+            "workload": args.workload,
             "created_unix": round(time.time(), 1),
             "jax_version": jax.__version__,
             "backend": jax.default_backend(),

@@ -12,6 +12,16 @@ instead of one trace + launch per configuration. Differing concurrency
 levels share the trace by padding users to ``n_users_max`` and masking the
 padded streams to ``t = +inf`` so they never dispatch.
 
+Scene complexity comes from a pluggable :class:`~repro.core.workload.
+WorkloadSource` (the ``workload=`` argument throughout): the source owns
+the initial per-user count draw at grid-build time and the per-dispatch
+count step inside the scan. The default is the paper's synthetic Markov
+chain (``repro.core.workload.MarkovWorkload``, bit-identical to the
+engine before the interface existed); ``repro.data.traces.TraceWorkload``
+plays recorded object-count traces instead. Sources are pytrees
+replicated across the config axis, so both compose with vmap, sharding
+and fleet stacking unchanged.
+
 Bit-exactness across batching: jax's threefry draws are not prefix-stable
 across shapes (the first U samples of a ``(U_max,)`` draw differ from a
 ``(U,)`` draw), so the initial per-user complexity states are drawn
@@ -37,9 +47,10 @@ fixed order **(fleet, config, user, time)** —
 
 Grid building is memoized and vectorised: per-config initial draws depend
 only on (seed, stickiness, n_users), so :func:`make_grid` computes each
-distinct triple once (process-wide cache, see :func:`grid_cache_info`) and
-batches cache misses per ``n_users`` level with one vmapped threefry draw —
-a 10^5-config grid builds in milliseconds.
+distinct triple once per workload source (process-wide for the Markov
+default, see ``repro.core.workload.grid_cache_info``) and batches cache
+misses per ``n_users`` level with one vmapped threefry draw — a
+10^5-config grid builds in milliseconds.
 
 Faithfulness notes:
   * service time / energy / accuracy are drawn from ``ProfileTable`` at the
@@ -55,7 +66,7 @@ from __future__ import annotations
 
 import functools
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import NamedTuple
 
 import jax
@@ -67,7 +78,18 @@ from jax.sharding import Mesh, PartitionSpec
 from repro.core import estimator as EST
 from repro.core.policies import POLICY_CODES, policy_scores
 from repro.core.profiles import ProfileTable
+from repro.core.workload import (MarkovWorkload, WorkloadSource,
+                                 _init_draws, default_workload,
+                                 grid_cache_clear, grid_cache_info)
 from repro.distributed.sharding import config_axis_spec, pad_leading
+
+# Historical home of the grid draw machinery — tests and callers import
+# these from here; the implementations moved to repro.core.workload with
+# the WorkloadSource split.
+__all__ = ["SimConfig", "ConfigGrid", "make_grid", "simulate",
+           "simulate_batch", "summarize", "summarize_batch", "run_policy",
+           "sweep", "sweep_grid", "SWEEP_AXES", "grid_cache_info",
+           "grid_cache_clear", "_init_draws", "default_workload"]
 
 f32 = jnp.float32
 i32 = jnp.int32
@@ -86,15 +108,20 @@ class SimConfig:
     warmup_frac: float = 0.1
     oracle_estimator: bool = False   # ablation: g_est = g_true (perfect
                                      # complexity knowledge; benchmarks)
+    workload: WorkloadSource | None = field(default=None, compare=False)
+    # scene-complexity source; None = the Markov default. All configs in
+    # one grid must share a single source (it is grid data, like prof).
 
 
 class ConfigGrid(NamedTuple):
     """Struct-of-arrays batch of simulator configs — the traced leaves of a
     ``SimConfig``. All fields have leading dim (B,); ``rng`` is the (B, 2)
     uint32 scan key and ``true0`` the (B, n_users_max) initial true object
-    counts, both drawn host-side per config (see module docstring).
-    ``simulate`` also uses it batch-less (scalar leaves, (U,) true0) so
-    single and vmapped paths share one by-name field access path."""
+    counts, both drawn host-side per config (see module docstring);
+    ``phase`` is the (B, n_users_max) per-user frame phase offset of the
+    workload source (zeros for the Markov chain). ``simulate`` also uses
+    it batch-less (scalar leaves, (U,) true0/phase) so single and vmapped
+    paths share one by-name field access path."""
 
     policy_code: jax.Array      # (B,) int32 index into POLICY_CODES
     n_users: jax.Array          # (B,) int32 live concurrency (<= n_users_max)
@@ -104,6 +131,7 @@ class ConfigGrid(NamedTuple):
     oracle: jax.Array           # (B,) bool   g_est = g_true ablation
     rng: jax.Array              # (B, 2) uint32
     true0: jax.Array            # (B, n_users_max) int32
+    phase: jax.Array            # (B, n_users_max) int32 workload phase
 
     @property
     def n_configs(self) -> int:
@@ -115,77 +143,28 @@ class ConfigGrid(NamedTuple):
         return int(self.true0.shape[-1])
 
 
-def _init_draws_impl(seed, stickiness, *, n_groups: int, n_users: int):
-    """Initial user states + scan key for one config, with the config's own
-    ``n_users``-shaped categorical draw (the shape-sensitive part)."""
-    P_trans = EST.markov_transition(n_groups, stickiness)
-    rng = jax.random.PRNGKey(seed)
-    k_init, rng = jax.random.split(rng)
-    pi0 = EST.stationary(P_trans)
-    true0 = jax.random.categorical(k_init, jnp.log(pi0 + 1e-9),
-                                   shape=(n_users,))
-    return true0.astype(i32), rng
-
-
-_init_draws = functools.partial(jax.jit, static_argnames=(
-    "n_groups", "n_users"))(_init_draws_impl)
-
-
-@functools.partial(jax.jit, static_argnames=("n_groups",))
-def _init_priors_batch(seeds, stickiness, *, n_groups: int):
-    """Shape-independent half of the batched initial draw: per (seed,
-    stickiness) key, the stationary distribution and the split threefry
-    keys. One compile serves every ``n_users`` level — only the categorical
-    draw below is shape-sensitive. Threefry is counter-based, so each row
-    is bit-identical to its own scalar :func:`_init_draws` call."""
-
-    def one(seed, stick):
-        P_trans = EST.markov_transition(n_groups, stick)
-        rng = jax.random.PRNGKey(seed)
-        k_init, rng = jax.random.split(rng)
-        return EST.stationary(P_trans), k_init, rng
-
-    return jax.vmap(one)(seeds, stickiness)
-
-
-@functools.partial(jax.jit, static_argnames=("n_users",))
-def _init_categorical_batch(k_init, pi0, *, n_users: int):
-    """Shape-sensitive half: the config's own ``n_users``-shaped
-    categorical draw (cheap per-level compile), vmapped over keys."""
-    return jax.vmap(lambda k, p: jax.random.categorical(
-        k, jnp.log(p + 1e-9), shape=(n_users,)).astype(i32))(k_init, pi0)
-
-
-def _pow2_pad(items: list) -> list:
-    """Pad a work list to a power of two by repeating its head, bounding
-    the set of compiled batch shapes to O(log n) per static signature."""
-    return items + [items[0]] * ((1 << (len(items) - 1).bit_length())
-                                 - len(items))
-
-
-# (seed, stickiness, n_users, n_groups) -> (true0 (n_users,) i32, rng (2,)
-# u32) as numpy. The draw depends on nothing else, and a Fig. 4 grid of 168
-# configs has only 24 distinct triples — memoizing + batching misses per
-# n_users level is what lets 10^5-config grids build in milliseconds.
-_DRAW_CACHE: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
-_DRAW_STATS = {"hits": 0, "misses": 0}
-
-
-def grid_cache_info() -> dict[str, int]:
-    """Stats for the :func:`make_grid` initial-draw cache: per-config
-    ``hits``/``misses`` counters and the number of distinct draws held
-    (``size``). Process-wide; reset with :func:`grid_cache_clear`."""
-    return dict(_DRAW_STATS, size=len(_DRAW_CACHE))
-
-
-def grid_cache_clear() -> None:
-    """Drop all memoized initial draws and zero the hit/miss counters."""
-    _DRAW_CACHE.clear()
-    _DRAW_STATS.update(hits=0, misses=0)
+def _resolve_workload(workload, cfgs=()) -> WorkloadSource:
+    """One workload source for a whole grid: the explicit argument wins;
+    otherwise the single source the configs agree on (None = Markov
+    default). Mixing sources in one grid is an error — the source is grid
+    data shared by every config, exactly like the profile table."""
+    found = {id(c.workload): c.workload for c in cfgs
+             if c.workload is not None}
+    if workload is None and found:
+        if len(found) > 1:
+            raise ValueError("configs in one grid must share a single "
+                             "workload source")
+        (workload,) = found.values()
+    elif workload is not None and any(w is not workload
+                                      for w in found.values()):
+        raise ValueError("workload= argument conflicts with the configs' "
+                         "own workload source")
+    return workload if workload is not None else default_workload()
 
 
 def make_grid(prof: ProfileTable, configs,
-              n_users_max: int | None = None) -> ConfigGrid:
+              n_users_max: int | None = None,
+              workload: WorkloadSource | None = None) -> ConfigGrid:
     """Pack an iterable of :class:`SimConfig` into a padded
     :class:`ConfigGrid`.
 
@@ -200,6 +179,10 @@ def make_grid(prof: ProfileTable, configs,
       n_users_max: pad width of the user axis; defaults to the largest
         ``n_users`` in the batch. Padded streams are masked to never
         dispatch, so the pad width does not change results.
+      workload: scene-complexity source drawing the initial states (and
+        later stepped inside the scan — pass the SAME source to
+        ``simulate_batch``). Defaults to the configs' shared source, else
+        the Markov chain.
 
     Returns:
       A :class:`ConfigGrid` with leading dim ``B = len(configs)``
@@ -208,9 +191,10 @@ def make_grid(prof: ProfileTable, configs,
     Determinism: each config's initial state is drawn with its own
     ``n_users``-shaped threefry stream keyed on (seed, stickiness), so row
     ``b`` of any batched/sharded run is bit-identical to the unbatched
-    ``simulate`` of config ``b``. Draws are memoized process-wide on
-    (seed, stickiness, n_users, n_groups) and cache misses are computed in
-    one vmapped batch per ``n_users`` level (see :func:`grid_cache_info`).
+    ``simulate`` of config ``b``. Markov draws are memoized process-wide
+    on (seed, stickiness, n_users, n_groups) and cache misses are computed
+    in one vmapped batch per ``n_users`` level (see
+    ``repro.core.workload.grid_cache_info``).
     """
     cfgs = list(configs)
     if not cfgs:
@@ -220,33 +204,21 @@ def make_grid(prof: ProfileTable, configs,
             "configs in one grid must agree on n_requests/warmup_frac "
             "(they are scan-shape parameters, passed separately to "
             "simulate_batch/summarize_batch)")
+    workload = _resolve_workload(workload, cfgs)
     U = max(c.n_users for c in cfgs) if n_users_max is None else n_users_max
     G = prof.n_groups
 
     keys = [(c.seed, float(c.stickiness), c.n_users, G) for c in cfgs]
-    missing = sorted({k for k in keys if k not in _DRAW_CACHE})
-    _DRAW_STATS["misses"] += len(missing)
-    _DRAW_STATS["hits"] += len(keys) - len(missing)
-    if missing:
-        padded = _pow2_pad(missing)
-        pi0, k_init, rngs = _init_priors_batch(
-            jnp.asarray([k[0] for k in padded], i32),
-            jnp.asarray([k[1] for k in padded], f32), n_groups=G)
-        rngs = np.asarray(rngs)
-        for nu in sorted({k[2] for k in missing}):
-            idx = [i for i, k in enumerate(missing) if k[2] == nu]
-            sel = jnp.asarray(_pow2_pad(idx), i32)
-            t0s = np.asarray(_init_categorical_batch(
-                k_init[sel], pi0[sel], n_users=nu))
-            for j, i in enumerate(idx):
-                _DRAW_CACHE[missing[i]] = (t0s[j], rngs[i])
+    draws = workload.grid_draws(keys)
 
     true0 = np.zeros((len(cfgs), U), np.int32)
     rng = np.zeros((len(cfgs), 2), np.uint32)
+    phase = np.zeros((len(cfgs), U), np.int32)
     for i, k in enumerate(keys):
-        t0, r = _DRAW_CACHE[k]
+        t0, r, ph = draws[k]
         true0[i, :k[2]] = t0
         rng[i] = r
+        phase[i, :k[2]] = ph
     return ConfigGrid(
         policy_code=jnp.asarray([POLICY_CODES[c.policy] for c in cfgs], i32),
         n_users=jnp.asarray([c.n_users for c in cfgs], i32),
@@ -256,26 +228,30 @@ def make_grid(prof: ProfileTable, configs,
         oracle=jnp.asarray([c.oracle_estimator for c in cfgs], bool),
         rng=jnp.asarray(rng),
         true0=jnp.asarray(true0),
+        phase=jnp.asarray(phase),
     )
 
 
-def _simulate_core(prof: ProfileTable, policy_code, n_users, gamma, delta,
-                   oracle, stickiness, rng, true0, *, n_requests: int):
+def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
+                   policy_code, n_users, gamma, delta, oracle, stickiness,
+                   rng, true0, phase, *, n_requests: int):
     """Trace body shared by the single and batched paths. Every config
     parameter is a traced array; the only static shapes are ``n_requests``
-    (scan length) and ``true0``'s length (``n_users_max``). Padded users
-    (index >= n_users) sit at ``t_next = +inf`` and never dispatch."""
+    (scan length), ``true0``'s length (``n_users_max``) and the workload
+    source's own data. Padded users (index >= n_users) sit at
+    ``t_next = +inf`` and never dispatch."""
     P = prof.n_pairs
     G = prof.n_groups
     U = true0.shape[0]
     code = jnp.asarray(policy_code, i32)
-    P_trans = EST.markov_transition(G, stickiness)
+    wctx = workload.prepare(G, stickiness)
     mask = jnp.arange(U) < n_users
 
     carry = {
         "t_next": jnp.where(mask, jnp.arange(U, dtype=f32) * 1e-4, jnp.inf),
         "true_cnt": true0.astype(i32),
         "est_cnt": true0.astype(i32),
+        "pos": jnp.zeros((U,), i32),     # dispatches so far per user
         "server_by_user": jnp.full((U,), -1, i32),
         "finish_by_user": jnp.zeros((U,), f32),
         "avail": jnp.zeros((P,), f32),
@@ -286,13 +262,15 @@ def _simulate_core(prof: ProfileTable, policy_code, n_users, gamma, delta,
     gamma = jnp.asarray(gamma, f32)
     delta = jnp.asarray(delta, f32)
     oracle = jnp.asarray(oracle, bool)
+    phase = jnp.asarray(phase, i32)
 
     def step(c, _):
         u = jnp.argmin(c["t_next"])
         t = c["t_next"][u]
         rng, k1, k2, k3 = jax.random.split(c["rng"], 4)
 
-        new_true = EST.markov_step(k1, c["true_cnt"][u][None], P_trans)[0]
+        new_true = workload.next_count(wctx, k1, c["true_cnt"][u], u,
+                                       phase[u] + c["pos"][u] + 1)
         g_true = EST.group_of_count(new_true, G)
         g_est = jnp.where(oracle, g_true,
                           EST.group_of_count(c["est_cnt"][u], G))
@@ -315,6 +293,7 @@ def _simulate_core(prof: ProfileTable, policy_code, n_users, gamma, delta,
         nc["rng"] = rng
         nc["true_cnt"] = c["true_cnt"].at[u].set(new_true.astype(i32))
         nc["est_cnt"] = c["est_cnt"].at[u].set(detected)
+        nc["pos"] = c["pos"].at[u].add(1)
         nc["server_by_user"] = c["server_by_user"].at[u].set(p)
         nc["finish_by_user"] = c["finish_by_user"].at[u].set(finish)
         nc["avail"] = c["avail"].at[p].set(finish)
@@ -338,17 +317,17 @@ def _simulate_core(prof: ProfileTable, policy_code, n_users, gamma, delta,
     return recs
 
 
-def _simulate_config(prof, g: ConfigGrid, *, n_requests: int):
+def _simulate_config(prof, workload, g: ConfigGrid, *, n_requests: int):
     """One config (scalar ConfigGrid leaves) -> record arrays; fields are
     accessed by name so batched and single paths can't transpose leaves."""
-    return _simulate_core(prof, g.policy_code, g.n_users, g.gamma, g.delta,
-                          g.oracle, g.stickiness, g.rng, g.true0,
-                          n_requests=n_requests)
+    return _simulate_core(prof, workload, g.policy_code, g.n_users, g.gamma,
+                          g.delta, g.oracle, g.stickiness, g.rng, g.true0,
+                          g.phase, n_requests=n_requests)
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
-def _simulate_one(prof, g: ConfigGrid, *, n_requests: int):
-    return _simulate_config(prof, g, n_requests=n_requests)
+def _simulate_one(prof, workload, g: ConfigGrid, *, n_requests: int):
+    return _simulate_config(prof, workload, g, n_requests=n_requests)
 
 
 def _over_fleet(fn, prof):
@@ -361,14 +340,15 @@ def _over_fleet(fn, prof):
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
-def _simulate_vmapped(prof, grid: ConfigGrid, *, n_requests: int):
+def _simulate_vmapped(prof, workload, grid: ConfigGrid, *, n_requests: int):
     return _over_fleet(
         lambda pf: jax.vmap(
-            lambda g: _simulate_config(pf, g, n_requests=n_requests))(grid),
+            lambda g: _simulate_config(pf, workload, g,
+                                       n_requests=n_requests))(grid),
         prof)
 
 
-def _fused_summaries(prof, grid: ConfigGrid, *, n_requests: int,
+def _fused_summaries(prof, workload, grid: ConfigGrid, *, n_requests: int,
                      warmup: int):
     """The simulate + summarize composition over (fleet,) config — the ONE
     source of truth shared by the single-device jit and the shard_map'ed
@@ -378,7 +358,7 @@ def _fused_summaries(prof, grid: ConfigGrid, *, n_requests: int,
 
     def per_fleet(pf):
         def one(g):
-            recs = _simulate_config(pf, g, n_requests=n_requests)
+            recs = _simulate_config(pf, workload, g, n_requests=n_requests)
             return _summarize_core(recs, pf, warmup)
 
         return jax.vmap(one)(grid)
@@ -387,8 +367,9 @@ def _fused_summaries(prof, grid: ConfigGrid, *, n_requests: int,
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests", "warmup"))
-def _sweep_fused(prof, grid: ConfigGrid, *, n_requests: int, warmup: int):
-    return _fused_summaries(prof, grid, n_requests=n_requests,
+def _sweep_fused(prof, workload, grid: ConfigGrid, *, n_requests: int,
+                 warmup: int):
+    return _fused_summaries(prof, workload, grid, n_requests=n_requests,
                             warmup=warmup)
 
 
@@ -396,44 +377,52 @@ def _sweep_fused(prof, grid: ConfigGrid, *, n_requests: int, warmup: int):
 def _sweep_sharded_fn(mesh: Mesh, n_requests: int, warmup: int,
                       stacked: bool):
     """Build (and cache per mesh/shape signature) the shard_map'ed fused
-    sweep: the config axis is split over every mesh axis, the profile table
-    is replicated, and each shard runs the plain vmapped simulate +
-    summarize — no collectives, the grid is embarrassingly parallel."""
+    sweep: the config axis is split over every mesh axis, the profile
+    table and workload source are replicated, and each shard runs the
+    plain vmapped simulate + summarize — no collectives, the grid is
+    embarrassingly parallel. The inner jit re-specialises per workload
+    pytree structure, so one cache entry serves Markov and trace runs."""
     cspec = config_axis_spec(mesh)
     out_spec = PartitionSpec(None, *cspec) if stacked else cspec
 
-    def inner(pf, g):
-        return _fused_summaries(pf, g, n_requests=n_requests,
+    def inner(pf, wl, g):
+        return _fused_summaries(pf, wl, g, n_requests=n_requests,
                                 warmup=warmup)
 
-    return jax.jit(shard_map(inner, mesh=mesh,
-                             in_specs=(PartitionSpec(), cspec),
-                             out_specs=out_spec))
+    return jax.jit(shard_map(
+        inner, mesh=mesh,
+        in_specs=(PartitionSpec(), PartitionSpec(), cspec),
+        out_specs=out_spec))
 
 
-def _sweep_summaries(prof, grid: ConfigGrid, *, n_requests: int,
+def _sweep_summaries(prof, workload, grid: ConfigGrid, *, n_requests: int,
                      warmup: int, mesh: Mesh | None):
     """Dispatch a fused sweep to the single-device or sharded path; both
     return per-config summary dicts with config as the trailing axis of
     each (B,) / (F, B) leaf, bit-identical to each other."""
     if mesh is None:
-        return _sweep_fused(prof, grid, n_requests=n_requests, warmup=warmup)
+        return _sweep_fused(prof, workload, grid, n_requests=n_requests,
+                            warmup=warmup)
     n_dev = int(mesh.devices.size)
     padded, n = pad_leading(grid, n_dev)
     fn = _sweep_sharded_fn(mesh, n_requests, warmup, prof.is_stacked)
-    out = fn(prof, ConfigGrid(*map(jnp.asarray, padded)))
+    out = fn(prof, workload, ConfigGrid(*map(jnp.asarray, padded)))
     return {k: v[..., :n] for k, v in out.items()}
 
 
-def simulate(prof: ProfileTable, cfg: SimConfig):
+def simulate(prof: ProfileTable, cfg: SimConfig,
+             workload: WorkloadSource | None = None):
     """Returns a dict of per-request record arrays (length n_requests).
     Single-fleet only — stacked tables go through :func:`simulate_batch` /
-    :func:`sweep_grid`, which vmap the fleet axis."""
+    :func:`sweep_grid`, which vmap the fleet axis. ``workload`` defaults
+    to ``cfg.workload``, else the Markov chain."""
     if prof.is_stacked:
         raise ValueError("simulate() takes a single (P, G) ProfileTable; "
                          "pass stacked tables to simulate_batch/sweep_grid")
-    true0, rng = _init_draws(cfg.seed, cfg.stickiness,
-                             n_groups=prof.n_groups, n_users=cfg.n_users)
+    workload = _resolve_workload(workload, (cfg,))
+    true0, rng, phase = workload.init_draws(
+        cfg.seed, cfg.stickiness, n_groups=prof.n_groups,
+        n_users=cfg.n_users)
     g = ConfigGrid(
         policy_code=jnp.asarray(POLICY_CODES[cfg.policy], i32),
         n_users=jnp.asarray(cfg.n_users, i32),
@@ -441,11 +430,13 @@ def simulate(prof: ProfileTable, cfg: SimConfig):
         delta=jnp.asarray(cfg.delta, f32),
         stickiness=jnp.asarray(cfg.stickiness, f32),
         oracle=jnp.asarray(cfg.oracle_estimator, bool),
-        rng=rng, true0=true0)
-    return _simulate_one(prof, g, n_requests=cfg.n_requests)
+        rng=jnp.asarray(rng), true0=jnp.asarray(true0, i32),
+        phase=jnp.asarray(phase, i32))
+    return _simulate_one(prof, workload, g, n_requests=cfg.n_requests)
 
 
-def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int):
+def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
+                   workload: WorkloadSource | None = None):
     """Run every config in ``grid`` as ONE vmapped scan in ONE jit.
 
     Args:
@@ -457,6 +448,11 @@ def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int):
       n_requests: scan length. Required (no default) and must match the
         configs the grid was built from — the grid carries only traced
         leaves, not scan shapes.
+      workload: the scene-complexity source the grid was built with
+        (``make_grid(..., workload=...)``); defaults to the Markov
+        chain. Must match the build-time source — a grid whose ``phase``
+        leaf is nonzero (a trace draw) is rejected under the Markov
+        default rather than silently re-interpreted.
 
     Returns:
       Dict of float32/int32 record arrays with leading dims
@@ -466,7 +462,13 @@ def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int):
       to ``n_users_max`` and batching over configs/fleets never changes
       any config's trajectory.
     """
-    return _simulate_vmapped(prof, grid, n_requests=n_requests)
+    workload = _resolve_workload(workload)
+    if isinstance(workload, MarkovWorkload) and bool(grid.phase.any()):
+        raise ValueError(
+            "grid carries nonzero workload phase offsets (built with a "
+            "trace source) but simulate_batch resolved the Markov "
+            "default; pass the grid's own workload= explicitly")
+    return _simulate_vmapped(prof, workload, grid, n_requests=n_requests)
 
 
 def _summarize_core(recs, prof: ProfileTable, warmup: int):
@@ -520,10 +522,11 @@ def summarize_batch(recs, prof: ProfileTable, *, warmup: int):
 
 def run_policy(prof: ProfileTable, policy: str, n_users: int,
                n_requests: int = 2000, gamma: float = 0.5,
-               delta: float = 20.0, seed: int = 0, stickiness: float = 0.85):
+               delta: float = 20.0, seed: int = 0, stickiness: float = 0.85,
+               workload: WorkloadSource | None = None):
     cfg = SimConfig(n_users=n_users, n_requests=n_requests, policy=policy,
                     gamma=gamma, delta=delta, seed=seed,
-                    stickiness=stickiness)
+                    stickiness=stickiness, workload=workload)
     recs = simulate(prof, cfg)
     out = summarize(recs, prof, cfg)
     return {k: float(v) for k, v in out.items()}
@@ -536,7 +539,7 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
                gammas=(0.5,), deltas=(20.0,), oracle=(False,),
                seeds=(0, 1, 2), n_requests: int = 2000,
                stickiness: float = 0.85, warmup_frac: float = 0.1,
-               mesh=None):
+               mesh=None, workload: WorkloadSource | None = None):
     """Cartesian-product sweep as a single fused device program.
 
     Args:
@@ -553,6 +556,10 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
         config axis is sharded over every mesh axis via ``shard_map``,
         padding B up to a multiple of the device count; results are
         bit-identical to the single-device path.
+      workload: scene-complexity source shared by every config — the
+        Markov chain by default, or a recorded trace
+        (``repro.data.traces.TraceWorkload``). Orthogonal to ``mesh``
+        and fleet stacking.
 
     Returns:
       ``{metric: float64 ndarray}`` with shape ``(len(policies),
@@ -562,14 +569,15 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
       the trace is cached across calls with the same batch size, scan
       length, and mesh.
     """
+    workload = _resolve_workload(workload)
     combos = list(itertools.product(policies, user_levels, gammas, deltas,
                                     oracle, seeds))
     cfgs = [SimConfig(n_users=nu, n_requests=n_requests, policy=pol,
                       gamma=ga, delta=de, stickiness=stickiness, seed=sd,
                       warmup_frac=warmup_frac, oracle_estimator=orc)
             for pol, nu, ga, de, orc, sd in combos]
-    grid = make_grid(prof, cfgs)
-    out = _sweep_summaries(prof, grid, n_requests=n_requests,
+    grid = make_grid(prof, cfgs, workload=workload)
+    out = _sweep_summaries(prof, workload, grid, n_requests=n_requests,
                            warmup=int(n_requests * warmup_frac), mesh=mesh)
     shape = (len(policies), len(user_levels), len(gammas), len(deltas),
              len(oracle), len(seeds))

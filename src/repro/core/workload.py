@@ -1,0 +1,231 @@
+"""Workload sources: where per-user scene complexity comes from.
+
+The batched simulator (``repro.core.simulator``) consumes scene
+complexity through exactly two hooks, and this module turns them into an
+interface (:class:`WorkloadSource`):
+
+  * **initial counts** — at grid-build time (``make_grid``), each config
+    needs an ``n_users``-shaped vector of initial true object counts plus
+    its threefry scan key (:meth:`WorkloadSource.init_draws`, batched as
+    :meth:`WorkloadSource.grid_draws`);
+  * **per-dispatch step** — inside the ``lax.scan``, each dispatch of
+    user ``u`` advances that user's count by one frame
+    (:meth:`WorkloadSource.next_count`, with per-config constants built
+    once per trace by :meth:`WorkloadSource.prepare`).
+
+Implementations are registered jax pytrees so they pass through
+``jit`` / ``vmap`` / ``shard_map`` like a ``ProfileTable``: device data
+(e.g. a recorded trace) are leaves, everything else is static aux data.
+
+:class:`MarkovWorkload` is the synthetic default — the paper's
+busy-pedestrian-crossing chain (``repro.core.estimator``), bit-identical
+to the engine before the interface existed, including the process-wide
+``(seed, stickiness, n_users, n_groups)`` draw memoization
+(:func:`grid_cache_info` / :func:`grid_cache_clear`). The recorded-trace
+implementation lives in ``repro.data.traces``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator as EST
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+# Host-side draw key at grid-build time: (seed, stickiness, n_users,
+# n_groups). Every WorkloadSource hook is keyed on it.
+DrawKey = tuple[int, float, int, int]
+
+
+class WorkloadSource:
+    """Interface between the sweep engine and a scene-complexity source.
+
+    Host-side hooks (grid-build time, numpy in/out):
+      * :meth:`init_draws` — one config's initial counts, scan key and
+        per-user phase offsets;
+      * :meth:`grid_draws` — the batched form over distinct draw keys
+        (override to memoize/vectorise; the default loops).
+
+    Traced hooks (inside the scan, jax arrays):
+      * :meth:`prepare` — per-config constants (e.g. a transition
+        matrix, or the device-resident trace);
+      * :meth:`next_count` — the next true object count for the
+        dispatching user.
+
+    Subclasses must be registered jax pytrees (device data as leaves)
+    so the engine can close over them inside ``jit`` / ``vmap`` /
+    ``shard_map`` and replicate them across the config axis.
+    """
+
+    def init_draws(self, seed: int, stickiness: float, *, n_groups: int,
+                   n_users: int):
+        """Initial state for one config -> ``(true0, rng, phase)``:
+        ``true0`` (n_users,) int32 initial counts, ``rng`` (2,) uint32
+        scan key, ``phase`` (n_users,) int32 per-user phase offsets
+        (zeros when the source has no notion of position)."""
+        raise NotImplementedError
+
+    def grid_draws(self, keys: list[DrawKey]) -> dict:
+        """Batched :meth:`init_draws` over one grid's per-config draw keys
+        (duplicates allowed — one entry per config); returns
+        ``{key: (true0, rng, phase)}`` as numpy arrays. Override to
+        memoize or vectorise."""
+        return {k: self.init_draws(k[0], k[1], n_users=k[2], n_groups=k[3])
+                for k in keys}
+
+    def prepare(self, n_groups: int, stickiness):
+        """Per-config constants used by :meth:`next_count`; traced once
+        outside the scan (``stickiness`` may be a traced scalar)."""
+        raise NotImplementedError
+
+    def next_count(self, ctx, key, cur_count, user, pos):
+        """Next true object count (scalar int32) for the dispatching
+        user. ``ctx`` is :meth:`prepare`'s result; ``key`` a fresh
+        threefry key; ``cur_count`` the user's current count; ``user``
+        the dispatching user index; ``pos`` the user's absolute frame
+        position (phase offset + dispatch number). Sources ignore the
+        arguments they don't need — the Markov chain uses (key,
+        cur_count), a trace uses (user, pos)."""
+        raise NotImplementedError
+
+
+# ------------------------------------------------- Markov (the default) --
+
+def _init_draws_impl(seed, stickiness, *, n_groups: int, n_users: int):
+    """Initial user states + scan key for one config, with the config's own
+    ``n_users``-shaped categorical draw (the shape-sensitive part)."""
+    P_trans = EST.markov_transition(n_groups, stickiness)
+    rng = jax.random.PRNGKey(seed)
+    k_init, rng = jax.random.split(rng)
+    pi0 = EST.stationary(P_trans)
+    true0 = jax.random.categorical(k_init, jnp.log(pi0 + 1e-9),
+                                   shape=(n_users,))
+    return true0.astype(i32), rng
+
+
+_init_draws = functools.partial(jax.jit, static_argnames=(
+    "n_groups", "n_users"))(_init_draws_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups",))
+def _init_priors_batch(seeds, stickiness, *, n_groups: int):
+    """Shape-independent half of the batched initial draw: per (seed,
+    stickiness) key, the stationary distribution and the split threefry
+    keys. One compile serves every ``n_users`` level — only the categorical
+    draw below is shape-sensitive. Threefry is counter-based, so each row
+    is bit-identical to its own scalar :func:`_init_draws` call."""
+
+    def one(seed, stick):
+        P_trans = EST.markov_transition(n_groups, stick)
+        rng = jax.random.PRNGKey(seed)
+        k_init, rng = jax.random.split(rng)
+        return EST.stationary(P_trans), k_init, rng
+
+    return jax.vmap(one)(seeds, stickiness)
+
+
+@functools.partial(jax.jit, static_argnames=("n_users",))
+def _init_categorical_batch(k_init, pi0, *, n_users: int):
+    """Shape-sensitive half: the config's own ``n_users``-shaped
+    categorical draw (cheap per-level compile), vmapped over keys."""
+    return jax.vmap(lambda k, p: jax.random.categorical(
+        k, jnp.log(p + 1e-9), shape=(n_users,)).astype(i32))(k_init, pi0)
+
+
+def _pow2_pad(items: list) -> list:
+    """Pad a work list to a power of two by repeating its head, bounding
+    the set of compiled batch shapes to O(log n) per static signature."""
+    return items + [items[0]] * ((1 << (len(items) - 1).bit_length())
+                                 - len(items))
+
+
+# (seed, stickiness, n_users, n_groups) -> (true0 (n_users,) i32, rng (2,)
+# u32) as numpy. The draw depends on nothing else, and a Fig. 4 grid of 168
+# configs has only 24 distinct triples — memoizing + batching misses per
+# n_users level is what lets 10^5-config grids build in milliseconds.
+_DRAW_CACHE: dict[DrawKey, tuple[np.ndarray, np.ndarray]] = {}
+_DRAW_STATS = {"hits": 0, "misses": 0}
+
+
+def grid_cache_info() -> dict[str, int]:
+    """Stats for the Markov initial-draw cache behind ``make_grid``:
+    per-config ``hits``/``misses`` counters and the number of distinct
+    draws held (``size``). Process-wide; reset with
+    :func:`grid_cache_clear`."""
+    return dict(_DRAW_STATS, size=len(_DRAW_CACHE))
+
+
+def grid_cache_clear() -> None:
+    """Drop all memoized initial draws and zero the hit/miss counters."""
+    _DRAW_CACHE.clear()
+    _DRAW_STATS.update(hits=0, misses=0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class MarkovWorkload(WorkloadSource):
+    """The synthetic default: per-user complexity evolves by the paper's
+    first-order chain (``repro.core.estimator.markov_transition``), with
+    initial states drawn from its stationary distribution. Stateless —
+    the chain's stickiness is a per-config ``ConfigGrid`` leaf, so one
+    instance serves every grid. Bit-identical to the pre-interface
+    engine, draw memoization included."""
+
+    def tree_flatten(self):
+        return (), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls()
+
+    def init_draws(self, seed, stickiness, *, n_groups, n_users):
+        true0, rng = _init_draws(seed, stickiness, n_groups=n_groups,
+                                 n_users=n_users)
+        return (np.asarray(true0), np.asarray(rng),
+                np.zeros((n_users,), np.int32))
+
+    def grid_draws(self, keys):
+        """Memoized + vectorised batch draw: misses are computed in one
+        shape-independent vmapped program plus one tiny categorical draw
+        per ``n_users`` level (work lists pow2-padded so repeated builds
+        reuse O(log n) compiled shapes); hits are free."""
+        missing = sorted({k for k in keys if k not in _DRAW_CACHE})
+        _DRAW_STATS["misses"] += len(missing)
+        _DRAW_STATS["hits"] += len(keys) - len(missing)
+        if missing:
+            padded = _pow2_pad(missing)
+            G = missing[0][3]
+            pi0, k_init, rngs = _init_priors_batch(
+                jnp.asarray([k[0] for k in padded], i32),
+                jnp.asarray([k[1] for k in padded], f32), n_groups=G)
+            rngs = np.asarray(rngs)
+            for nu in sorted({k[2] for k in missing}):
+                idx = [i for i, k in enumerate(missing) if k[2] == nu]
+                sel = jnp.asarray(_pow2_pad(idx), i32)
+                t0s = np.asarray(_init_categorical_batch(
+                    k_init[sel], pi0[sel], n_users=nu))
+                for j, i in enumerate(idx):
+                    _DRAW_CACHE[missing[i]] = (t0s[j], rngs[i])
+        return {k: (*_DRAW_CACHE[k], np.zeros((k[2],), np.int32))
+                for k in keys}
+
+    def prepare(self, n_groups, stickiness):
+        return EST.markov_transition(n_groups, stickiness)
+
+    def next_count(self, ctx, key, cur_count, user, pos):
+        return EST.markov_step(key, cur_count[None], ctx)[0]
+
+
+_DEFAULT_WORKLOAD = MarkovWorkload()
+
+
+def default_workload() -> MarkovWorkload:
+    """The engine's default scene-complexity source (the Markov chain)."""
+    return _DEFAULT_WORKLOAD

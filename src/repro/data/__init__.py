@@ -1,4 +1,4 @@
-from repro.data import images, pipeline, tokens
+from repro.data import images, pipeline, tokens, traces
 from repro.data.workload import VideoStreamWorkload
 
-__all__ = ["VideoStreamWorkload", "tokens", "images", "pipeline"]
+__all__ = ["VideoStreamWorkload", "tokens", "images", "pipeline", "traces"]

@@ -27,6 +27,7 @@ class VideoStreamWorkload:
                                                    self.stickiness))
         pi = np.asarray(EST.stationary(self._P))
         self._state = self._rng.choice(self.n_groups, self.n_streams, p=pi)
+        self._last_frame: dict[int, np.ndarray] = {}
 
     def next_frame(self, stream: int):
         """Advance the stream one frame; returns (image (R,R,3) f32, g_true).
@@ -42,20 +43,32 @@ class VideoStreamWorkload:
         for c in cells:
             cy, cx = divmod(int(c), self.grid)
             img[cy * cell:(cy + 1) * cell, cx * cell:(cx + 1) * cell] += 2.0
-        return img.astype(np.float32), s
+        img = img.astype(np.float32)
+        self._last_frame[stream] = img
+        return img, s
+
+    def _threshold_grid(self, img: np.ndarray) -> np.ndarray:
+        """(G, G) int32 objectness grid by mean-pooling each cell and
+        thresholding: lit cells sit ~2.0 above the noise floor, so 0.5
+        separates them exactly."""
+        cell = self.img_res // self.grid
+        pooled = img.reshape(self.grid, cell, self.grid, cell, 3)
+        return (pooled.mean(axis=(1, 3, 4)) > 0.5).astype(np.int32)
 
     def reference_grid(self, stream: int):
-        """Ground-truth objectness grid of the LAST generated frame (exact —
-        we know where objects were drawn). Recomputed via thresholding."""
-        raise NotImplementedError("use labelled_frame for training data")
+        """Ground-truth objectness grid (G, G) of the LAST generated frame
+        of ``stream`` (exact — objects are drawn a full cell at a time, so
+        the thresholding path ``labelled_frame`` uses recovers precisely
+        the drawn cells). Raises if the stream has no frame yet."""
+        if stream not in self._last_frame:
+            raise ValueError(f"stream {stream} has no generated frame yet; "
+                             "call next_frame/labelled_frame first")
+        return self._threshold_grid(self._last_frame[stream])
 
     def labelled_frame(self, stream: int):
         """(image, obj_grid (G,G), cls_grid, g_true) for detector training."""
         img, g = self.next_frame(stream)
-        cell = self.img_res // self.grid
-        pooled = img.reshape(self.grid, cell, self.grid, cell, 3)
-        bright = pooled.mean(axis=(1, 3, 4)) > 0.5
-        obj = bright.astype(np.int32)
+        obj = self.reference_grid(stream)
         cls = np.zeros_like(obj)
         return img, obj, cls, g
 

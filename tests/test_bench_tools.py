@@ -62,6 +62,16 @@ def test_compare_rejects_incomparable_artifacts():
     assert errs and "backend" in errs[0]
 
 
+def test_compare_rejects_workload_mismatch():
+    """A trace-mode artifact must not be gated against a Markov baseline."""
+    base = _artifact(seconds=10.0)
+    base["workload"] = "markov"
+    tr = _artifact(seconds=1.0)
+    tr["workload"] = "trace"
+    errs = check_bench.compare(tr, base, 0.20, 0.5)
+    assert errs and "workload" in errs[0]
+
+
 def test_main_end_to_end(tmp_path):
     new = tmp_path / "new.json"
     base = tmp_path / "base.json"

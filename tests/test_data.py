@@ -2,10 +2,11 @@
 
 import jax
 import numpy as np
+import pytest
 
 from repro.data.images import synthetic_diffusion_batch, synthetic_image_batch
 from repro.data.tokens import TokenLoader, synthetic_lm_batch
-from repro.data.workload import VideoStreamWorkload
+from repro.data.workload import VideoStreamWorkload, closed_loop_arrivals
 
 
 def test_lm_batch_shapes_and_determinism():
@@ -42,6 +43,69 @@ def test_workload_counts_match_groups():
     img, obj, cls, g = wl.labelled_frame(1)
     n_obj = int(obj.sum())
     assert (g < 4 and n_obj == g) or (g == 4 and n_obj >= 4)
+
+
+def test_reference_grid_matches_known_layout():
+    """reference_grid recovers exactly the cells objects were drawn in:
+    via the generator (count == g for g < 4) and via a hand-crafted frame
+    with a known layout."""
+    wl = VideoStreamWorkload(n_streams=2, img_res=64, seed=4)
+    with pytest.raises(ValueError, match="no generated frame"):
+        wl.reference_grid(0)
+    for _ in range(15):
+        img, g = wl.next_frame(0)
+        ref = wl.reference_grid(0)
+        assert ref.shape == (wl.grid, wl.grid) and set(np.unique(ref)) <= {0, 1}
+        n = int(ref.sum())
+        assert (g < 4 and n == g) or (g == 4 and 4 <= n <= 7)
+    # hand-crafted frame: objects at exactly three known cells
+    cell = wl.img_res // wl.grid
+    img = np.random.default_rng(0).normal(
+        0.0, 0.1, (wl.img_res, wl.img_res, 3)).astype(np.float32)
+    want = np.zeros((wl.grid, wl.grid), np.int32)
+    for cy, cx in ((0, 0), (3, 5), (7, 7)):
+        want[cy, cx] = 1
+        img[cy * cell:(cy + 1) * cell, cx * cell:(cx + 1) * cell] += 2.0
+    wl._last_frame[1] = img
+    np.testing.assert_array_equal(wl.reference_grid(1), want)
+
+
+def test_labelled_frame_agrees_with_reference_grid():
+    wl = VideoStreamWorkload(n_streams=1, img_res=64, seed=9)
+    _img, obj, _cls, _g = wl.labelled_frame(0)
+    np.testing.assert_array_equal(obj, wl.reference_grid(0))
+
+
+def test_closed_loop_arrivals_spacing():
+    """Locust-style closed loop: one offset per user, strictly increasing
+    with 1e-4 s spacing from zero (matching the simulator's t_next init),
+    independent of the request count."""
+    arr = closed_loop_arrivals(5, 1000)
+    assert arr == [i * 1e-4 for i in range(5)]
+    assert closed_loop_arrivals(5, 10) == arr
+    assert closed_loop_arrivals(0, 10) == []
+    assert all(b > a for a, b in zip(arr, arr[1:]))
+
+
+def test_noisy_count_seeded_statistics():
+    """Modelled detection counts: bounded by true count + 1 false positive,
+    seeded-deterministic, and the detection probability rises with mAP."""
+    a = VideoStreamWorkload(n_streams=1, seed=12)
+    b = VideoStreamWorkload(n_streams=1, seed=12)
+    assert [a.noisy_count(0, 70.0) for _ in range(50)] \
+        == [b.noisy_count(0, 70.0) for _ in range(50)]
+
+    def mean_det(map_pg, n=400):
+        wl = VideoStreamWorkload(n_streams=1, seed=3)
+        wl._state[0] = 4                      # 4+ group -> true count 5
+        vals = [wl.noisy_count(0, map_pg) for _ in range(n)]
+        assert all(0 <= v <= 6 for v in vals)  # 5 objects + 1 false positive
+        return float(np.mean(vals))
+
+    lo, hi = mean_det(10.0), mean_det(90.0)
+    assert hi > lo                            # p_det rises with mAP
+    assert hi > 4.5                           # strong detectors count ~right
+    assert lo > 0.8 * 5 * 0.5                 # p_det floor 0.80 keeps counts up
 
 
 def test_diffusion_batch_fields():

@@ -14,24 +14,35 @@ check_docs = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(check_docs)
 
 
-def _fenced_python(md: Path) -> str:
+def _fenced_python(md: Path) -> list[str]:
     blocks = re.findall(r"```python\n(.*?)```", md.read_text(), re.DOTALL)
     assert blocks, f"no fenced python block in {md}"
-    return blocks[0]
+    return blocks
+
+# guide -> the runnable example each of its fenced python blocks embeds,
+# in document order
+EMBEDDED_EXAMPLES = {
+    "sweep_engine.md": ["trace_workload.py", "sweep_quickstart.py"],
+}
 
 
-def test_sweep_engine_example_matches_runnable_copy():
-    """The guide embeds docs/examples/sweep_quickstart.py verbatim, so the
+def test_guide_examples_match_runnable_copies():
+    """Each guide embeds its docs/examples/*.py files verbatim, so the
     'runs as written' guarantee covers the markdown too."""
-    block = _fenced_python(REPO / "docs" / "sweep_engine.md")
-    runnable = (REPO / "docs" / "examples" /
-                "sweep_quickstart.py").read_text()
-    assert block.strip() == runnable.strip()
+    for md, examples in EMBEDDED_EXAMPLES.items():
+        blocks = _fenced_python(REPO / "docs" / md)
+        assert len(blocks) == len(examples), \
+            f"{md}: {len(blocks)} python blocks, {len(examples)} examples"
+        for block, name in zip(blocks, examples):
+            runnable = (REPO / "docs" / "examples" / name).read_text()
+            assert block.strip() == runnable.strip(), f"{md} vs {name}"
 
 
-def test_sweep_engine_example_runs():
-    src = (REPO / "docs" / "examples" / "sweep_quickstart.py").read_text()
-    exec(compile(src, "docs/examples/sweep_quickstart.py", "exec"), {})
+def test_guide_examples_run():
+    for examples in EMBEDDED_EXAMPLES.values():
+        for name in examples:
+            src = (REPO / "docs" / "examples" / name).read_text()
+            exec(compile(src, f"docs/examples/{name}", "exec"), {})
 
 
 def test_docs_links_resolve():

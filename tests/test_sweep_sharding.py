@@ -48,10 +48,26 @@ def test_sharded_equals_single_stacked_fleet():
         np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
 
 
+def test_sharded_equals_single_trace_workload():
+    """The trace workload shards like the Markov one: its device-resident
+    trace is replicated and the config axis split, bit-identically."""
+    from repro.data.traces import bundled_trace
+
+    tw = bundled_trace()
+    ref = sweep_grid(paper_fleet(), policies=("MO", "LT"), user_levels=(3, 7),
+                     seeds=(0, 1), n_requests=200, workload=tw)
+    out = sweep_grid(paper_fleet(), policies=("MO", "LT"), user_levels=(3, 7),
+                     seeds=(0, 1), n_requests=200, workload=tw,
+                     mesh=make_sweep_mesh())
+    for k in ref:
+        np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
+
+
 _SUBPROC_CHECK = """
-import jax, numpy as np
+import json, jax, numpy as np
 from repro.core.profiles import paper_fleet
 from repro.core.simulator import sweep_grid
+from repro.data.traces import bundled_trace
 from repro.launch.mesh import make_sweep_mesh
 
 assert len(jax.devices()) == 4, jax.devices()
@@ -59,22 +75,46 @@ kw = dict(policies=("MO", "RR", "LC", "LT", "HA"), user_levels=(3, 7),
           seeds=(0,), n_requests=150)          # 10 configs -> padded to 12
 prof = paper_fleet()
 ref = sweep_grid(prof, **kw)
-out = sweep_grid(prof, mesh=make_sweep_mesh(), **kw)
+mesh = make_sweep_mesh()
+out = sweep_grid(prof, mesh=mesh, **kw)
 for k in ref:
     np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
+
+# Markov regression vs the PR 2 golden fixture, on a real 4-device mesh:
+# the WorkloadSource refactor must not move a single bit even sharded.
+fix = json.load(open({golden!r}))["sweep"]
+gold = sweep_grid(prof, policies=tuple(fix["policies"]),
+                  user_levels=tuple(fix["user_levels"]),
+                  seeds=tuple(fix["seeds"]), n_requests=fix["n_requests"],
+                  mesh=mesh)
+for k, v in fix["metrics"].items():
+    np.testing.assert_array_equal(gold[k], np.asarray(v), err_msg=k)
+
+# Trace workload: sharded == single on 4 real devices too.
+tw = bundled_trace()
+tkw = dict(policies=("MO", "LT"), user_levels=(3, 7), seeds=(0,),
+           n_requests=150, workload=tw)
+t_ref = sweep_grid(prof, **tkw)
+t_out = sweep_grid(prof, mesh=mesh, **tkw)
+for k in t_ref:
+    np.testing.assert_array_equal(t_out[k], t_ref[k], err_msg=k)
 print("OK")
 """
 
 
 def test_sharded_bitwise_in_forced_4_device_subprocess():
     """Real multi-device bit-exactness, via xla_force_host_platform_device
-    _count=4 in a fresh process (the flag only takes effect at jax init)."""
+    _count=4 in a fresh process (the flag only takes effect at jax init):
+    sharded == single for both workload sources, and the Markov path still
+    reproduces the PR 2 golden metrics bit for bit."""
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=4",
                PYTHONPATH=str(REPO / "src") + os.pathsep
                + os.environ.get("PYTHONPATH", ""))
-    res = subprocess.run([sys.executable, "-c", _SUBPROC_CHECK], env=env,
-                         capture_output=True, text=True, timeout=300)
+    src = _SUBPROC_CHECK.format(
+        golden=str(REPO / "tests" / "golden_markov_pr2.json"))
+    res = subprocess.run([sys.executable, "-c", src], env=env,
+                         capture_output=True, text=True, timeout=600)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "OK" in res.stdout
 
@@ -100,6 +140,7 @@ def test_config_axis_spec_uses_every_mesh_axis():
     spec = config_axis_spec(mesh)
     assert tuple(spec) == (mesh.axis_names,)
     ragged = ConfigGrid(*(jnp.zeros((3,)),) * 6,
-                        jnp.zeros((2, 2)), jnp.zeros((3, 4)))
+                        jnp.zeros((2, 2)), jnp.zeros((3, 4)),
+                        jnp.zeros((3, 4)))
     with pytest.raises(ValueError, match="leading dim"):
         pad_leading(ragged, 4)
