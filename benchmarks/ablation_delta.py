@@ -15,11 +15,12 @@ from repro.core.simulator import sweep_grid
 DELTAS = (0.0, 5.0, 10.0, 20.0, 30.0, 45.0)
 
 
-def run(mesh=None, workload=None) -> list[str]:
+def run(mesh=None, workload=None, dispatch=None) -> list[str]:
     prof = paper_fleet()
     grid = sweep_grid(prof, policies=("MO",), user_levels=(15,),
                       deltas=DELTAS, oracle=(False, True), seeds=(0,),
-                      n_requests=1500, mesh=mesh, workload=workload)
+                      n_requests=1500, mesh=mesh, workload=workload,
+                      dispatch=dispatch)
 
     def at(metric, di, oi):
         # (policy, users, gamma, delta, oracle, seed)

@@ -15,11 +15,11 @@ METRICS = ["latency_ms", "latency_p90_ms", "throughput_rps", "energy_mwh",
 
 
 def run(n_requests: int = 1500, seeds=(0, 1, 2), mesh=None,
-        workload=None) -> list[str]:
+        workload=None, dispatch=None) -> list[str]:
     prof = paper_fleet()
     grid = sweep_grid(prof, policies=POLICIES, user_levels=USERS,
                       seeds=seeds, n_requests=n_requests, mesh=mesh,
-                      workload=workload)
+                      workload=workload, dispatch=dispatch)
     # (policy, users, gamma, delta, oracle, seed) -> mean over seeds
     res = {k: np.mean(v[:, :, 0, 0, 0, :], axis=-1)
            for k, v in grid.items()}

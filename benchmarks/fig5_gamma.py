@@ -14,11 +14,11 @@ METRICS = ["latency_ms", "latency_p90_ms", "throughput_rps", "energy_mwh",
 
 
 def run(n_requests: int = 1500, seeds=(0, 1), mesh=None,
-        workload=None) -> list[str]:
+        workload=None, dispatch=None) -> list[str]:
     prof = paper_fleet()
     grid = sweep_grid(prof, policies=("MO",), user_levels=USERS,
                       gammas=GAMMAS, seeds=seeds, n_requests=n_requests,
-                      mesh=mesh, workload=workload)
+                      mesh=mesh, workload=workload, dispatch=dispatch)
     # (policy, users, gamma, delta, oracle, seed) -> mean over seeds
     res = {k: np.mean(v[0, :, :, 0, 0, :], axis=-1)
            for k, v in grid.items()}

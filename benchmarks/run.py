@@ -4,6 +4,7 @@ roofline. Prints CSV: name,<columns...>.
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only SUITE]
                                           [--json PATH] [--sharded]
                                           [--workload {markov,trace}]
+                                          [--dispatch {static,online}]
 
 Each suite is documented in ``docs/benchmarks.md``.
 
@@ -18,6 +19,10 @@ suites' scene-complexity source from the synthetic Markov chain to the
 bundled recorded trace (``repro.data.traces.bundled_trace``) — same
 grids, real video statistics; the dedicated ``workload_trace`` suite
 times the trace path against the Markov default either way.
+``--dispatch online`` swaps the sweep suites' dispatch-state engine from
+static offline tables to the online-EWMA adaptive engine
+(``repro.core.dispatch.OnlineDispatch``); the dedicated ``online_drift``
+suite compares the two under a mid-run profile drift either way.
 ``--json PATH`` additionally writes a
 ``BENCH_*.json``-style artifact: per-suite CSV rows plus wall-clock
 seconds (``suites.<name>.seconds``) and environment metadata — the format
@@ -64,12 +69,17 @@ def main() -> None:
                     help="scene-complexity source for the sweep suites: "
                          "the synthetic Markov chain (default) or the "
                          "bundled recorded trace")
+    ap.add_argument("--dispatch", choices=("static", "online"),
+                    default="static",
+                    help="dispatch-state engine for the sweep suites: "
+                         "static offline tables (default) or the "
+                         "online-EWMA adaptive engine")
     args = ap.parse_args()
 
     from benchmarks import (ablation_delta, bench_kernels, bench_scale,
                             fig2_motivation, fig4_baselines, fig5_gamma,
-                            roofline_summary, sweep_sharded, table1_pairs,
-                            workload_trace)
+                            online_drift, roofline_summary, sweep_sharded,
+                            table1_pairs, workload_trace)
 
     mesh = None
     if args.sharded:
@@ -79,6 +89,10 @@ def main() -> None:
     if args.workload == "trace":
         from repro.data.traces import bundled_trace
         workload = bundled_trace()
+    dispatch = None
+    if args.dispatch == "online":
+        from repro.core.dispatch import OnlineDispatch
+        dispatch = OnlineDispatch()
 
     suites = {
         "fig2": lambda: fig2_motivation.run(),
@@ -86,17 +100,21 @@ def main() -> None:
         "fig4": lambda: fig4_baselines.run(
             n_requests=600 if args.fast else 1500,
             seeds=(0,) if args.fast else (0, 1, 2), mesh=mesh,
-            workload=workload),
+            workload=workload, dispatch=dispatch),
         "fig5": lambda: fig5_gamma.run(
             n_requests=600 if args.fast else 1500,
             seeds=(0,) if args.fast else (0, 1), mesh=mesh,
-            workload=workload),
+            workload=workload, dispatch=dispatch),
         "ablation": lambda: ablation_delta.run(mesh=mesh,
-                                               workload=workload),
+                                               workload=workload,
+                                               dispatch=dispatch),
         "scale": lambda: bench_scale.run(),
         "sweep_sharded": lambda: sweep_sharded.run(),
         "workload_trace": lambda: workload_trace.run(
             n_requests=250 if args.fast else 400),
+        "online_drift": lambda: online_drift.run(
+            n_requests=800 if args.fast else 2000,
+            seeds=(0,) if args.fast else (0, 1)),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: roofline_summary.run(),
     }
@@ -130,6 +148,7 @@ def main() -> None:
             "schema": "repro-bench/v1",
             "fast": bool(args.fast),
             "workload": args.workload,
+            "dispatch": args.dispatch,
             "created_unix": round(time.time(), 1),
             "jax_version": jax.__version__,
             "backend": jax.default_backend(),

@@ -1,0 +1,32 @@
+"""Dispatch engines: online adaptation vs a mid-run profile drift."""
+from repro.core.dispatch import (DriftSchedule, OnlineDispatch,
+                                 StaticDispatch)
+from repro.core.profiles import paper_fleet
+from repro.core.simulator import sweep_grid
+
+prof = paper_fleet()
+
+# 1. A drift scenario: at dispatch step 400 the fleet's energy-favourite
+#    pair (n5) loses its low-power state — 3x slower, 8x the energy. The
+#    schedule perturbs the TRUE fleet only; policies never see it.
+drift = DriftSchedule.throttle(prof, pair=4, at_step=400,
+                               t_mult=3.0, e_mult=8.0)
+
+# 2. The same grid under static tables vs the online-EWMA engine. Both
+#    are one fused device program; dispatch= composes with mesh= sharding,
+#    workload= sources and stacked fleets unchanged.
+kw = dict(policies=("MO",), user_levels=(10,), seeds=(0,),
+          n_requests=2000, oracle=(True,))
+static = sweep_grid(prof, drift=drift, **kw)
+online = sweep_grid(prof, drift=drift, dispatch=OnlineDispatch(), **kw)
+for name, m in (("static", static), ("online", online)):
+    print(f"{name}: latency {m['latency_ms'].mean():.0f} ms, "
+          f"energy {m['energy_mwh'].mean():.4f} mWh")
+# online-MO re-converges and wins BOTH metrics; with no drift the two
+# sweeps are identical (observations equal the prior).
+
+# 3. StaticDispatch is the default and bit-identical to passing nothing.
+a = sweep_grid(prof, **kw)
+b = sweep_grid(prof, dispatch=StaticDispatch(), **kw)
+assert all((a[k] == b[k]).all() for k in a)
+print("static default OK:", a["latency_ms"].round(1).ravel())

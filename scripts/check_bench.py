@@ -59,7 +59,7 @@ def validate(art: dict, label: str) -> list[str]:
 def compare(new: dict, base: dict, threshold: float,
             min_abs: float) -> list[str]:
     errs = []
-    for key in ("fast", "backend", "workload"):
+    for key in ("fast", "backend", "workload", "dispatch"):
         if key in new and key in base and new[key] != base[key]:
             errs.append(f"artifacts not comparable: {key} is "
                         f"{new[key]!r} (new) vs {base[key]!r} (baseline)")

@@ -2,9 +2,12 @@
 heterogeneous inference fleets (profiles, two-stage balancer, baselines,
 estimator, fleet simulator, energy model, online adaptation, hierarchy)."""
 
+from repro.core.dispatch import (DispatchEngine, DriftSchedule,
+                                 OnlineDispatch, StaticDispatch,
+                                 default_dispatch)
 from repro.core.estimator import group_of_count, noisy_detected_count
 from repro.core.policies import (POLICY_CODES, mo_select, mo_select_batch,
-                                 policy_scores)
+                                 policy_scores, select_pair)
 from repro.core.profiles import (ProfileTable, paper_fleet, stack_profiles,
                                  synthetic_fleet)
 from repro.core.simulator import (ConfigGrid, SimConfig, grid_cache_clear,
@@ -15,7 +18,9 @@ from repro.core.simulator import (ConfigGrid, SimConfig, grid_cache_clear,
 __all__ = [
     "ProfileTable", "paper_fleet", "stack_profiles", "synthetic_fleet",
     "POLICY_CODES", "mo_select", "mo_select_batch", "policy_scores",
-    "group_of_count", "noisy_detected_count",
+    "select_pair", "group_of_count", "noisy_detected_count",
+    "DispatchEngine", "StaticDispatch", "OnlineDispatch", "DriftSchedule",
+    "default_dispatch",
     "ConfigGrid", "SimConfig", "grid_cache_clear", "grid_cache_info",
     "make_grid", "run_policy", "simulate", "simulate_batch", "summarize",
     "summarize_batch", "sweep", "sweep_grid",

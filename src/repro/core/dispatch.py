@@ -1,0 +1,279 @@
+"""Dispatch engines: where per-decision routing state lives.
+
+The paper's §VII names online profile adaptation as the key open problem:
+static offline tables drift when devices throttle, models are swapped or
+inputs shift. This module turns the balancer's per-decision state — the
+round-robin counter the baselines need, and the online-EWMA belief tables
+the adaptive balancer needs — into one pluggable interface,
+:class:`DispatchEngine`, mirroring the ``WorkloadSource`` pattern of
+``repro.core.workload``:
+
+  * :meth:`DispatchEngine.init` builds the engine's :data:`DispatchState`
+    pytree once per config, outside the scan;
+  * :meth:`DispatchEngine.select` scores the fleet for one request and
+    returns the chosen pair plus the advanced state;
+  * :meth:`DispatchEngine.observe` folds one measured (latency, energy)
+    observation back into the state after the request completes.
+
+The batched simulator (``repro.core.simulator``, the ``dispatch=``
+argument throughout) threads the state through its ``lax.scan`` carry, and
+the serving gateway (``repro.serving.gateway.Gateway``) drives the *same*
+hooks per live request — simulation and serving run one stateful code
+path.
+
+Implementations are registered jax pytrees (hyper-parameters as static
+aux data, no leaves), so they pass through ``jit`` / ``vmap`` /
+``shard_map`` like a ``ProfileTable`` and a grid of online configs still
+vmaps over the config axis, shards over a mesh and fuses over fleet
+ensembles unchanged.
+
+:class:`StaticDispatch` is the default — bit-identical to the engine
+before the interface existed (pinned by ``tests/golden_static_pr3.json``).
+:class:`OnlineDispatch` wraps the annealed-EWMA estimator of
+``repro.core.online``. :class:`DriftSchedule` is the matching scenario
+hook: a piecewise-constant perturbation of the *true* profile mid-run
+(thermal throttling, a model swap), against which static dispatch routes
+on stale numbers while online dispatch re-converges.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import online as ONL
+from repro.core.policies import select_pair
+from repro.core.profiles import ProfileTable
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+# A DispatchState is a flat dict pytree of per-config jax arrays — the
+# scan-carried (gateway-held) mutable half of a dispatch engine. Every
+# engine's state carries the round-robin counter "rr"; adaptive engines
+# add their belief tables on top. Extra keys flow through
+# ``repro.core.online`` untouched, so the EWMA helpers work on either.
+DispatchState = dict
+
+
+class DispatchEngine:
+    """Interface between the routing loop and its per-decision state.
+
+    Engines are stateless objects (hyper-parameters only); all mutable
+    state lives in the :data:`DispatchState` pytree returned by
+    :meth:`init` and threaded through :meth:`select` / :meth:`observe` by
+    the caller (the simulator's scan carry, or the gateway between
+    requests). Every hook is traced — safe inside ``jit`` / ``vmap`` /
+    ``lax.scan`` — and subclasses must be registered pytrees so the
+    engine itself can cross ``jit`` / ``shard_map`` boundaries.
+    """
+
+    #: False when :meth:`observe` is a no-op — lets hot serving paths
+    #: skip the observation plumbing entirely (the traced simulator
+    #: needs no flag: XLA dead-code-eliminates a no-op observe).
+    adaptive: bool = True
+
+    def init(self, prof: ProfileTable) -> DispatchState:
+        """Fresh per-config state for a fleet of ``prof``'s shape."""
+        raise NotImplementedError
+
+    def tables(self, state: DispatchState, prof: ProfileTable):
+        """The belief :class:`ProfileTable` decisions are scored against
+        (the offline table itself, or an adapted copy)."""
+        raise NotImplementedError
+
+    def select(self, state, prof, code, g_est, q, key, gamma, delta):
+        """Score one request -> ``(pair, new_state)``. ``code`` is the
+        policy index (``POLICY_CODES``), ``g_est`` the estimated group,
+        ``q`` the (P,) live queue depths, ``key`` a fresh threefry key
+        (consumed only by the RND baseline)."""
+        p, _scores = select_pair(code, self.tables(state, prof), g_est, q,
+                                 key, state["rr"] % prof.n_pairs, gamma,
+                                 delta)
+        return p, {**state, "rr": state["rr"] + 1}
+
+    def observe(self, state, p, g, obs_t_ms, obs_e_mwh=None):
+        """Fold one completed request's measurements — latency (ms) and
+        optionally energy (mWh) at cell ``(p, g)`` — into the state."""
+        raise NotImplementedError
+
+    def observe_window(self, state, pairs, groups, obs_t_ms,
+                       obs_e_mwh=None):
+        """Fold a whole routing window of observations ((W,) arrays, in
+        completion order) — the batched :meth:`observe`, used by the
+        gateway's windowed path. The default loops :meth:`observe`;
+        engines with a fused fold override it."""
+        for w in range(len(pairs)):
+            state = self.observe(state, pairs[w], groups[w], obs_t_ms[w],
+                                 None if obs_e_mwh is None
+                                 else obs_e_mwh[w])
+        return state
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class StaticDispatch(DispatchEngine):
+    """The default: decisions use the offline profile unchanged and
+    observations are discarded; state is just the round-robin counter.
+    Bit-identical to the engine before the interface existed
+    (``tests/golden_static_pr3.json`` pins it, single-device and on a
+    forced 4-device mesh)."""
+
+    adaptive = False
+
+    def tree_flatten(self):
+        return (), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls()
+
+    def init(self, prof):
+        return {"rr": jnp.zeros((), i32)}
+
+    def tables(self, state, prof):
+        return prof
+
+    def observe(self, state, p, g, obs_t_ms, obs_e_mwh=None):
+        return state
+
+    def observe_window(self, state, pairs, groups, obs_t_ms,
+                       obs_e_mwh=None):
+        return state
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class OnlineDispatch(DispatchEngine):
+    """Online-adaptive dispatch: decisions are scored against the
+    annealed-EWMA belief tables of ``repro.core.online`` and every
+    completed request's measured latency/energy is folded back in. Cold
+    cells trust the offline prior, hot cells converge to observations
+    (step size ramps from ~0 to ``alpha`` over ``prior_weight``
+    pseudo-counts). mAP stays offline-profiled — accuracy is not
+    observable online without labels."""
+
+    alpha: float = 0.1
+    prior_weight: float = 10.0
+
+    def tree_flatten(self):
+        return (), (self.alpha, self.prior_weight)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*aux)
+
+    def init(self, prof):
+        state = ONL.init_state(prof)
+        state["rr"] = jnp.zeros((), i32)
+        return state
+
+    def tables(self, state, prof):
+        return ONL.as_profile(state, prof)
+
+    def observe(self, state, p, g, obs_t_ms, obs_e_mwh=None):
+        return ONL.observe(state, p, g, obs_t_ms, obs_e_mwh,
+                           alpha=self.alpha, prior_weight=self.prior_weight)
+
+    def observe_window(self, state, pairs, groups, obs_t_ms,
+                       obs_e_mwh=None):
+        return ONL.observe_window(state, pairs, groups, obs_t_ms,
+                                  obs_e_mwh, alpha=self.alpha,
+                                  prior_weight=self.prior_weight)
+
+
+_DEFAULT_DISPATCH = StaticDispatch()
+
+
+def default_dispatch() -> StaticDispatch:
+    """The engine's default dispatch state handler (static tables)."""
+    return _DEFAULT_DISPATCH
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class DriftSchedule:
+    """Piecewise-constant perturbation of the TRUE profile mid-run.
+
+    The scenario hook for non-stationary hardware: at dispatch step
+    ``start_step[k]`` the fleet's true service times and energies become
+    ``prof.T * t_scale[k]`` / ``prof.E * e_scale[k]`` (thermal
+    throttling, a model swap, a migrated container). Policies never see
+    the schedule — :class:`StaticDispatch` keeps routing on the stale
+    offline table, :class:`OnlineDispatch` re-converges from
+    observations. mAP is not drifted (the belief tables keep it offline
+    for the same reason).
+
+    Leaves: ``start_step`` (K,) int32 ascending with ``start_step[0] ==
+    0`` (the baseline segment), ``t_scale``/``e_scale`` (K, P, G) float32
+    multipliers. A registered pytree, replicated across the config axis
+    like the profile table, so drifted grids vmap / shard / fleet-stack
+    unchanged.
+    """
+
+    start_step: jax.Array
+    t_scale: jax.Array
+    e_scale: jax.Array
+
+    def __post_init__(self):
+        if not isinstance(self.start_step, jax.core.Tracer):
+            steps = np.asarray(self.start_step)
+            if steps.ndim != 1 or steps.size == 0 or steps[0] != 0:
+                raise ValueError("DriftSchedule: start_step must be a 1-D "
+                                 "array beginning at 0 (the baseline "
+                                 "segment)")
+            if (np.diff(steps) <= 0).any():
+                raise ValueError("DriftSchedule: start_step must be "
+                                 "strictly ascending")
+        object.__setattr__(self, "start_step",
+                           jnp.asarray(self.start_step, i32))
+        object.__setattr__(self, "t_scale", jnp.asarray(self.t_scale, f32))
+        object.__setattr__(self, "e_scale", jnp.asarray(self.e_scale, f32))
+
+    def tree_flatten(self):
+        return (self.start_step, self.t_scale, self.e_scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        obj = cls.__new__(cls)
+        for name, leaf in zip(("start_step", "t_scale", "e_scale"), leaves):
+            object.__setattr__(obj, name, leaf)
+        return obj
+
+    @property
+    def n_segments(self) -> int:
+        return int(self.start_step.shape[0])
+
+    def at_step(self, prof: ProfileTable, step) -> ProfileTable:
+        """The true profile at dispatch step ``step`` (traced; used inside
+        the simulator's scan). Broadcasts over a stacked (F, P, G) table."""
+        seg = jnp.sum(jnp.asarray(step, i32) >= self.start_step) - 1
+        return ProfileTable(prof.T * self.t_scale[seg],
+                            prof.E * self.e_scale[seg],
+                            prof.mAP, prof.names, prof.floor_mw)
+
+    @classmethod
+    def throttle(cls, prof: ProfileTable, pair: int, *, at_step: int,
+                 t_mult: float = 3.0, e_mult: float = 1.5,
+                 recover_step: int | None = None) -> "DriftSchedule":
+        """The canonical thermal-throttling event: from dispatch step
+        ``at_step`` on, pair ``pair``'s true service time is ``t_mult``×
+        and its energy ``e_mult``× the profiled value (optionally
+        recovering at ``recover_step``)."""
+        P, G = prof.n_pairs, prof.n_groups
+        ident = np.ones((P, G), np.float32)
+        t_seg, e_seg = ident.copy(), ident.copy()
+        t_seg[pair] *= t_mult
+        e_seg[pair] *= e_mult
+        steps = [0, at_step]
+        t_scales = [ident, t_seg]
+        e_scales = [ident, e_seg]
+        if recover_step is not None:
+            steps.append(recover_step)
+            t_scales.append(ident)
+            e_scales.append(ident)
+        return cls(np.asarray(steps, np.int32), np.stack(t_scales),
+                   np.stack(e_scales))

@@ -5,11 +5,18 @@ or input distributions shift. ``OnlineProfiles`` keeps an EWMA of observed
 latency/energy per (pair, group) on top of the offline prior, with a
 pseudo-count ramp so cold cells trust the prior and hot cells trust
 measurements. Pure-functional: state in, state out — usable inside the
-jitted gateway and the simulator."""
+jitted gateway and the simulator (``repro.core.dispatch.OnlineDispatch``
+threads this state through the batched scan).
+
+State is a dict pytree with ``T``/``E`` belief tables and a per-cell
+``count``; extra keys (e.g. the dispatch engines' round-robin counter)
+pass through every helper untouched.
+"""
 
 from __future__ import annotations
 
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.profiles import ProfileTable
@@ -25,20 +32,69 @@ def init_state(prof: ProfileTable):
     }
 
 
+def _ewma_cell(val, obs, eff):
+    """One annealed-EWMA cell update: move ``val`` toward ``obs`` by the
+    effective step ``eff`` (shared by the T and E tables, scalar and
+    windowed paths — the single place the fold is written)."""
+    return val * (1.0 - eff) + eff * obs
+
+
 def observe(state, p, g, obs_t_ms, obs_e_mwh=None, alpha: float = 0.1,
             prior_weight: float = 10.0):
     """Fold one observation into the EWMA. The effective step size anneals
     from ~0 (trust prior) to ``alpha`` as observations accumulate."""
     c = state["count"][p, g]
     eff = alpha * c / (c + prior_weight)
-    new_T = state["T"].at[p, g].mul(1.0 - eff)
-    new_T = new_T.at[p, g].add(eff * obs_t_ms)
     out = dict(state)
-    out["T"] = new_T
+    out["T"] = state["T"].at[p, g].set(
+        _ewma_cell(state["T"][p, g], obs_t_ms, eff))
     out["count"] = state["count"].at[p, g].add(1.0)
     if obs_e_mwh is not None:
-        new_E = state["E"].at[p, g].mul(1.0 - eff)
-        out["E"] = new_E.at[p, g].add(eff * obs_e_mwh)
+        out["E"] = state["E"].at[p, g].set(
+            _ewma_cell(state["E"][p, g], obs_e_mwh, eff))
+    return out
+
+
+def observe_window(state, pairs, groups, obs_t_ms, obs_e_mwh=None,
+                   alpha: float = 0.1, prior_weight: float = 10.0):
+    """Fold a whole routing window of observations in one call — the
+    batched :func:`observe` behind the gateway's windowed ``moscore``
+    path.
+
+    ``pairs``/``groups``/``obs_t_ms`` (and optionally ``obs_e_mwh``) are
+    (W,) arrays, one entry per completed request, in completion order.
+    Equivalent to W sequential :func:`observe` calls: updates to distinct
+    cells commute, and within a cell the fold preserves window order. The
+    fold runs per cell and is vmapped over the (P, G) table, so the whole
+    window is one device program instead of W scatter round-trips.
+    """
+    pairs = jnp.asarray(pairs, jnp.int32)
+    groups = jnp.asarray(groups, jnp.int32)
+    obs_t = jnp.asarray(obs_t_ms, f32)
+    has_e = obs_e_mwh is not None
+    obs_e = jnp.asarray(obs_e_mwh, f32) if has_e else jnp.zeros_like(obs_t)
+
+    def one_cell(p, g, T0, E0, c0):
+        def fold(carry, w):
+            T, E, c = carry
+            hit = (pairs[w] == p) & (groups[w] == g)
+            eff = jnp.where(hit, alpha * c / (c + prior_weight), 0.0)
+            T = _ewma_cell(T, obs_t[w], eff)
+            E = _ewma_cell(E, obs_e[w], eff) if has_e else E
+            return (T, E, c + hit.astype(f32)), None
+
+        (T, E, c), _ = jax.lax.scan(fold, (T0, E0, c0),
+                                    jnp.arange(pairs.shape[0]))
+        return T, E, c
+
+    P, G = state["T"].shape
+    pp, gg = jnp.meshgrid(jnp.arange(P), jnp.arange(G), indexing="ij")
+    T, E, c = jax.vmap(jax.vmap(one_cell))(pp, gg, state["T"], state["E"],
+                                           state["count"])
+    out = dict(state)
+    out["T"], out["count"] = T, c
+    if has_e:
+        out["E"] = E
     return out
 
 

@@ -103,3 +103,12 @@ def policy_scores(code, prof: ProfileTable, g, q, rnd, rr_counter,
         return -jnp.mean(prof.mAP, axis=1)       # fixed global-best-mAP pair
 
     return jax.lax.switch(code, [mo, rr, rnd_, lc, le, lt, ha], None)
+
+
+def select_pair(code, prof: ProfileTable, g, q, rnd, rr_counter, gamma,
+                delta):
+    """``(p*, scores)`` — the one selection rule every dispatch path (the
+    simulator's scan, the gateway, ``repro.core.dispatch`` engines)
+    shares: score with :func:`policy_scores`, pick the argmin."""
+    scores = policy_scores(code, prof, g, q, rnd, rr_counter, gamma, delta)
+    return jnp.argmin(scores).astype(jnp.int32), scores

@@ -22,6 +22,15 @@ plays recorded object-count traces instead. Sources are pytrees
 replicated across the config axis, so both compose with vmap, sharding
 and fleet stacking unchanged.
 
+Dispatch state is pluggable the same way (``dispatch=`` throughout,
+``repro.core.dispatch``): the per-decision state — round-robin counter,
+online-EWMA belief tables — lives in a ``DispatchState`` pytree carried
+through the scan, with ``init``/``select``/``observe`` hooks shared with
+the serving gateway. ``StaticDispatch`` (default) is bit-identical to
+the pre-interface engine; ``OnlineDispatch`` adapts to observations, and
+a ``DriftSchedule`` (``drift=``) perturbs the *true* profile mid-run to
+model throttling or model swaps.
+
 Bit-exactness across batching: jax's threefry draws are not prefix-stable
 across shapes (the first U samples of a ``(U_max,)`` draw differ from a
 ``(U,)`` draw), so the initial per-user complexity states are drawn
@@ -76,7 +85,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import estimator as EST
-from repro.core.policies import POLICY_CODES, policy_scores
+from repro.core.dispatch import (DispatchEngine, DriftSchedule,
+                                 default_dispatch)
+from repro.core.policies import POLICY_CODES
 from repro.core.profiles import ProfileTable
 from repro.core.workload import (MarkovWorkload, WorkloadSource,
                                  _init_draws, default_workload,
@@ -89,7 +100,8 @@ from repro.distributed.sharding import config_axis_spec, pad_leading
 __all__ = ["SimConfig", "ConfigGrid", "make_grid", "simulate",
            "simulate_batch", "summarize", "summarize_batch", "run_policy",
            "sweep", "sweep_grid", "SWEEP_AXES", "grid_cache_info",
-           "grid_cache_clear", "_init_draws", "default_workload"]
+           "grid_cache_clear", "_init_draws", "default_workload",
+           "default_dispatch"]
 
 f32 = jnp.float32
 i32 = jnp.int32
@@ -111,6 +123,9 @@ class SimConfig:
     workload: WorkloadSource | None = field(default=None, compare=False)
     # scene-complexity source; None = the Markov default. All configs in
     # one grid must share a single source (it is grid data, like prof).
+    dispatch: DispatchEngine | None = field(default=None, compare=False)
+    # dispatch-state engine; None = StaticDispatch. Like the workload, it
+    # is grid data: every config in one grid must share a single engine.
 
 
 class ConfigGrid(NamedTuple):
@@ -162,9 +177,34 @@ def _resolve_workload(workload, cfgs=()) -> WorkloadSource:
     return workload if workload is not None else default_workload()
 
 
+def _resolve_dispatch(dispatch, cfgs=()) -> DispatchEngine:
+    """One dispatch engine for a whole grid, mirroring
+    :func:`_resolve_workload`: the explicit argument wins, otherwise the
+    single engine the configs agree on (None = :class:`StaticDispatch`).
+    Mixing engines in one grid is an error — the engine is grid data
+    shared by every config, exactly like the profile table. Unlike
+    workload sources (identity-keyed: a trace's equality IS identity),
+    engines are frozen hyper-parameter dataclasses, so two separately
+    constructed but equal engines count as the same one."""
+    found: list[DispatchEngine] = []
+    for c in cfgs:
+        if c.dispatch is not None and c.dispatch not in found:
+            found.append(c.dispatch)
+    if dispatch is None and found:
+        if len(found) > 1:
+            raise ValueError("configs in one grid must share a single "
+                             "dispatch engine")
+        (dispatch,) = found
+    elif dispatch is not None and any(d != dispatch for d in found):
+        raise ValueError("dispatch= argument conflicts with the configs' "
+                         "own dispatch engine")
+    return dispatch if dispatch is not None else default_dispatch()
+
+
 def make_grid(prof: ProfileTable, configs,
               n_users_max: int | None = None,
-              workload: WorkloadSource | None = None) -> ConfigGrid:
+              workload: WorkloadSource | None = None,
+              dispatch: DispatchEngine | None = None) -> ConfigGrid:
     """Pack an iterable of :class:`SimConfig` into a padded
     :class:`ConfigGrid`.
 
@@ -183,6 +223,10 @@ def make_grid(prof: ProfileTable, configs,
         later stepped inside the scan — pass the SAME source to
         ``simulate_batch``). Defaults to the configs' shared source, else
         the Markov chain.
+      dispatch: dispatch-state engine the grid will run under
+        (``repro.core.dispatch``). It holds no grid-build data — the
+        argument is validated here (one engine per grid, like the
+        workload) and must be passed again to ``simulate_batch``.
 
     Returns:
       A :class:`ConfigGrid` with leading dim ``B = len(configs)``
@@ -205,6 +249,7 @@ def make_grid(prof: ProfileTable, configs,
             "(they are scan-shape parameters, passed separately to "
             "simulate_batch/summarize_batch)")
     workload = _resolve_workload(workload, cfgs)
+    _resolve_dispatch(dispatch, cfgs)
     U = max(c.n_users for c in cfgs) if n_users_max is None else n_users_max
     G = prof.n_groups
 
@@ -233,13 +278,21 @@ def make_grid(prof: ProfileTable, configs,
 
 
 def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
+                   dispatch: DispatchEngine, drift: DriftSchedule | None,
                    policy_code, n_users, gamma, delta, oracle, stickiness,
                    rng, true0, phase, *, n_requests: int):
     """Trace body shared by the single and batched paths. Every config
     parameter is a traced array; the only static shapes are ``n_requests``
-    (scan length), ``true0``'s length (``n_users_max``) and the workload
-    source's own data. Padded users (index >= n_users) sit at
-    ``t_next = +inf`` and never dispatch."""
+    (scan length), ``true0``'s length (``n_users_max``) and the workload /
+    dispatch / drift pytrees' own data. Padded users (index >= n_users)
+    sit at ``t_next = +inf`` and never dispatch.
+
+    The dispatch engine's :class:`~repro.core.dispatch.DispatchState`
+    rides in the scan carry: ``select`` scores each request against the
+    engine's belief tables, ``observe`` folds the request's TRUE service
+    time and energy back in afterwards. ``drift`` (when given) perturbs
+    the *true* profile per step — the policy never sees it except through
+    observations."""
     P = prof.n_pairs
     G = prof.n_groups
     U = true0.shape[0]
@@ -255,7 +308,7 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         "server_by_user": jnp.full((U,), -1, i32),
         "finish_by_user": jnp.zeros((U,), f32),
         "avail": jnp.zeros((P,), f32),
-        "rr": jnp.zeros((), i32),
+        "dispatch": dispatch.init(prof),
         "rng": rng,
     }
 
@@ -264,7 +317,7 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
     oracle = jnp.asarray(oracle, bool)
     phase = jnp.asarray(phase, i32)
 
-    def step(c, _):
+    def step(c, i):
         u = jnp.argmin(c["t_next"])
         t = c["t_next"][u]
         rng, k1, k2, k3 = jax.random.split(c["rng"], 4)
@@ -279,15 +332,19 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         q = jnp.zeros((P,), f32).at[c["server_by_user"]].add(
             active.astype(f32), mode="drop")
 
-        scores = policy_scores(code, prof, g_est, q, k2, c["rr"] % P,
-                               gamma, delta)
-        p = jnp.argmin(scores).astype(i32)
+        p, dstate = dispatch.select(c["dispatch"], prof, code, g_est, q,
+                                    k2, gamma, delta)
 
-        t_serv = prof.T[p, g_true] / 1000.0                   # ms -> s
+        # the TRUE fleet this step: the offline profile, or its drifted
+        # copy — service time, energy and the observation all come from it
+        truth = prof if drift is None else drift.at_step(prof, i)
+        t_serv = truth.T[p, g_true] / 1000.0                  # ms -> s
         start = jnp.maximum(t, c["avail"][p])
         finish = start + t_serv
 
         detected = EST.noisy_detected_count(k3, new_true, prof.mAP[p, g_true])
+        dstate = dispatch.observe(dstate, p, g_est, truth.T[p, g_true],
+                                  truth.E[p, g_true])
 
         nc = dict(c)
         nc["rng"] = rng
@@ -298,12 +355,12 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         nc["finish_by_user"] = c["finish_by_user"].at[u].set(finish)
         nc["avail"] = c["avail"].at[p].set(finish)
         nc["t_next"] = c["t_next"].at[u].set(finish)
-        nc["rr"] = c["rr"] + 1
+        nc["dispatch"] = dstate
 
         rec = {
             "t_arrival": t,
             "latency": finish - t,
-            "energy": prof.E[p, g_true],
+            "energy": truth.E[p, g_true],
             "map": prof.mAP[p, g_true],
             "server": p,
             "g_true": g_true,
@@ -313,21 +370,25 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         }
         return nc, rec
 
-    _, recs = jax.lax.scan(step, carry, None, length=n_requests)
+    _, recs = jax.lax.scan(step, carry, jnp.arange(n_requests, dtype=i32))
     return recs
 
 
-def _simulate_config(prof, workload, g: ConfigGrid, *, n_requests: int):
+def _simulate_config(prof, workload, dispatch, drift, g: ConfigGrid, *,
+                     n_requests: int):
     """One config (scalar ConfigGrid leaves) -> record arrays; fields are
     accessed by name so batched and single paths can't transpose leaves."""
-    return _simulate_core(prof, workload, g.policy_code, g.n_users, g.gamma,
-                          g.delta, g.oracle, g.stickiness, g.rng, g.true0,
-                          g.phase, n_requests=n_requests)
+    return _simulate_core(prof, workload, dispatch, drift, g.policy_code,
+                          g.n_users, g.gamma, g.delta, g.oracle,
+                          g.stickiness, g.rng, g.true0, g.phase,
+                          n_requests=n_requests)
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
-def _simulate_one(prof, workload, g: ConfigGrid, *, n_requests: int):
-    return _simulate_config(prof, workload, g, n_requests=n_requests)
+def _simulate_one(prof, workload, dispatch, drift, g: ConfigGrid, *,
+                  n_requests: int):
+    return _simulate_config(prof, workload, dispatch, drift, g,
+                            n_requests=n_requests)
 
 
 def _over_fleet(fn, prof):
@@ -340,16 +401,17 @@ def _over_fleet(fn, prof):
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
-def _simulate_vmapped(prof, workload, grid: ConfigGrid, *, n_requests: int):
+def _simulate_vmapped(prof, workload, dispatch, drift, grid: ConfigGrid, *,
+                      n_requests: int):
     return _over_fleet(
         lambda pf: jax.vmap(
-            lambda g: _simulate_config(pf, workload, g,
+            lambda g: _simulate_config(pf, workload, dispatch, drift, g,
                                        n_requests=n_requests))(grid),
         prof)
 
 
-def _fused_summaries(prof, workload, grid: ConfigGrid, *, n_requests: int,
-                     warmup: int):
+def _fused_summaries(prof, workload, dispatch, drift, grid: ConfigGrid, *,
+                     n_requests: int, warmup: int):
     """The simulate + summarize composition over (fleet,) config — the ONE
     source of truth shared by the single-device jit and the shard_map'ed
     path, so the two can never drift apart and break the bit-identical
@@ -358,7 +420,8 @@ def _fused_summaries(prof, workload, grid: ConfigGrid, *, n_requests: int,
 
     def per_fleet(pf):
         def one(g):
-            recs = _simulate_config(pf, workload, g, n_requests=n_requests)
+            recs = _simulate_config(pf, workload, dispatch, drift, g,
+                                    n_requests=n_requests)
             return _summarize_core(recs, pf, warmup)
 
         return jax.vmap(one)(grid)
@@ -367,10 +430,10 @@ def _fused_summaries(prof, workload, grid: ConfigGrid, *, n_requests: int,
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests", "warmup"))
-def _sweep_fused(prof, workload, grid: ConfigGrid, *, n_requests: int,
-                 warmup: int):
-    return _fused_summaries(prof, workload, grid, n_requests=n_requests,
-                            warmup=warmup)
+def _sweep_fused(prof, workload, dispatch, drift, grid: ConfigGrid, *,
+                 n_requests: int, warmup: int):
+    return _fused_summaries(prof, workload, dispatch, drift, grid,
+                            n_requests=n_requests, warmup=warmup)
 
 
 @functools.lru_cache(maxsize=None)
@@ -378,48 +441,57 @@ def _sweep_sharded_fn(mesh: Mesh, n_requests: int, warmup: int,
                       stacked: bool):
     """Build (and cache per mesh/shape signature) the shard_map'ed fused
     sweep: the config axis is split over every mesh axis, the profile
-    table and workload source are replicated, and each shard runs the
-    plain vmapped simulate + summarize — no collectives, the grid is
-    embarrassingly parallel. The inner jit re-specialises per workload
-    pytree structure, so one cache entry serves Markov and trace runs."""
+    table, workload source, dispatch engine and drift schedule are
+    replicated, and each shard runs the plain vmapped simulate + summarize
+    — no collectives, the grid is embarrassingly parallel. The inner jit
+    re-specialises per workload/dispatch/drift pytree structure, so one
+    cache entry serves Markov and trace runs, static and online engines."""
     cspec = config_axis_spec(mesh)
     out_spec = PartitionSpec(None, *cspec) if stacked else cspec
 
-    def inner(pf, wl, g):
-        return _fused_summaries(pf, wl, g, n_requests=n_requests,
+    def inner(pf, wl, de, dr, g):
+        return _fused_summaries(pf, wl, de, dr, g, n_requests=n_requests,
                                 warmup=warmup)
 
     return jax.jit(shard_map(
         inner, mesh=mesh,
-        in_specs=(PartitionSpec(), PartitionSpec(), cspec),
+        in_specs=(PartitionSpec(), PartitionSpec(), PartitionSpec(),
+                  PartitionSpec(), cspec),
         out_specs=out_spec))
 
 
-def _sweep_summaries(prof, workload, grid: ConfigGrid, *, n_requests: int,
-                     warmup: int, mesh: Mesh | None):
+def _sweep_summaries(prof, workload, dispatch, drift, grid: ConfigGrid, *,
+                     n_requests: int, warmup: int, mesh: Mesh | None):
     """Dispatch a fused sweep to the single-device or sharded path; both
     return per-config summary dicts with config as the trailing axis of
     each (B,) / (F, B) leaf, bit-identical to each other."""
     if mesh is None:
-        return _sweep_fused(prof, workload, grid, n_requests=n_requests,
-                            warmup=warmup)
+        return _sweep_fused(prof, workload, dispatch, drift, grid,
+                            n_requests=n_requests, warmup=warmup)
     n_dev = int(mesh.devices.size)
     padded, n = pad_leading(grid, n_dev)
     fn = _sweep_sharded_fn(mesh, n_requests, warmup, prof.is_stacked)
-    out = fn(prof, workload, ConfigGrid(*map(jnp.asarray, padded)))
+    out = fn(prof, workload, dispatch, drift,
+             ConfigGrid(*map(jnp.asarray, padded)))
     return {k: v[..., :n] for k, v in out.items()}
 
 
 def simulate(prof: ProfileTable, cfg: SimConfig,
-             workload: WorkloadSource | None = None):
+             workload: WorkloadSource | None = None,
+             dispatch: DispatchEngine | None = None,
+             drift: DriftSchedule | None = None):
     """Returns a dict of per-request record arrays (length n_requests).
     Single-fleet only — stacked tables go through :func:`simulate_batch` /
-    :func:`sweep_grid`, which vmap the fleet axis. ``workload`` defaults
-    to ``cfg.workload``, else the Markov chain."""
+    :func:`sweep_grid`, which vmap the fleet axis. ``workload`` /
+    ``dispatch`` default to the config's own (``cfg.workload`` /
+    ``cfg.dispatch``), else the Markov chain and static dispatch;
+    ``drift`` optionally perturbs the true profile mid-run
+    (:class:`repro.core.dispatch.DriftSchedule`)."""
     if prof.is_stacked:
         raise ValueError("simulate() takes a single (P, G) ProfileTable; "
                          "pass stacked tables to simulate_batch/sweep_grid")
     workload = _resolve_workload(workload, (cfg,))
+    dispatch = _resolve_dispatch(dispatch, (cfg,))
     true0, rng, phase = workload.init_draws(
         cfg.seed, cfg.stickiness, n_groups=prof.n_groups,
         n_users=cfg.n_users)
@@ -432,11 +504,14 @@ def simulate(prof: ProfileTable, cfg: SimConfig,
         oracle=jnp.asarray(cfg.oracle_estimator, bool),
         rng=jnp.asarray(rng), true0=jnp.asarray(true0, i32),
         phase=jnp.asarray(phase, i32))
-    return _simulate_one(prof, workload, g, n_requests=cfg.n_requests)
+    return _simulate_one(prof, workload, dispatch, drift, g,
+                         n_requests=cfg.n_requests)
 
 
 def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
-                   workload: WorkloadSource | None = None):
+                   workload: WorkloadSource | None = None,
+                   dispatch: DispatchEngine | None = None,
+                   drift: DriftSchedule | None = None):
     """Run every config in ``grid`` as ONE vmapped scan in ONE jit.
 
     Args:
@@ -453,6 +528,13 @@ def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
         chain. Must match the build-time source — a grid whose ``phase``
         leaf is nonzero (a trace draw) is rejected under the Markov
         default rather than silently re-interpreted.
+      dispatch: dispatch-state engine (``repro.core.dispatch``;
+        :class:`StaticDispatch` by default). Its ``DispatchState`` pytree
+        rides in the scan carry, so online engines vmap over configs and
+        shard over meshes unchanged.
+      drift: optional :class:`~repro.core.dispatch.DriftSchedule`
+        perturbing the TRUE profile per dispatch step — the scenario hook
+        for throttling / model-swap experiments.
 
     Returns:
       Dict of float32/int32 record arrays with leading dims
@@ -463,12 +545,14 @@ def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
       any config's trajectory.
     """
     workload = _resolve_workload(workload)
+    dispatch = _resolve_dispatch(dispatch)
     if isinstance(workload, MarkovWorkload) and bool(grid.phase.any()):
         raise ValueError(
             "grid carries nonzero workload phase offsets (built with a "
             "trace source) but simulate_batch resolved the Markov "
             "default; pass the grid's own workload= explicitly")
-    return _simulate_vmapped(prof, workload, grid, n_requests=n_requests)
+    return _simulate_vmapped(prof, workload, dispatch, drift, grid,
+                             n_requests=n_requests)
 
 
 def _summarize_core(recs, prof: ProfileTable, warmup: int):
@@ -523,11 +607,14 @@ def summarize_batch(recs, prof: ProfileTable, *, warmup: int):
 def run_policy(prof: ProfileTable, policy: str, n_users: int,
                n_requests: int = 2000, gamma: float = 0.5,
                delta: float = 20.0, seed: int = 0, stickiness: float = 0.85,
-               workload: WorkloadSource | None = None):
+               workload: WorkloadSource | None = None,
+               dispatch: DispatchEngine | None = None,
+               drift: DriftSchedule | None = None):
     cfg = SimConfig(n_users=n_users, n_requests=n_requests, policy=policy,
                     gamma=gamma, delta=delta, seed=seed,
-                    stickiness=stickiness, workload=workload)
-    recs = simulate(prof, cfg)
+                    stickiness=stickiness, workload=workload,
+                    dispatch=dispatch)
+    recs = simulate(prof, cfg, drift=drift)
     out = summarize(recs, prof, cfg)
     return {k: float(v) for k, v in out.items()}
 
@@ -539,7 +626,9 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
                gammas=(0.5,), deltas=(20.0,), oracle=(False,),
                seeds=(0, 1, 2), n_requests: int = 2000,
                stickiness: float = 0.85, warmup_frac: float = 0.1,
-               mesh=None, workload: WorkloadSource | None = None):
+               mesh=None, workload: WorkloadSource | None = None,
+               dispatch: DispatchEngine | None = None,
+               drift: DriftSchedule | None = None):
     """Cartesian-product sweep as a single fused device program.
 
     Args:
@@ -560,6 +649,14 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
         Markov chain by default, or a recorded trace
         (``repro.data.traces.TraceWorkload``). Orthogonal to ``mesh``
         and fleet stacking.
+      dispatch: dispatch-state engine shared by every config —
+        :class:`~repro.core.dispatch.StaticDispatch` by default, or
+        :class:`~repro.core.dispatch.OnlineDispatch` for online-EWMA
+        adaptation. Orthogonal to ``mesh``, ``workload`` and fleet
+        stacking.
+      drift: optional :class:`~repro.core.dispatch.DriftSchedule`
+        perturbing the TRUE profile mid-run for every config (thermal
+        throttling / model swap scenarios).
 
     Returns:
       ``{metric: float64 ndarray}`` with shape ``(len(policies),
@@ -570,6 +667,7 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
       length, and mesh.
     """
     workload = _resolve_workload(workload)
+    dispatch = _resolve_dispatch(dispatch)
     combos = list(itertools.product(policies, user_levels, gammas, deltas,
                                     oracle, seeds))
     cfgs = [SimConfig(n_users=nu, n_requests=n_requests, policy=pol,
@@ -577,7 +675,8 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
                       warmup_frac=warmup_frac, oracle_estimator=orc)
             for pol, nu, ga, de, orc, sd in combos]
     grid = make_grid(prof, cfgs, workload=workload)
-    out = _sweep_summaries(prof, workload, grid, n_requests=n_requests,
+    out = _sweep_summaries(prof, workload, dispatch, drift, grid,
+                           n_requests=n_requests,
                            warmup=int(n_requests * warmup_frac), mesh=mesh)
     shape = (len(policies), len(user_levels), len(gammas), len(deltas),
              len(oracle), len(seeds))

@@ -30,9 +30,9 @@ class ServingEngine:
     @classmethod
     def build(cls, prof: ProfileTable, *, policy="MO", gamma=0.5, delta=20.0,
               n_streams=8, mode="modelled", tiers=None, online=False,
-              img_res=64, seed=0):
+              dispatch=None, img_res=64, seed=0):
         gw = Gateway(prof, policy=policy, gamma=gamma, delta=delta,
-                     online=online)
+                     online=online, dispatch=dispatch)
         tiers = tiers or ["ssd_v1"] * prof.n_pairs
         exs = [Executor(i, str(prof.names[i] if prof.names else i), prof,
                         mode=mode, tier=tiers[i])

@@ -1,9 +1,15 @@
 """The gateway: per-request (or windowed) policy decisions.
 
-Holds the offline ProfileTable, optional online-EWMA adaptation state, and
-the per-stream estimator state (last detected count). Per-request decisions
-use the jitted Algorithm-1 scorer; batched routing windows go through the
-fused ``moscore`` Pallas kernel — identical results (tests assert so)."""
+Holds the offline ProfileTable, a pluggable dispatch engine
+(``repro.core.dispatch`` — the SAME ``init``/``select``/``observe`` code
+the batched simulator threads through its scan), and the per-stream
+estimator state (last detected count). Per-request decisions use the
+jitted Algorithm-1 scorer via the engine; batched routing windows go
+through the fused ``moscore`` Pallas kernel against the engine's belief
+tables — identical results (tests assert so). With an
+:class:`~repro.core.dispatch.OnlineDispatch` engine the gateway folds
+every observed latency/energy back into the EWMA belief state
+(per-request ``observe_latency`` or the batched ``observe_window``)."""
 
 from __future__ import annotations
 
@@ -15,8 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import estimator as EST
-from repro.core import online as ONL
-from repro.core.policies import POLICY_CODES, policy_scores
+from repro.core.dispatch import (DispatchEngine, OnlineDispatch,
+                                 StaticDispatch)
+from repro.core.policies import POLICY_CODES
 from repro.core.profiles import ProfileTable
 from repro.kernels.moscore import moscore_route
 
@@ -27,24 +34,33 @@ class Gateway:
     policy: str = "MO"
     gamma: float = 0.5
     delta: float = 20.0
-    online: bool = False
-    _rr: int = 0
+    online: bool = False      # shorthand for dispatch=OnlineDispatch()
+    seed: int = 1234          # seeds the RND baseline's stream
+    dispatch: DispatchEngine | None = None
     _stream_counts: dict = field(default_factory=dict)
-    _online_state: Any = None
+    _dstate: Any = None
     _rng: Any = None
 
     def __post_init__(self):
-        self._rng = jax.random.PRNGKey(1234)
-        if self.online:
-            self._online_state = ONL.init_state(self.prof)
+        if self.dispatch is None:
+            self.dispatch = OnlineDispatch() if self.online \
+                else StaticDispatch()
+        self.online = isinstance(self.dispatch, OnlineDispatch)
+        self._rng = jax.random.PRNGKey(self.seed)
+        self._dstate = self.dispatch.init(self.prof)
         code = POLICY_CODES[self.policy]
+        engine, prof = self.dispatch, self.prof
 
         @jax.jit
-        def _score(T, E, mAP, g, q, rnd, rr, gamma, delta):
-            prof = ProfileTable(T, E, mAP)
-            return policy_scores(code, prof, g, q, rnd, rr, gamma, delta)
+        def _select(state, g, q, rnd, gamma, delta):
+            return engine.select(state, prof, code, g, q, rnd, gamma, delta)
 
-        self._score = _score
+        @jax.jit
+        def _observe(state, p, g, t_ms, e_mwh):
+            return engine.observe(state, p, g, t_ms, e_mwh)
+
+        self._select = _select
+        self._observe = _observe
 
     # -- estimator ----------------------------------------------------------
     def estimate_group(self, stream_id: int) -> int:
@@ -56,31 +72,53 @@ class Gateway:
 
     def observe_latency(self, pair: int, group: int, latency_ms: float,
                         energy_mwh: float | None = None) -> None:
-        if self.online:
-            self._online_state = ONL.observe(
-                self._online_state, pair, group, latency_ms, energy_mwh)
+        """Fold one completed request's measurements into the dispatch
+        state (skipped entirely for non-adaptive engines — the hot
+        serving path pays nothing under :class:`StaticDispatch`)."""
+        if not self.dispatch.adaptive:
+            return
+        self._dstate = self._observe(
+            self._dstate, jnp.asarray(pair, jnp.int32),
+            jnp.asarray(group, jnp.int32),
+            jnp.asarray(latency_ms, jnp.float32),
+            None if energy_mwh is None
+            else jnp.asarray(energy_mwh, jnp.float32))
+
+    def observe_window(self, pairs, groups, latency_ms,
+                       energy_mwh=None) -> None:
+        """Batched :meth:`observe_latency` over a completed routing window
+        — the engine's own ``observe_window`` hook (for
+        :class:`OnlineDispatch`, one fused device program equivalent to
+        per-request observes)."""
+        if not self.dispatch.adaptive:
+            return
+        self._dstate = self.dispatch.observe_window(
+            self._dstate, jnp.asarray(pairs, jnp.int32),
+            jnp.asarray(groups, jnp.int32),
+            jnp.asarray(latency_ms, jnp.float32),
+            None if energy_mwh is None
+            else jnp.asarray(energy_mwh, jnp.float32))
 
     def _tables(self) -> ProfileTable:
-        if self.online:
-            return ONL.as_profile(self._online_state, self.prof)
-        return self.prof
+        return self.dispatch.tables(self._dstate, self.prof)
 
     # -- decisions ----------------------------------------------------------
     def route(self, stream_id: int, queue_depths) -> tuple[int, int]:
         """One request -> (pair, est_group)."""
         g = self.estimate_group(stream_id)
         self._rng, k = jax.random.split(self._rng)
-        p = self._tables()
-        scores = self._score(p.T, p.E, p.mAP, g,
-                             jnp.asarray(queue_depths, jnp.float32), k,
-                             self._rr % self.prof.n_pairs,
-                             self.gamma, self.delta)
-        self._rr += 1
-        return int(jnp.argmin(scores)), g
+        p, self._dstate = self._select(
+            self._dstate, jnp.asarray(g, jnp.int32),
+            jnp.asarray(queue_depths, jnp.float32), k,
+            jnp.asarray(self.gamma, jnp.float32),
+            jnp.asarray(self.delta, jnp.float32))
+        return int(p), g
 
     def route_window(self, stream_ids, queue_depths):
         """Batched routing window through the fused kernel (MO policy only);
-        returns (pairs (W,), est_groups (W,), q_after)."""
+        returns (pairs (W,), est_groups (W,), q_after). Scores against the
+        dispatch engine's current belief tables, exactly like
+        :meth:`route`."""
         assert self.policy == "MO", "windowed routing is the MO fast path"
         gs = jnp.asarray([self.estimate_group(s) for s in stream_ids],
                          jnp.int32)

@@ -1,0 +1,107 @@
+"""Online-EWMA estimator properties (ISSUE 4 satellites): the deduplicated
+cell fold, the batched ``observe_window`` equivalence, and the annealing
+contract — cold cells track the prior, hot cells converge to observations
+— property-tested over the (alpha, prior_weight) plane."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import online as ONL
+from repro.core.profiles import paper_fleet
+
+
+def _seq_observe(state, ps, gs, ts, es=None, **kw):
+    for w in range(len(ps)):
+        state = ONL.observe(state, ps[w], gs[w], ts[w],
+                            None if es is None else es[w], **kw)
+    return state
+
+
+def test_observe_window_equals_sequential_observes():
+    """The vmapped per-cell window fold == W sequential observe() calls,
+    interleaved cells, repeats and all — with and without energy."""
+    prof = paper_fleet()
+    rng = np.random.default_rng(7)
+    W = 64
+    ps = rng.integers(0, prof.n_pairs, W)
+    gs = rng.integers(0, prof.n_groups, W)
+    ts = rng.uniform(50.0, 500.0, W).astype(np.float32)
+    es = rng.uniform(0.01, 0.5, W).astype(np.float32)
+    for energy in (es, None):
+        seq = _seq_observe(ONL.init_state(prof), ps, gs, ts, energy)
+        win = ONL.observe_window(ONL.init_state(prof), ps, gs, ts, energy)
+        for k in ("T", "E", "count"):
+            np.testing.assert_allclose(np.asarray(win[k]),
+                                       np.asarray(seq[k]), rtol=1e-6,
+                                       err_msg=f"energy={energy is not None}"
+                                               f":{k}")
+    # energy untouched when not observed
+    win = ONL.observe_window(ONL.init_state(prof), ps, gs, ts, None)
+    np.testing.assert_array_equal(np.asarray(win["E"]),
+                                  np.asarray(prof.E, np.float32))
+
+
+def test_observe_passes_extra_state_keys_through():
+    """Dispatch states carry extra keys (the rr counter) — both observe
+    paths must preserve them untouched."""
+    import jax.numpy as jnp
+
+    prof = paper_fleet()
+    state = ONL.init_state(prof)
+    state["rr"] = jnp.asarray(17, jnp.int32)
+    out = ONL.observe(state, 1, 2, 100.0, 0.1)
+    assert int(out["rr"]) == 17
+    out = ONL.observe_window(state, np.array([1]), np.array([2]),
+                             np.array([100.0], np.float32))
+    assert int(out["rr"]) == 17
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.floats(0.02, 0.5), st.floats(1.0, 30.0), st.floats(200.0, 900.0))
+def test_ewma_annealing_cold_tracks_prior_hot_converges(alpha, prior_weight,
+                                                        obs):
+    """Over the (alpha, prior_weight) plane: a cell that saw nothing stays
+    bit-equal to the prior; a cell's first observation never moves it
+    (count 0 -> eff 0); after a couple of observations it has barely moved
+    (cold: trust the prior); after 300 it has closed most of the gap to
+    the observations (hot: trust the measurements), never overshooting and
+    never moving away."""
+    prof = paper_fleet()
+    kw = dict(alpha=alpha, prior_weight=prior_weight)
+    prior = float(prof.T[2, 3])
+    n_obs = 300
+    state = ONL.observe_window(
+        ONL.init_state(prof), np.full(n_obs, 2), np.full(n_obs, 3),
+        np.full(n_obs, obs, np.float32), **kw)
+
+    # untouched cells: bit-equal to the prior, zero counts
+    T = np.asarray(state["T"])
+    mask = np.ones_like(T, bool)
+    mask[2, 3] = False
+    np.testing.assert_array_equal(T[mask], np.asarray(prof.T,
+                                                      np.float32)[mask])
+    assert float(state["count"][2, 3]) == n_obs
+
+    # trajectory: replay the same stream cell-locally
+    vals = [prior]
+    v, c = prior, 0.0
+    for _ in range(n_obs):
+        eff = alpha * c / (c + prior_weight)
+        v = v * (1.0 - eff) + eff * obs
+        c += 1.0
+        vals.append(v)
+    np.testing.assert_allclose(float(state["T"][2, 3]), v, rtol=1e-5)
+
+    gap0 = abs(obs - prior)
+    gaps = np.abs(obs - np.asarray(vals))
+    assert gaps[1] == gap0                      # first obs: eff == 0
+    # cold: after 3 observations the move is bounded by the annealing ramp
+    # (each eff_k <= alpha * k / (k + prior_weight)), so a heavy prior
+    # keeps the cell near the prior
+    assert gaps[3] >= gap0 * (1.0 - 3.0 * alpha / (1.0 + prior_weight)) \
+        - 1e-3 * gap0
+    assert (np.diff(gaps) <= 1e-6 * gap0).all()  # monotone toward obs
+    assert gaps[-1] < 0.15 * gap0               # hot: mostly converged
+    lo, hi = min(prior, obs), max(prior, obs)
+    assert (np.asarray(vals) >= lo - 1e-3).all()
+    assert (np.asarray(vals) <= hi + 1e-3).all()  # never overshoots

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import online as ONL
+from repro.core.dispatch import OnlineDispatch, StaticDispatch
 from repro.core.hierarchy import hierarchical_select, pod_aggregate
 from repro.core.profiles import paper_fleet, synthetic_fleet
 from repro.serving.engine import ServingEngine
@@ -44,6 +45,77 @@ def test_gateway_respects_feasibility():
     pair, g = gw.route(0, np.zeros(5))
     thr = float(jnp.max(prof.mAP[:, g])) - 10.0
     assert float(prof.mAP[pair, g]) >= thr
+
+
+def test_gateway_seedable_rng():
+    """Same seed -> identical RND decision streams; different seeds
+    diverge (the constructor's seed= replaced a hardcoded PRNGKey)."""
+    prof = paper_fleet()
+    q = np.zeros(5)
+    runs = {}
+    for seed in (0, 0, 7):
+        gw = Gateway(prof, policy="RND", seed=seed)
+        runs.setdefault(seed, []).append(
+            [gw.route(0, q)[0] for _ in range(32)])
+    assert runs[0][0] == runs[0][1]
+    assert runs[0][0] != runs[7][0]
+    assert Gateway(prof).seed == 1234          # historical default kept
+
+
+def test_gateway_runs_dispatch_engine_state():
+    """The gateway drives the SAME DispatchEngine hooks as the simulator:
+    static discards observations; online folds them into the EWMA belief
+    tables that the next decision scores against."""
+    prof = paper_fleet()
+    st_gw = Gateway(prof, dispatch=StaticDispatch())
+    on_gw = Gateway(prof, online=True)
+    assert not st_gw.online and on_gw.online
+    for gw in (st_gw, on_gw):
+        for _ in range(60):
+            gw.observe_latency(0, 2, 900.0, 0.9)   # n1 suddenly slow+hungry
+    np.testing.assert_array_equal(np.asarray(st_gw._tables().T),
+                                  np.asarray(prof.T))
+    assert float(on_gw._tables().T[0, 2]) > 2.0 * float(prof.T[0, 2])
+    assert float(on_gw._tables().E[0, 2]) > 2.0 * float(prof.E[0, 2])
+    # rr state lives in the dispatch state, advanced by route()
+    st_gw.route(0, np.zeros(5))
+    assert int(st_gw._dstate["rr"]) == 1
+
+
+def test_gateway_window_matches_per_request_online():
+    """Regression (ISSUE 4): with online=True, the windowed moscore path
+    must make the same decisions as per-request route() calls with manual
+    queue feedback, and observe_window must fold the window's measurements
+    into the same belief state as per-request observe_latency calls."""
+    prof = paper_fleet()
+    gw_req = Gateway(prof, policy="MO", online=True, seed=3)
+    gw_win = Gateway(prof, policy="MO", online=True, seed=3)
+    counts = {0: 0, 1: 2, 2: 4, 3: 1, 4: 3, 5: 2}
+    for s, c in counts.items():
+        gw_req.observe_detections(s, c)
+        gw_win.observe_detections(s, c)
+    streams = [0, 1, 2, 3, 4, 5, 0, 2, 4, 1]
+    q0 = np.zeros(prof.n_pairs, np.float32)
+
+    for round_ in range(3):                    # windows interleaved with
+        pairs_w, gs_w, _q = gw_win.route_window(streams, q0)   # adaptation
+        q = q0.copy()
+        pairs_r = []
+        for s in streams:
+            p, g = gw_req.route(s, q)
+            q[p] += 1.0
+            pairs_r.append(p)
+        assert pairs_r == list(pairs_w), round_
+        lat = 1.5 * np.asarray(prof.T)[pairs_w, gs_w]
+        en = 2.0 * np.asarray(prof.E)[pairs_w, gs_w]
+        for p, g, t, e in zip(pairs_w, gs_w, lat, en):
+            gw_req.observe_latency(int(p), int(g), float(t), float(e))
+        gw_win.observe_window(pairs_w, gs_w, lat, en)
+        for k in ("T", "E", "count"):
+            np.testing.assert_allclose(
+                np.asarray(gw_req._dstate[k]),
+                np.asarray(gw_win._dstate[k]), rtol=1e-6,
+                err_msg=f"round {round_}: {k}")
 
 
 def test_online_adaptation_tracks_drift():
