@@ -5,40 +5,41 @@
   (b) the output-based estimator vs an oracle (g_est == g_true): quantifies
       how much accuracy the paper's zero-cost estimator gives up.
 
-Both ablations share ONE batched device program: the Δ × {output-based,
-oracle} grid is a single ``sweep_grid`` call instead of eight separate
+Both ablations share ONE batched device program: the Δ ×
+{output-based, oracle} grid is a single scenario sweep
+(``Sweep(delta=..., oracle_estimator=...)``) instead of eight separate
 simulator runs."""
 
-from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep_grid
+from dataclasses import replace
+
+from repro.core import scenario as SC
+from repro.core.scenario import Scenario, Sweep
 
 DELTAS = (0.0, 5.0, 10.0, 20.0, 30.0, 45.0)
 
 
-def run(mesh=None, workload=None, dispatch=None) -> list[str]:
-    prof = paper_fleet()
-    grid = sweep_grid(prof, policies=("MO",), user_levels=(15,),
-                      deltas=DELTAS, oracle=(False, True), seeds=(0,),
-                      n_requests=1500, mesh=mesh, workload=workload,
-                      dispatch=dispatch)
+def run(scenario: Scenario | None = None) -> list[str]:
+    scenario = scenario if scenario is not None else Scenario()
+    res = SC.run(replace(scenario, policy="MO", n_users=15,
+                         n_requests=1500, seed=0),
+                 Sweep(delta=DELTAS, oracle_estimator=(False, True)))
 
-    def at(metric, di, oi):
-        # (policy, users, gamma, delta, oracle, seed)
-        return float(grid[metric][0, 0, 0, di, oi, 0])
+    def at(metric, delta, oracle):
+        return float(res.sel(metric, delta=delta,
+                             oracle_estimator=oracle))
 
     rows = ["ablation.delta,latency_ms,energy_mwh,map,estimator_acc"]
-    for di, delta in enumerate(DELTAS):
+    for delta in DELTAS:
         rows.append(f"ablation.delta_{int(delta)},"
-                    f"{at('latency_ms', di, 0):.0f},"
-                    f"{at('energy_mwh', di, 0):.4f},"
-                    f"{at('map', di, 0):.1f},"
-                    f"{at('estimator_acc', di, 0):.3f}")
+                    f"{at('latency_ms', delta, False):.0f},"
+                    f"{at('energy_mwh', delta, False):.4f},"
+                    f"{at('map', delta, False):.1f},"
+                    f"{at('estimator_acc', delta, False):.3f}")
     # estimator ablation at the headline operating point (delta = 20)
-    d20 = DELTAS.index(20.0)
-    for name, oi in (("output_based", 0), ("oracle", 1)):
+    for name, orc in (("output_based", False), ("oracle", True)):
         rows.append(f"ablation.estimator_{name},"
-                    f"{at('latency_ms', d20, oi):.0f},"
-                    f"{at('energy_mwh', d20, oi):.4f},"
-                    f"{at('map', d20, oi):.1f},"
-                    f"{at('estimator_acc', d20, oi):.3f}")
+                    f"{at('latency_ms', 20.0, orc):.0f},"
+                    f"{at('energy_mwh', 20.0, orc):.4f},"
+                    f"{at('map', 20.0, orc):.1f},"
+                    f"{at('estimator_acc', 20.0, orc):.3f}")
     return rows

@@ -7,10 +7,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import scenario as SC
 from repro.core.hierarchy import hierarchical_select, pod_aggregate
 from repro.core.policies import mo_select
-from repro.core.profiles import paper_fleet, stack_profiles, synthetic_fleet
-from repro.core.simulator import SimConfig, simulate, summarize, sweep_grid
+from repro.core.profiles import stack_profiles, synthetic_fleet
+from repro.core.scenario import Scenario, Sweep
 from repro.kernels.moscore import moscore_route
 
 
@@ -38,10 +39,10 @@ def run() -> list[str]:
             lambda T, E, M, g, qq: moscore_route(T, E, M, g, qq,
                                                  delta=20.0, gamma=0.5),
             prof.T, prof.E, prof.mAP, gs, q) / 256.0
-        cfg = SimConfig(n_users=min(4 * n_pairs, 256), n_requests=1200)
-        s = summarize(simulate(prof, cfg), prof, cfg)
+        s = SC.run(Scenario(profile=prof, n_users=min(4 * n_pairs, 256),
+                            n_requests=1200))
         rows.append(f"scale.{n_pairs},{t_one:.1f},{t_win:.2f},"
-                    f"{float(s['latency_ms']):.0f},{float(s['map']):.1f}")
+                    f"{s.scalar('latency_ms'):.0f},{s.scalar('map'):.1f}")
 
     # hierarchical vs flat at 256 pairs / 8 pods (staleness regret)
     prof = synthetic_fleet(rng, 256)
@@ -57,14 +58,14 @@ def run() -> list[str]:
     # compile + run; warm = cached-trace rerun plus the host-side grid
     # build (make_grid's per-config init draws) — the steady-state
     # end-to-end cost the CI regression gate watches.
-    fleet = paper_fleet()
-    kw = dict(policies=("MO", "RR", "RND", "LC", "LE", "LT", "HA"),
-              user_levels=(5, 10, 15), seeds=(0, 1, 2), n_requests=400)
+    sc = Scenario(n_requests=400)
+    sw = Sweep(policy=("MO", "RR", "RND", "LC", "LE", "LT", "HA"),
+               n_users=(5, 10, 15), seed=(0, 1, 2))
     t0 = time.perf_counter()
-    sweep_grid(fleet, **kw)
+    SC.run(sc, sw)
     t_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    sweep_grid(fleet, **kw)
+    SC.run(sc, sw)
     t_warm = time.perf_counter() - t0
     rows.append(f"scale.batched_sweep_63cfg_cold_s,{t_cold:.2f},,,")
     rows.append(f"scale.batched_sweep_63cfg_warm_s,{t_warm:.2f},,,")
@@ -74,9 +75,10 @@ def run() -> list[str]:
     # cells) — previously one sweep per fleet.
     ensemble = stack_profiles([synthetic_fleet(jax.random.fold_in(rng, i), 5)
                                for i in range(4)])
-    sweep_grid(ensemble, **kw)
+    ens_sc = Scenario(profile=ensemble, n_requests=400)
+    SC.run(ens_sc, sw)
     t0 = time.perf_counter()
-    sweep_grid(ensemble, **kw)
+    SC.run(ens_sc, sw)
     t_ens = time.perf_counter() - t0
     rows.append(f"scale.fleet_ensemble_4x63cfg_warm_s,{t_ens:.2f},,,")
     return rows

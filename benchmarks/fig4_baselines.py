@@ -1,12 +1,13 @@
 """Fig. 4: all seven policies across concurrency levels, 3 seeds each
 (the paper's main comparison). The whole policy × users × seed grid runs
-as ONE batched device program via ``sweep_grid`` — a single jitted
-vmap(simulate + summarize) instead of one trace per configuration."""
+as ONE batched device program via the scenario engine
+(``repro.core.scenario.run``) — a single jitted vmap(simulate +
+summarize) instead of one trace per configuration."""
 
-import numpy as np
+from dataclasses import replace
 
-from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep_grid
+from repro.core import scenario as SC
+from repro.core.scenario import Scenario, Sweep
 
 POLICIES = ["MO", "RR", "RND", "LC", "LE", "LT", "HA"]
 USERS = [1, 3, 5, 7, 9, 11, 13, 15]
@@ -14,24 +15,21 @@ METRICS = ["latency_ms", "latency_p90_ms", "throughput_rps", "energy_mwh",
            "map"]
 
 
-def run(n_requests: int = 1500, seeds=(0, 1, 2), mesh=None,
-        workload=None, dispatch=None) -> list[str]:
-    prof = paper_fleet()
-    grid = sweep_grid(prof, policies=POLICIES, user_levels=USERS,
-                      seeds=seeds, n_requests=n_requests, mesh=mesh,
-                      workload=workload, dispatch=dispatch)
-    # (policy, users, gamma, delta, oracle, seed) -> mean over seeds
-    res = {k: np.mean(v[:, :, 0, 0, 0, :], axis=-1)
-           for k, v in grid.items()}
+def run(scenario: Scenario | None = None, n_requests: int = 1500,
+        seeds=(0, 1, 2)) -> list[str]:
+    scenario = scenario if scenario is not None else Scenario()
+    res = SC.run(replace(scenario, n_requests=n_requests),
+                 Sweep(policy=POLICIES, n_users=USERS, seed=seeds))
+    mean = {m: res.mean(m, over="seed") for m in res.metric_names}
     rows = ["fig4.policy,users," + ",".join(METRICS)]
     for i, pol in enumerate(POLICIES):
         for j, u in enumerate(USERS):
-            vals = ",".join(f"{res[m][i, j]:.3f}" for m in METRICS)
+            vals = ",".join(f"{mean[m][i, j]:.3f}" for m in METRICS)
             rows.append(f"fig4.{pol},{u},{vals}")
     # headline ratios at 15 users (paper §IV-C)
     j15 = USERS.index(15)
     mo, ha, lt = (POLICIES.index(p) for p in ("MO", "HA", "LT"))
-    lat, en, mp = res["latency_ms"], res["energy_mwh"], res["map"]
+    lat, en, mp = mean["latency_ms"], mean["energy_mwh"], mean["map"]
     rows.append(f"fig4.headline_mo_vs_ha_latency,15,"
                 f"{lat[mo, j15] / lat[ha, j15]:.3f},,,,")
     rows.append(f"fig4.headline_mo_vs_ha_energy,15,"

@@ -1,11 +1,11 @@
 """Fig. 5: the gamma sweep (MO_gamma_{0,25,50,75,1}). All gammas × user
-levels × seeds run as ONE batched device program via ``sweep_grid``
-(previously one ``sweep`` per gamma, each a Python loop of jits)."""
+levels × seeds run as ONE batched device program — ``gamma`` is just
+another named sweep axis on the scenario engine."""
 
-import numpy as np
+from dataclasses import replace
 
-from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep_grid
+from repro.core import scenario as SC
+from repro.core.scenario import Scenario, Sweep
 
 GAMMAS = [0.0, 0.25, 0.5, 0.75, 1.0]
 USERS = [1, 5, 10, 15]
@@ -13,18 +13,15 @@ METRICS = ["latency_ms", "latency_p90_ms", "throughput_rps", "energy_mwh",
            "map"]
 
 
-def run(n_requests: int = 1500, seeds=(0, 1), mesh=None,
-        workload=None, dispatch=None) -> list[str]:
-    prof = paper_fleet()
-    grid = sweep_grid(prof, policies=("MO",), user_levels=USERS,
-                      gammas=GAMMAS, seeds=seeds, n_requests=n_requests,
-                      mesh=mesh, workload=workload, dispatch=dispatch)
-    # (policy, users, gamma, delta, oracle, seed) -> mean over seeds
-    res = {k: np.mean(v[0, :, :, 0, 0, :], axis=-1)
-           for k, v in grid.items()}
+def run(scenario: Scenario | None = None, n_requests: int = 1500,
+        seeds=(0, 1)) -> list[str]:
+    scenario = scenario if scenario is not None else Scenario()
+    res = SC.run(replace(scenario, policy="MO", n_requests=n_requests),
+                 Sweep(n_users=USERS, gamma=GAMMAS, seed=seeds))
+    mean = {m: res.mean(m, over="seed") for m in res.metric_names}
     rows = ["fig5.gamma,users," + ",".join(METRICS)]
     for gi, g in enumerate(GAMMAS):
         for ui, u in enumerate(USERS):
-            vals = ",".join(f"{res[m][ui, gi]:.3f}" for m in METRICS)
+            vals = ",".join(f"{mean[m][ui, gi]:.3f}" for m in METRICS)
             rows.append(f"fig5.MO_gamma_{int(g * 100)},{u},{vals}")
     return rows

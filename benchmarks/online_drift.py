@@ -10,34 +10,39 @@ suite reports mean latency / energy for {static, online} x {no drift,
 drift}: under drift online should win BOTH metrics (the acceptance
 criterion ``tests/test_dispatch.py`` asserts); with no drift the two
 match (with an oracle estimator every observation equals the prior, so
-the belief tables never move). All four cells run as fused ``sweep_grid``
-programs — an online, drifted grid batches/shards exactly like a static
-one."""
+the belief tables never move). The whole 2 × 2 × seeds cube is ONE
+scenario sweep — ``dispatch`` and ``drift`` are named axes like any
+other (``Sweep(dispatch=..., drift=..., seed=...)``), each cell a fused
+device program."""
 
-import numpy as np
+from dataclasses import replace
 
+from repro.core import scenario as SC
 from repro.core.dispatch import DriftSchedule, OnlineDispatch
-from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep_grid
+from repro.core.scenario import Scenario, Sweep
 
 DRIFT_PAIR = 4          # n5 orin/ssd_v1 — the fleet's energy favourite
 T_MULT, E_MULT = 3.0, 8.0
 
 
-def run(n_requests: int = 2000, seeds=(0, 1)) -> list[str]:
-    prof = paper_fleet()
+def run(scenario: Scenario | None = None, n_requests: int = 2000,
+        seeds=(0, 1)) -> list[str]:
+    scenario = scenario if scenario is not None else Scenario()
+    prof = scenario.resolve_profile()
     drift = DriftSchedule.throttle(prof, DRIFT_PAIR,
                                    at_step=n_requests // 5,
                                    t_mult=T_MULT, e_mult=E_MULT)
-    kw = dict(policies=("MO",), user_levels=(10,), seeds=tuple(seeds),
-              n_requests=n_requests, oracle=(True,))
+    base = replace(scenario, policy="MO", n_users=10,
+                   n_requests=n_requests, oracle_estimator=True,
+                   workload=None, dispatch=None, drift=None)
+    res = SC.run(base, Sweep(dispatch=(None, OnlineDispatch()),
+                             drift=(None, drift), seed=tuple(seeds)))
     cells = {}
     for dname, disp in (("static", None), ("online", OnlineDispatch())):
         for sname, sched in (("nodrift", None), ("drift", drift)):
-            m = sweep_grid(prof, dispatch=disp, drift=sched, **kw)
             cells[dname, sname] = {
-                k: float(np.mean(v[0, 0, 0, 0, 0, :]))
-                for k, v in m.items()}
+                m: float(res.sel(m, dispatch=disp, drift=sched).mean())
+                for m in res.metric_names}
 
     rows = ["online_drift.cell,latency_ms,energy_mwh,map"]
     for (dname, sname), c in cells.items():

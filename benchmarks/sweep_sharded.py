@@ -1,19 +1,21 @@
 """Sharded-sweep throughput: the headline configs/sec of the batched
-engine, single-device vs sharded across the local mesh
-(``sweep_grid(..., mesh=...)``), plus the memoized/vectorised
-``make_grid`` build rate. On a 1-device host both paths still run — the
-sharded row then measures the ``shard_map`` overhead itself, which is what
-the CI regression gate watches; on a real mesh the sharded row scales with
-the device count (the grid is embarrassingly parallel)."""
+engine, single-device vs sharded across the local mesh (the scenario's
+``mesh="local"`` spec), plus the memoized/vectorised grid-build rate. On
+a 1-device host both paths still run — the sharded row then measures the
+``shard_map`` overhead itself, which is what the CI regression gate
+watches; on a real mesh the sharded row scales with the device count
+(the grid is embarrassingly parallel)."""
 
 import time
 
 import jax
 
+from repro.core import scenario as SC
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import (SimConfig, grid_cache_clear, make_grid,
-                                  sweep_grid)
-from repro.launch.mesh import make_sweep_mesh
+from repro.core.scenario import Scenario, Sweep
+# the grid-build benchmark times the engine internal directly (the
+# public path is Scenario/Sweep; _make_grid is the engine layer underneath)
+from repro.core.simulator import SimConfig, _make_grid, grid_cache_clear
 
 POLICIES = ("MO", "RR", "RND", "LC", "LE", "LT", "HA")
 
@@ -27,34 +29,33 @@ def _configs_per_sec(fn, n_configs: int) -> tuple[float, float]:
 
 
 def run(n_requests: int = 400) -> list[str]:
-    prof = paper_fleet()
-    kw = dict(policies=POLICIES, user_levels=(5, 10, 15), seeds=(0, 1, 2),
-              n_requests=n_requests)
+    sc = Scenario(n_requests=n_requests)
+    sw = Sweep(policy=POLICIES, n_users=(5, 10, 15), seed=(0, 1, 2))
     n_cfg = len(POLICIES) * 3 * 3
     rows = ["sweep_sharded.path,devices,configs,warm_s,configs_per_sec"]
 
-    t, cps = _configs_per_sec(lambda: sweep_grid(prof, **kw), n_cfg)
+    t, cps = _configs_per_sec(lambda: SC.run(sc, sw), n_cfg)
     rows.append(f"sweep_sharded.single,1,{n_cfg},{t:.3f},{cps:.1f}")
 
-    mesh = make_sweep_mesh()
+    sharded = Scenario(n_requests=n_requests, mesh="local")
     n_dev = len(jax.devices())
-    t, cps = _configs_per_sec(lambda: sweep_grid(prof, mesh=mesh, **kw),
-                              n_cfg)
+    t, cps = _configs_per_sec(lambda: SC.run(sharded, sw), n_cfg)
     rows.append(f"sweep_sharded.sharded,{n_dev},{n_cfg},{t:.3f},{cps:.1f}")
 
     # grid-build rate: 10^4 configs sharing 9 distinct initial draws
     # (3 user levels x 3 seeds; gamma is not part of the draw key);
     # cold = miss-and-batch-draw, warm = pure cache hits
+    prof = paper_fleet()
     cfgs = [SimConfig(n_users=u, n_requests=n_requests, policy="MO",
                       gamma=g / 60.0, seed=s)
             for u in (5, 10, 15) for s in (0, 1, 2) for g in range(60)]
     cfgs = cfgs * 19                       # 10_260 configs, 9 distinct draws
     grid_cache_clear()
     t0 = time.perf_counter()
-    make_grid(prof, cfgs)
+    _make_grid(prof, cfgs)
     t_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    make_grid(prof, cfgs)
+    _make_grid(prof, cfgs)
     t_warm = time.perf_counter() - t0
     rows.append(f"sweep_sharded.grid_build_cold,1,{len(cfgs)},{t_cold:.3f},"
                 f"{len(cfgs) / t_cold:.0f}")

@@ -6,7 +6,8 @@ program; the trace path swaps the in-scan Markov categorical draw for a
 gather from the device-resident trace (``repro.data.traces
 .TraceWorkload``), so the warm configs/sec ratio is the engine-level
 price of real-data workloads (expected ~parity — a gather is cheaper
-than a categorical). Also reports the bundled trace's shape and
+than a categorical). The two runs differ ONLY in the scenario's
+``workload`` field. Also reports the bundled trace's shape and
 busy-crossing statistics, and the trace grid-build rate (phase-offset
 draws instead of stationary-distribution draws).
 """
@@ -15,8 +16,10 @@ import time
 
 import numpy as np
 
+from repro.core import scenario as SC
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import SimConfig, make_grid, sweep_grid
+from repro.core.scenario import Scenario, Sweep
+from repro.core.simulator import SimConfig, _make_grid
 from repro.data.traces import bundled_trace
 
 POLICIES = ("MO", "RR", "LC", "LT", "HA")
@@ -30,7 +33,6 @@ def _warm_seconds(fn) -> float:
 
 
 def run(n_requests: int = 400) -> list[str]:
-    prof = paper_fleet()
     tw = bundled_trace()
     c = np.asarray(tw.counts)
     rows = ["workload_trace.metric,value,extra"]
@@ -38,11 +40,12 @@ def run(n_requests: int = 400) -> list[str]:
     rows.append(f"workload_trace.trace_busy_frac,"
                 f"{float((c >= 3).mean()):.3f},")
 
-    kw = dict(policies=POLICIES, user_levels=(5, 10, 15), seeds=(0, 1, 2),
-              n_requests=n_requests)
+    sw = Sweep(policy=POLICIES, n_users=(5, 10, 15), seed=(0, 1, 2))
     n_cfg = len(POLICIES) * 3 * 3
-    t_markov = _warm_seconds(lambda: sweep_grid(prof, **kw))
-    t_trace = _warm_seconds(lambda: sweep_grid(prof, workload=tw, **kw))
+    t_markov = _warm_seconds(
+        lambda: SC.run(Scenario(n_requests=n_requests), sw))
+    t_trace = _warm_seconds(
+        lambda: SC.run(Scenario(n_requests=n_requests, workload=tw), sw))
     rows.append(f"workload_trace.markov_warm_s,{t_markov:.3f},"
                 f"{n_cfg / t_markov:.1f}")
     rows.append(f"workload_trace.trace_warm_s,{t_trace:.3f},"
@@ -50,10 +53,11 @@ def run(n_requests: int = 400) -> list[str]:
     rows.append(f"workload_trace.trace_vs_markov,"
                 f"{t_trace / t_markov:.2f},")
 
+    prof = paper_fleet()
     cfgs = [SimConfig(n_users=u, n_requests=n_requests, policy="MO", seed=s)
             for u in (5, 10, 15) for s in range(32)]
     t0 = time.perf_counter()
-    make_grid(prof, cfgs, workload=tw)
+    _make_grid(prof, cfgs, workload=tw)
     dt = time.perf_counter() - t0
     rows.append(f"workload_trace.grid_build_s,{dt:.3f},"
                 f"{len(cfgs) / dt:.0f}")

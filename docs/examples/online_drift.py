@@ -1,8 +1,7 @@
 """Dispatch engines: online adaptation vs a mid-run profile drift."""
-from repro.core.dispatch import (DriftSchedule, OnlineDispatch,
-                                 StaticDispatch)
+from repro.core.dispatch import DriftSchedule, OnlineDispatch
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep_grid
+from repro.core.scenario import Scenario, Sweep, run
 
 prof = paper_fleet()
 
@@ -12,21 +11,33 @@ prof = paper_fleet()
 drift = DriftSchedule.throttle(prof, pair=4, at_step=400,
                                t_mult=3.0, e_mult=8.0)
 
-# 2. The same grid under static tables vs the online-EWMA engine. Both
-#    are one fused device program; dispatch= composes with mesh= sharding,
-#    workload= sources and stacked fleets unchanged.
-kw = dict(policies=("MO",), user_levels=(10,), seeds=(0,),
-          n_requests=2000, oracle=(True,))
-static = sweep_grid(prof, drift=drift, **kw)
-online = sweep_grid(prof, drift=drift, dispatch=OnlineDispatch(), **kw)
-for name, m in (("static", static), ("online", online)):
-    print(f"{name}: latency {m['latency_ms'].mean():.0f} ms, "
-          f"energy {m['energy_mwh'].mean():.4f} mWh")
+# 2. dispatch and drift are named sweep axes like any other: the whole
+#    {static, online} x {no drift, drift} cube is one declarative sweep.
+sc = Scenario(policy="MO", n_users=10, n_requests=2000,
+              oracle_estimator=True)
+res = run(sc, Sweep(dispatch=(None, OnlineDispatch()),
+                    drift=(None, drift)))
+for name, disp in (("static", None), ("online", OnlineDispatch())):
+    lat = float(res.sel("latency_ms", dispatch=disp, drift=drift))
+    en = float(res.sel("energy_mwh", dispatch=disp, drift=drift))
+    print(f"{name}: latency {lat:.0f} ms, energy {en:.4f} mWh")
 # online-MO re-converges and wins BOTH metrics; with no drift the two
-# sweeps are identical (observations equal the prior).
+# are identical (observations equal the prior).
 
-# 3. StaticDispatch is the default and bit-identical to passing nothing.
-a = sweep_grid(prof, **kw)
-b = sweep_grid(prof, dispatch=StaticDispatch(), **kw)
-assert all((a[k] == b[k]).all() for k in a)
-print("static default OK:", a["latency_ms"].round(1).ravel())
+# 3. OnlineDispatch(window=W) swaps the annealed EWMA for a sliding
+#    window over the last W observations per cell: stale evidence is
+#    discarded outright, so beliefs are fully post-drift within W
+#    observations of a cell — faster re-convergence after large drifts.
+win = run(Scenario(policy="MO", n_users=10, n_requests=2000,
+                   oracle_estimator=True, drift=drift,
+                   dispatch=OnlineDispatch(window=16)))
+print("windowed online latency:", round(win.scalar("latency_ms")))
+
+# 4. A drift axis over same-shape schedules fuses into ONE device
+#    program (an extra vmapped batch axis): sweep the throttle severity.
+drifts = tuple(DriftSchedule.throttle(prof, pair=4, at_step=400,
+                                      t_mult=tm, e_mult=8.0)
+               for tm in (1.5, 3.0, 6.0))
+sev = run(sc, Sweep(drift=drifts, seed=(0, 1)))
+print("latency vs throttle severity:",
+      sev.mean("latency_ms", over="seed").round(0))

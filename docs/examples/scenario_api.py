@@ -1,0 +1,34 @@
+"""The Scenario API: one spec object through sim, serving and benchmarks."""
+from repro.core.scenario import Scenario, Sweep, run
+from repro.serving.gateway import Gateway
+
+# 1. A Scenario bundles everything one configuration needs — fleet
+#    profile, workload, dispatch engine, drift, mesh spec, and the
+#    per-config knobs. Defaults reproduce the paper's testbed.
+sc = Scenario(policy="MO", n_users=15, n_requests=300)
+
+# 2. Sweep ANY field by name — not just the six axes the legacy tuple
+#    hardcoded. Config-leaf axes fuse into ONE batched device program.
+res = run(sc, Sweep(policy=("MO", "LT", "HA"), n_users=(5, 15),
+                    seed=(0, 1)))
+print("axes:", res.axes)                       # ('policy', 'n_users', 'seed')
+print("MO @15 users:",
+      res.sel("latency_ms", policy="MO", n_users=15).mean().round(1))
+print("per-policy latency:", res.mean("latency_ms", over="seed").round(1))
+
+# 3. stickiness was never sweepable before — now it's an axis like any
+#    other, still one fused program (it is a traced grid leaf).
+st = run(sc, Sweep(stickiness=(0.5, 0.85, 0.99)))
+print("stickiness axis:", st["latency_ms"].round(1))
+
+# 4. Scenarios serialize: to_json/from_json round-trip exactly, and the
+#    hash fingerprints the spec (benchmark artifacts embed it, so the CI
+#    gate refuses to compare different scenarios).
+spec = sc.to_json()
+assert Scenario.from_json(spec) == sc
+print("scenario hash:", sc.hash)
+
+# 5. Serving shares the SAME object: a Gateway built from the scenario
+#    routes with its policy, gamma, delta and dispatch engine.
+gw = Gateway(sc)
+print("gateway policy:", gw.policy, "- one spec, sim AND serving")

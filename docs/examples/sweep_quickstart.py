@@ -1,28 +1,29 @@
 """Sweep-engine quickstart: a Fig. 4-style grid, three ways."""
 import jax
 
-from repro.core.profiles import paper_fleet, stack_profiles, synthetic_fleet
-from repro.core.simulator import grid_cache_info, sweep_grid
-from repro.launch.mesh import make_sweep_mesh
+from repro.core.profiles import stack_profiles, synthetic_fleet
+from repro.core.scenario import Scenario, Sweep, run
+from repro.core.simulator import grid_cache_info
 
-prof = paper_fleet()
-
-# 1. A policy x users x seed grid as ONE device program. Axis order of
-#    every returned metric: (policy, users, gamma, delta, oracle, seed).
-m = sweep_grid(prof, policies=("MO", "LT", "HA"), user_levels=(5, 15),
-               seeds=(0, 1), n_requests=300)
-print("latency grid shape:", m["latency_ms"].shape)      # (3, 2, 1, 1, 1, 2)
-print("MO @15users latency:", m["latency_ms"][0, 1, 0, 0, 0, :].mean())
+# 1. A policy x users x seed grid as ONE device program. Results carry
+#    named axes in declaration order — no positional index bookkeeping.
+sw = Sweep(policy=("MO", "LT", "HA"), n_users=(5, 15), seed=(0, 1))
+m = run(Scenario(n_requests=300), sw)
+print("latency grid shape:", m["latency_ms"].shape)      # (3, 2, 2)
+print("MO @15users latency:",
+      m.sel("latency_ms", policy="MO", n_users=15).mean())
 print("draw cache:", grid_cache_info())                  # 4 distinct draws
 
-# 2. Same grid, sharded across every local device — bit-identical results.
-sharded = sweep_grid(prof, policies=("MO", "LT", "HA"), user_levels=(5, 15),
-                     seeds=(0, 1), n_requests=300, mesh=make_sweep_mesh())
+# 2. Same grid, sharded across every local device — the mesh is part of
+#    the scenario spec, and results are bit-identical.
+sharded = run(Scenario(n_requests=300, mesh="local"), sw)
 assert (sharded["latency_ms"] == m["latency_ms"]).all()
 
-# 3. A fleet ensemble: 3 synthetic fleets fused into the same program.
+# 3. A fleet ensemble: 3 synthetic fleets fused into the same program
+#    (a stacked profile adds a leading named "fleet" axis).
 ens = stack_profiles([synthetic_fleet(jax.random.PRNGKey(i), n_pairs=5)
                       for i in range(3)])
-e = sweep_grid(ens, policies=("MO",), user_levels=(10,), seeds=(0,),
-               n_requests=300)
-print("ensemble latency per fleet:", e["latency_ms"][:, 0, 0, 0, 0, 0, 0])
+e = run(Scenario(profile=ens, n_requests=300),
+        Sweep(policy=("MO",), n_users=(10,)))
+print("ensemble axes:", e.axes)                # ('fleet', 'policy', 'n_users')
+print("ensemble latency per fleet:", e["latency_ms"][:, 0, 0])

@@ -1,33 +1,32 @@
 """Workload sources: trace-driven scene complexity through the engine."""
 import numpy as np
 
-from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep_grid
+from repro.core.scenario import Scenario, Sweep, run
 from repro.data.traces import TraceWorkload, bundled_trace, synthetic_trace
-
-prof = paper_fleet()
 
 # 1. The bundled recorded trace: 8 streams x 512 frames of object counts.
 trace = bundled_trace()
 print("trace:", trace)                       # streams, frames, name
 
 # 2. The same grid as the quickstart, driven by the trace instead of the
-#    Markov chain — one fused device program either way, and workload=
-#    composes with mesh= sharding and stacked fleets unchanged.
-t = sweep_grid(prof, policies=("MO", "LT", "HA"), user_levels=(5, 15),
-               seeds=(0, 1), n_requests=300, workload=trace)
-m = sweep_grid(prof, policies=("MO", "LT", "HA"), user_levels=(5, 15),
-               seeds=(0, 1), n_requests=300)          # Markov default
-print("trace latency grid shape:", t["latency_ms"].shape)  # (3, 2, 1, 1, 1, 2)
+#    Markov chain — the workload is a Scenario field (and a sweepable
+#    axis), one fused device program per source either way.
+sw = Sweep(policy=("MO", "LT", "HA"), n_users=(5, 15), seed=(0, 1))
+t = run(Scenario(workload=trace, n_requests=300), sw)
+m = run(Scenario(n_requests=300), sw)        # Markov default
+print("trace latency grid shape:", t["latency_ms"].shape)   # (3, 2, 2)
 print("MO @15users, trace vs markov latency:",
-      t["latency_ms"][0, 1, 0, 0, 0, :].mean().round(1),
-      m["latency_ms"][0, 1, 0, 0, 0, :].mean().round(1))
+      t.sel("latency_ms", policy="MO", n_users=15).mean().round(1),
+      m.sel("latency_ms", policy="MO", n_users=15).mean().round(1))
 
 # 3. Bring your own data: any (S, T) int array of per-frame object counts
 #    (or a seeded synthetic one with busy-crossing statistics for CI).
+#    A workload axis compares sources side by side — one fused program
+#    per source, one named axis in the results.
 mine = TraceWorkload(np.tile([0, 1, 2, 4, 6, 3], (2, 10)), name="mine")
 ci = synthetic_trace(seed=7, n_streams=4, n_steps=128)
+r = run(Scenario(policy="MO", n_users=5, n_requests=200),
+        Sweep(workload=(mine, ci)))
 for tw in (mine, ci):
-    r = sweep_grid(prof, policies=("MO",), user_levels=(5,), seeds=(0,),
-                   n_requests=200, workload=tw)
-    print(tw.name, "mean latency:", r["latency_ms"].mean().round(1))
+    print(tw.name, "mean latency:",
+          round(float(r.sel("latency_ms", workload=tw)), 1))

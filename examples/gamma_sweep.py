@@ -3,15 +3,18 @@
   PYTHONPATH=src python examples/gamma_sweep.py
 """
 
-from repro.core.profiles import paper_fleet
-from repro.core.simulator import run_policy
+from repro.core.scenario import Scenario, Sweep, run
 
-prof = paper_fleet()
+GAMMAS = (0.0, 0.25, 0.5, 0.75, 1.0)
+res = run(Scenario(policy="MO", n_users=15, n_requests=2000),
+          Sweep(gamma=GAMMAS))
+
 print(f"{'gamma':>6} {'lat_ms':>8} {'p90_ms':>8} {'thr_rps':>8} "
       f"{'mWh/req':>8} {'mAP':>6}")
-for gamma in (0.0, 0.25, 0.5, 0.75, 1.0):
-    r = run_policy(prof, "MO", n_users=15, n_requests=2000, gamma=gamma)
-    print(f"{gamma:6.2f} {r['latency_ms']:8.0f} {r['latency_p90_ms']:8.0f} "
-          f"{r['throughput_rps']:8.1f} {r['energy_mwh']:8.3f} {r['map']:6.1f}")
+for gamma in GAMMAS:
+    at = lambda m: float(res.sel(m, gamma=gamma))  # noqa: E731
+    print(f"{gamma:6.2f} {at('latency_ms'):8.0f} "
+          f"{at('latency_p90_ms'):8.0f} {at('throughput_rps'):8.1f} "
+          f"{at('energy_mwh'):8.3f} {at('map'):6.1f}")
 print("\nsmaller gamma -> energy priority; larger -> latency priority; "
       "accuracy is protected by the hard mAP tolerance either way.")

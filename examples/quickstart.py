@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.core.policies import mo_select, mo_select_batch
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import run_policy
+from repro.core.scenario import Scenario, Sweep, run
 
 prof = paper_fleet()
 
@@ -25,7 +25,10 @@ print("window assignment:", [prof.names[int(p)] for p in pairs])
 print("queues after:", q_after)
 
 # --- full closed-loop simulation vs the accuracy-centric baseline ----------
+# One Scenario, swept over the policy axis — a single fused device program.
+res = run(Scenario(n_users=15, n_requests=1500),
+          Sweep(policy=("MO", "HA", "LT")))
 for pol in ("MO", "HA", "LT"):
-    r = run_policy(prof, pol, n_users=15, n_requests=1500)
-    print(f"{pol:3s}: latency={r['latency_ms']:7.0f} ms  "
-          f"energy={r['energy_mwh']:.3f} mWh  mAP={r['map']:.1f}")
+    print(f"{pol:3s}: latency={res.sel('latency_ms', policy=pol):7.0f} ms  "
+          f"energy={res.sel('energy_mwh', policy=pol):.3f} mWh  "
+          f"mAP={res.sel('map', policy=pol):.1f}")

@@ -2,14 +2,24 @@
 """Validate a benchmark JSON artifact and gate on wall-clock regressions.
 
   python scripts/check_bench.py NEW.json [BASELINE.json]
-         [--threshold 0.20] [--min-abs 0.5] [--strict]
+         [--threshold 0.20] [--threshold sweep_sharded=0.35]
+         [--min-abs 0.5] [--strict]
 
 Always validates NEW.json against the ``repro-bench/v1`` schema emitted by
 ``benchmarks/run.py --json`` (suites present, no suite errors, numeric
 ``seconds``). With a baseline, additionally fails when any suite's
 ``bench.<name>.seconds`` regressed by more than ``--threshold`` (relative,
 default 20%) AND more than ``--min-abs`` seconds (absolute floor so
-sub-second suites don't flap on scheduler noise).
+sub-second suites don't flap on scheduler noise). ``--threshold`` repeats:
+a bare float sets the global budget, ``SUITE=FLOAT`` overrides one suite
+(e.g. ``--threshold sweep_sharded=0.35`` loosens only the timing-sensitive
+sharded suite, so runner variance on it can't flap the blocking gate).
+
+Like-for-like: artifacts record the base :class:`repro.core.scenario
+.Scenario` they ran under (``scenario`` spec + ``scenario_hash``). When
+both artifacts carry a hash, a mismatch fails the comparison outright —
+different scenarios are different benchmarks; legacy artifacts without a
+hash fall back to the old ``workload``/``dispatch`` mode-string check.
 
 A suite present in the new run but absent from the baseline is *stale
 baseline*: the comparison silently skips it, so the suite goes
@@ -56,10 +66,42 @@ def validate(art: dict, label: str) -> list[str]:
     return errs
 
 
-def compare(new: dict, base: dict, threshold: float,
+def parse_thresholds(specs, default: float = 0.20) -> dict:
+    """``--threshold`` values -> ``{"*": global, suite: override, ...}``.
+    Each spec is either a bare float (sets the global budget) or
+    ``SUITE=FLOAT`` (overrides one suite)."""
+    out = {"*": default}
+    for spec in specs or ():
+        name, sep, val = str(spec).partition("=")
+        try:
+            if sep:
+                if not name:
+                    raise ValueError
+                out[name] = float(val)
+            else:
+                out["*"] = float(name)
+        except ValueError:
+            raise SystemExit(f"check_bench: bad --threshold {spec!r} "
+                             "(want FLOAT or SUITE=FLOAT)")
+    return out
+
+
+def compare(new: dict, base: dict, threshold,
             min_abs: float) -> list[str]:
+    thresholds = threshold if isinstance(threshold, dict) \
+        else {"*": threshold}
     errs = []
-    for key in ("fast", "backend", "workload", "dispatch"):
+    if new.get("scenario_hash") and base.get("scenario_hash"):
+        if new["scenario_hash"] != base["scenario_hash"]:
+            errs.append(
+                f"artifacts not comparable: scenario_hash is "
+                f"{new['scenario_hash']} (new) vs "
+                f"{base['scenario_hash']} (baseline) — different "
+                f"scenarios are different benchmarks")
+        mode_keys = ("fast", "backend")     # hash covers the scenario
+    else:
+        mode_keys = ("fast", "backend", "workload", "dispatch")
+    for key in mode_keys:
         if key in new and key in base and new[key] != base[key]:
             errs.append(f"artifacts not comparable: {key} is "
                         f"{new[key]!r} (new) vs {base[key]!r} (baseline)")
@@ -71,12 +113,13 @@ def compare(new: dict, base: dict, threshold: float,
             errs.append(f"suite {name} present in baseline but missing "
                         f"from new run")
             continue
+        th = thresholds.get(name, thresholds["*"])
         t_new, t_base = n["seconds"], b["seconds"]
-        if t_new > t_base * (1 + threshold) and t_new - t_base > min_abs:
+        if t_new > t_base * (1 + th) and t_new - t_base > min_abs:
             errs.append(f"bench.{name}.seconds regressed: "
                         f"{t_base:.2f}s -> {t_new:.2f}s "
                         f"(+{100 * (t_new / max(t_base, 1e-9) - 1):.0f}%, "
-                        f"threshold {100 * threshold:.0f}%)")
+                        f"threshold {100 * th:.0f}%)")
     return errs
 
 
@@ -93,8 +136,11 @@ def main(argv=None) -> int:
     ap.add_argument("new", help="fresh artifact from benchmarks.run --json")
     ap.add_argument("baseline", nargs="?", default=None,
                     help="committed baseline to diff against")
-    ap.add_argument("--threshold", type=float, default=0.20,
-                    help="max relative slowdown per suite (default 0.20)")
+    ap.add_argument("--threshold", action="append", default=None,
+                    metavar="FLOAT | SUITE=FLOAT",
+                    help="max relative slowdown (default 0.20); repeat "
+                         "with SUITE=FLOAT for per-suite overrides, e.g. "
+                         "--threshold sweep_sharded=0.35")
     ap.add_argument("--min-abs", type=float, default=0.5,
                     help="ignore regressions smaller than this many "
                          "seconds (default 0.5)")
@@ -118,10 +164,18 @@ def main(argv=None) -> int:
             return 1
         errs += validate(base, "baseline")
         if not errs:
-            errs += compare(new, base, args.threshold, args.min_abs)
+            thresholds = parse_thresholds(args.threshold)
+            errs += compare(new, base, thresholds, args.min_abs)
             warns = [f"suite {s} has no baseline entry — unmonitored; "
                      f"regenerate {args.baseline}"
                      for s in stale_suites(new, base)]
+            # a typoed per-suite override would silently fall back to
+            # the global budget — surface it like a stale suite
+            warns += [f"--threshold override for unknown suite {s!r} "
+                      f"is inoperative (suites: "
+                      f"{', '.join(sorted(new['suites']))})"
+                      for s in sorted(thresholds)
+                      if s != "*" and s not in new["suites"]]
             if args.strict:
                 errs += warns
                 warns = []

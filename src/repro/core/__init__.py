@@ -10,12 +10,17 @@ from repro.core.policies import (POLICY_CODES, mo_select, mo_select_batch,
                                  policy_scores, select_pair)
 from repro.core.profiles import (ProfileTable, paper_fleet, stack_profiles,
                                  synthetic_fleet)
+from repro.core.scenario import (LegacyAPIWarning, Results, Scenario,
+                                 Sweep, records, register_profile)
+from repro.core.scenario import run as run_scenario
 from repro.core.simulator import (ConfigGrid, SimConfig, grid_cache_clear,
                                   grid_cache_info, make_grid, run_policy,
                                   simulate, simulate_batch, summarize,
                                   summarize_batch, sweep, sweep_grid)
 
 __all__ = [
+    "Scenario", "Sweep", "Results", "run_scenario", "records",
+    "register_profile", "LegacyAPIWarning",
     "ProfileTable", "paper_fleet", "stack_profiles", "synthetic_fleet",
     "POLICY_CODES", "mo_select", "mo_select_batch", "policy_scores",
     "select_pair", "group_of_count", "noisy_detected_count",

@@ -154,35 +154,58 @@ class OnlineDispatch(DispatchEngine):
     cells trust the offline prior, hot cells converge to observations
     (step size ramps from ~0 to ``alpha`` over ``prior_weight``
     pseudo-counts). mAP stays offline-profiled — accuracy is not
-    observable online without labels."""
+    observable online without labels.
+
+    With ``window=W`` the estimator switches from the annealed EWMA to a
+    sliding-window mean over the last W observations per cell
+    (``repro.core.online.observe_windowed`` / ``window_tables``): stale
+    evidence is *discarded* rather than annealed away, so after a large
+    drift the belief is fully post-drift within W observations — the
+    forgetting variant the annealed engine lacks (``alpha`` is unused in
+    this mode). Both modes are scan-safe and vmap/shard/fleet-stack
+    unchanged."""
 
     alpha: float = 0.1
     prior_weight: float = 10.0
+    window: int | None = None
 
     def tree_flatten(self):
-        return (), (self.alpha, self.prior_weight)
+        return (), (self.alpha, self.prior_weight, self.window)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         return cls(*aux)
 
     def init(self, prof):
-        state = ONL.init_state(prof)
+        state = ONL.init_state(prof) if self.window is None \
+            else ONL.init_window_state(prof, self.window)
         state["rr"] = jnp.zeros((), i32)
         return state
 
     def tables(self, state, prof):
-        return ONL.as_profile(state, prof)
+        if self.window is None:
+            return ONL.as_profile(state, prof)
+        return ONL.window_tables(state, prof, window=self.window,
+                                 prior_weight=self.prior_weight)
 
     def observe(self, state, p, g, obs_t_ms, obs_e_mwh=None):
-        return ONL.observe(state, p, g, obs_t_ms, obs_e_mwh,
-                           alpha=self.alpha, prior_weight=self.prior_weight)
+        if self.window is None:
+            return ONL.observe(state, p, g, obs_t_ms, obs_e_mwh,
+                               alpha=self.alpha,
+                               prior_weight=self.prior_weight)
+        return ONL.observe_windowed(state, p, g, obs_t_ms, obs_e_mwh,
+                                    window=self.window)
 
     def observe_window(self, state, pairs, groups, obs_t_ms,
                        obs_e_mwh=None):
-        return ONL.observe_window(state, pairs, groups, obs_t_ms,
-                                  obs_e_mwh, alpha=self.alpha,
-                                  prior_weight=self.prior_weight)
+        if self.window is None:
+            return ONL.observe_window(state, pairs, groups, obs_t_ms,
+                                      obs_e_mwh, alpha=self.alpha,
+                                      prior_weight=self.prior_weight)
+        # ring-buffer updates are order-dependent within a cell; the
+        # windowed mode folds the batch sequentially (correct, unfused)
+        return DispatchEngine.observe_window(self, state, pairs, groups,
+                                             obs_t_ms, obs_e_mwh)
 
 
 _DEFAULT_DISPATCH = StaticDispatch()

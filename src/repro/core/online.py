@@ -98,6 +98,82 @@ def observe_window(state, pairs, groups, obs_t_ms, obs_e_mwh=None,
     return out
 
 
+# ----------------------------------------------- sliding-window variant --
+#
+# The annealed EWMA above never discounts stale evidence: after a large
+# drift its belief closes the gap by only ``alpha`` per observation, no
+# matter how much pre-drift history a cell carries. The windowed estimator
+# keeps the last ``window`` observations per cell in a ring buffer and
+# scores against their mean (blended with the offline prior while the
+# prior's pseudo-count outweighs the evidence), so ``window`` observations
+# after a drift the belief is *fully* post-drift — the "sliding-window
+# EWMA" forgetting scheme of the ROADMAP's drift-detection item.
+# ``repro.core.dispatch.OnlineDispatch(window=...)`` selects it.
+
+
+def init_window_state(prof: ProfileTable, window: int):
+    """Ring-buffer state for the sliding-window estimator: per-cell sums
+    and ``(P, G, window)`` buffers for T and E, plus per-cell observation
+    counts (E has its own — energy is not always observed). Counts are
+    int32, not float32: a float32 counter saturates at 2^24 (c + 1 == c),
+    which would freeze the ring index of a long-lived serving gateway and
+    pin stale slots forever — the exact staleness this estimator exists
+    to discard."""
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    z = jnp.zeros_like(prof.T)
+    c = jnp.zeros(prof.T.shape, jnp.int32)
+    buf = jnp.zeros(prof.T.shape + (window,), f32)
+    return {"tsum": z, "esum": z, "tbuf": buf, "ebuf": buf,
+            "count": c, "ecount": c}
+
+
+def observe_windowed(state, p, g, obs_t_ms, obs_e_mwh=None, *,
+                     window: int):
+    """Fold one observation into the ring buffer: overwrite the cell's
+    oldest slot and maintain the running window sum (unconditionally —
+    unfilled slots hold zero, so the subtraction is a no-op while the
+    window fills). Traced; scan/vmap-safe like :func:`observe`."""
+    out = dict(state)
+    i = jnp.mod(state["count"][p, g], window)
+    out["tsum"] = state["tsum"].at[p, g].add(
+        obs_t_ms - state["tbuf"][p, g, i])
+    out["tbuf"] = state["tbuf"].at[p, g, i].set(obs_t_ms)
+    out["count"] = state["count"].at[p, g].add(1)
+    if obs_e_mwh is not None:
+        j = jnp.mod(state["ecount"][p, g], window)
+        out["esum"] = state["esum"].at[p, g].add(
+            obs_e_mwh - state["ebuf"][p, g, j])
+        out["ebuf"] = state["ebuf"].at[p, g, j].set(obs_e_mwh)
+        out["ecount"] = state["ecount"].at[p, g].add(1)
+    return out
+
+
+def window_tables(state, prof: ProfileTable, *, window: int,
+                  prior_weight: float = 10.0) -> ProfileTable:
+    """Belief tables from the ring buffers: each cell is the mean of its
+    last ``min(count, window)`` observations blended with the offline
+    prior at pseudo-count ``max(prior_weight - count, 0)`` — cold cells
+    trust the prior, and once a cell has seen ``prior_weight`` real
+    observations the prior has washed out entirely (unlike the annealed
+    EWMA, whose prior never fully leaves the estimate)."""
+
+    def blend(prior, s, c):
+        c = c.astype(f32)
+        n = jnp.minimum(c, float(window))
+        pw = jnp.maximum(prior_weight - c, 0.0)
+        # untouched cells return the prior BIT-exactly (the blend would
+        # round through (pw * prior) / pw); c > 0 implies n >= 1, so the
+        # division in the taken branch is always well-defined
+        return jnp.where(c > 0.0,
+                         (pw * prior + s) / jnp.maximum(pw + n, 1e-9),
+                         prior)
+
+    return ProfileTable(blend(prof.T, state["tsum"], state["count"]),
+                        blend(prof.E, state["esum"], state["ecount"]),
+                        prof.mAP, prof.names, prof.floor_mw)
+
+
 def as_profile(state, prof: ProfileTable) -> ProfileTable:
     """Materialise the adapted tables (mAP stays offline-profiled: accuracy
     cannot be observed online without labels)."""

@@ -3,6 +3,15 @@
 request in flight; the next request of a stream is issued when the previous
 response returns).
 
+NOTE — public API: scenarios are declared through ``repro.core.scenario``
+(``Scenario`` / ``Sweep`` / ``run`` / ``records``); the kwarg entry
+points here (``make_grid`` / ``simulate`` / ``simulate_batch`` /
+``sweep_grid`` / ``run_policy`` / ``sweep``) are deprecation-warned thin
+shims over that path, kept bit-identical to the pre-scenario engine
+(``tests/golden_static_pr3.json`` pins it). This module remains the
+*engine*: the traced core, the batched/sharded execution paths and the
+summarizers all live here and are driven by the scenario layer.
+
 Implemented as one ``lax.scan`` over dispatch events whose per-config
 parameters (policy code, γ, Δ, stickiness, RNG state) are *traced*
 arguments, so an entire Fig. 4-style grid — policy × concurrency × γ ×
@@ -74,7 +83,7 @@ Faithfulness notes:
 from __future__ import annotations
 
 import functools
-import itertools
+import warnings
 from dataclasses import dataclass, field
 from typing import NamedTuple
 
@@ -201,10 +210,34 @@ def _resolve_dispatch(dispatch, cfgs=()) -> DispatchEngine:
     return dispatch if dispatch is not None else default_dispatch()
 
 
+def _warn_legacy(name: str, alt: str) -> None:
+    """Issue the deprecation warning for a legacy kwarg entry point.
+    The category lives in repro.core.scenario (imported lazily — the
+    scenario module imports this one); ``stacklevel=3`` points the
+    warning at the shim's caller."""
+    from repro.core.scenario import LegacyAPIWarning
+    warnings.warn(
+        f"repro.core.simulator.{name} is deprecated: {alt} — see the "
+        "migration table in docs/sweep_engine.md",
+        LegacyAPIWarning, stacklevel=3)
+
+
 def make_grid(prof: ProfileTable, configs,
               n_users_max: int | None = None,
               workload: WorkloadSource | None = None,
               dispatch: DispatchEngine | None = None) -> ConfigGrid:
+    """Deprecated: declare the grid as a ``Scenario`` + ``Sweep`` and
+    call ``repro.core.scenario.run`` / ``records`` instead (the engine
+    builds the grid internally). Same contract as :func:`_make_grid`."""
+    _warn_legacy("make_grid", "use repro.core.scenario.run(Scenario, "
+                 "Sweep) — grids are built internally")
+    return _make_grid(prof, configs, n_users_max, workload, dispatch)
+
+
+def _make_grid(prof: ProfileTable, configs,
+               n_users_max: int | None = None,
+               workload: WorkloadSource | None = None,
+               dispatch: DispatchEngine | None = None) -> ConfigGrid:
     """Pack an iterable of :class:`SimConfig` into a padded
     :class:`ConfigGrid`.
 
@@ -480,6 +513,18 @@ def simulate(prof: ProfileTable, cfg: SimConfig,
              workload: WorkloadSource | None = None,
              dispatch: DispatchEngine | None = None,
              drift: DriftSchedule | None = None):
+    """Deprecated: use ``repro.core.scenario.records(Scenario(...))``
+    (one spec object instead of a config + three parallel kwargs). Same
+    contract as :func:`_simulate`."""
+    _warn_legacy("simulate",
+                 "use repro.core.scenario.records(Scenario(...))")
+    return _simulate(prof, cfg, workload, dispatch, drift)
+
+
+def _simulate(prof: ProfileTable, cfg: SimConfig,
+              workload: WorkloadSource | None = None,
+              dispatch: DispatchEngine | None = None,
+              drift: DriftSchedule | None = None):
     """Returns a dict of per-request record arrays (length n_requests).
     Single-fleet only — stacked tables go through :func:`simulate_batch` /
     :func:`sweep_grid`, which vmap the fleet axis. ``workload`` /
@@ -512,6 +557,19 @@ def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
                    workload: WorkloadSource | None = None,
                    dispatch: DispatchEngine | None = None,
                    drift: DriftSchedule | None = None):
+    """Deprecated: use ``repro.core.scenario.records(Scenario, Sweep)``
+    (named axes instead of a flat grid). Same contract as
+    :func:`_simulate_batch`."""
+    _warn_legacy("simulate_batch",
+                 "use repro.core.scenario.records(Scenario, Sweep)")
+    return _simulate_batch(prof, grid, n_requests, workload, dispatch,
+                           drift)
+
+
+def _simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
+                    workload: WorkloadSource | None = None,
+                    dispatch: DispatchEngine | None = None,
+                    drift: DriftSchedule | None = None):
     """Run every config in ``grid`` as ONE vmapped scan in ONE jit.
 
     Args:
@@ -610,16 +668,38 @@ def run_policy(prof: ProfileTable, policy: str, n_users: int,
                workload: WorkloadSource | None = None,
                dispatch: DispatchEngine | None = None,
                drift: DriftSchedule | None = None):
+    """Deprecated: use ``repro.core.scenario.run(Scenario(...))`` and
+    read ``Results.scalar(metric)``."""
+    _warn_legacy("run_policy",
+                 "use repro.core.scenario.run(Scenario(...))")
     cfg = SimConfig(n_users=n_users, n_requests=n_requests, policy=policy,
                     gamma=gamma, delta=delta, seed=seed,
                     stickiness=stickiness, workload=workload,
                     dispatch=dispatch)
-    recs = simulate(prof, cfg, drift=drift)
+    recs = _simulate(prof, cfg, drift=drift)
     out = summarize(recs, prof, cfg)
     return {k: float(v) for k, v in out.items()}
 
 
 SWEEP_AXES = ("policy", "users", "gamma", "delta", "oracle", "seed")
+
+
+def _sweep_grid_impl(prof, policies, user_levels, gammas, deltas, oracle,
+                     seeds, n_requests, stickiness, warmup_frac, mesh,
+                     workload, dispatch, drift):
+    """The legacy Cartesian sweep AS a Scenario + Sweep: the kwarg axes
+    map 1:1 onto Scenario fields (the SWEEP_AXES tuple is just the
+    declaration order), and the scenario engine runs the identical
+    config product through the identical fused program — bit-identical
+    to the pre-scenario engine (golden fixtures pin it)."""
+    from repro.core import scenario as SC
+    sc = SC.Scenario(profile=prof, n_requests=n_requests,
+                     stickiness=stickiness, warmup_frac=warmup_frac,
+                     workload=workload, dispatch=dispatch, drift=drift)
+    sw = SC.Sweep(policy=tuple(policies), n_users=tuple(user_levels),
+                  gamma=tuple(gammas), delta=tuple(deltas),
+                  oracle_estimator=tuple(oracle), seed=tuple(seeds))
+    return dict(SC.run(sc, sw, mesh=mesh).metrics)
 
 
 def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
@@ -630,6 +710,12 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
                dispatch: DispatchEngine | None = None,
                drift: DriftSchedule | None = None):
     """Cartesian-product sweep as a single fused device program.
+
+    Deprecated: this is now a thin shim over the Scenario path — use
+    ``repro.core.scenario.run(Scenario(...), Sweep(...))``, which sweeps
+    ANY Scenario field by name (not just these six axes) and returns
+    named-axis :class:`~repro.core.scenario.Results`. Results here stay
+    bit-identical to the pre-scenario engine.
 
     Args:
       prof: fleet profile; a stacked ``(F, P, G)`` ensemble sweeps every
@@ -666,39 +752,31 @@ def sweep_grid(prof: ProfileTable, policies=("MO",), user_levels=(15,),
       the trace is cached across calls with the same batch size, scan
       length, and mesh.
     """
-    workload = _resolve_workload(workload)
-    dispatch = _resolve_dispatch(dispatch)
-    combos = list(itertools.product(policies, user_levels, gammas, deltas,
-                                    oracle, seeds))
-    cfgs = [SimConfig(n_users=nu, n_requests=n_requests, policy=pol,
-                      gamma=ga, delta=de, stickiness=stickiness, seed=sd,
-                      warmup_frac=warmup_frac, oracle_estimator=orc)
-            for pol, nu, ga, de, orc, sd in combos]
-    grid = make_grid(prof, cfgs, workload=workload)
-    out = _sweep_summaries(prof, workload, dispatch, drift, grid,
-                           n_requests=n_requests,
-                           warmup=int(n_requests * warmup_frac), mesh=mesh)
-    shape = (len(policies), len(user_levels), len(gammas), len(deltas),
-             len(oracle), len(seeds))
-    if prof.is_stacked:
-        shape = (prof.n_fleets,) + shape
-    return {k: np.asarray(v, np.float64).reshape(shape)
-            for k, v in out.items()}
+    _warn_legacy("sweep_grid", "use repro.core.scenario.run(Scenario, "
+                 "Sweep) — any Scenario field is a sweep axis")
+    return _sweep_grid_impl(prof, policies, user_levels, gammas, deltas,
+                            oracle, seeds, n_requests, stickiness,
+                            warmup_frac, mesh, workload, dispatch, drift)
 
 
 def sweep(prof: ProfileTable, policies, user_levels, n_requests: int = 2000,
           gamma: float = 0.5, delta: float = 20.0, seeds=(0, 1, 2)):
     """Full Fig. 4-style sweep; returns {policy: {metric: [per-level mean]}}.
     Each configuration runs ``len(seeds)`` times (paper: 3 repetitions).
-    The entire policies × user_levels × seeds grid executes as one batched
-    device program (:func:`sweep_grid`). Single-fleet only — the per-policy
-    dict layout has no fleet axis; use :func:`sweep_grid` for ensembles."""
+
+    Deprecated: use ``repro.core.scenario.run(Scenario, Sweep(policy=...,
+    n_users=..., seed=...))`` and ``Results.mean(metric, over="seed")``.
+    Single-fleet only — the per-policy dict layout has no fleet axis."""
+    _warn_legacy("sweep", "use repro.core.scenario.run(Scenario, Sweep) "
+                 "and Results.mean(metric, over='seed')")
     if prof.is_stacked:
         raise ValueError("sweep() returns a per-policy dict with no fleet "
                          "axis; pass stacked ProfileTables to sweep_grid()")
-    m = sweep_grid(prof, policies=policies, user_levels=user_levels,
-                   gammas=(gamma,), deltas=(delta,), seeds=seeds,
-                   n_requests=n_requests)
+    m = _sweep_grid_impl(prof, policies=policies, user_levels=user_levels,
+                         gammas=(gamma,), deltas=(delta,), oracle=(False,),
+                         seeds=seeds, n_requests=n_requests,
+                         stickiness=0.85, warmup_frac=0.1, mesh=None,
+                         workload=None, dispatch=None, drift=None)
     out: dict[str, dict[str, list[float]]] = {}
     for i, pol in enumerate(policies):
         out[pol] = {k: [float(np.mean(v[i, j, 0, 0, 0, :]))

@@ -9,7 +9,15 @@ through the fused ``moscore`` Pallas kernel against the engine's belief
 tables — identical results (tests assert so). With an
 :class:`~repro.core.dispatch.OnlineDispatch` engine the gateway folds
 every observed latency/energy back into the EWMA belief state
-(per-request ``observe_latency`` or the batched ``observe_window``)."""
+(per-request ``observe_latency`` or the batched ``observe_window``).
+
+A gateway can be built straight from a
+:class:`~repro.core.scenario.Scenario` — ``Gateway(scenario)`` — so
+simulation and serving share ONE config object: the scenario's profile,
+policy, γ, Δ, dispatch engine and seed all apply to knobs left at their
+constructor defaults, while any explicitly passed non-default kwarg
+(``policy=``, ``gamma=``, ``dispatch=``, ...) wins — tweak one knob on
+a shared spec without losing the rest."""
 
 from __future__ import annotations
 
@@ -30,7 +38,9 @@ from repro.kernels.moscore import moscore_route
 
 @dataclass
 class Gateway:
-    prof: ProfileTable
+    prof: ProfileTable    # or a repro.core.scenario.Scenario (resolved
+                          # in __post_init__; its policy/γ/Δ/dispatch/
+                          # seed apply)
     policy: str = "MO"
     gamma: float = 0.5
     delta: float = 20.0
@@ -42,6 +52,32 @@ class Gateway:
     _rng: Any = None
 
     def __post_init__(self):
+        from repro.core.scenario import Scenario
+        if isinstance(self.prof, Scenario):
+            sc = self.prof
+            self.prof = sc.resolve_profile()
+            # the scenario's knobs apply to every field still at its
+            # constructor default; an explicitly passed kwarg wins, so
+            # Gateway(sc, policy="LT") tweaks one knob on a shared spec
+            # (passing a kwarg AT its default defers to the scenario —
+            # a dataclass cannot see the difference)
+            for name, default, value in (
+                    ("policy", "MO", sc.policy),
+                    ("gamma", 0.5, sc.gamma),
+                    ("delta", 20.0, sc.delta),
+                    ("seed", 1234, sc.seed)):
+                if getattr(self, name) == default:
+                    setattr(self, name, value)
+            # same precedence for the engine: explicit dispatch= wins; a
+            # scenario that configures its own engine wins over the
+            # online= shorthand (silently swapping a tuned engine for a
+            # default OnlineDispatch() would be worse)
+            if self.dispatch is None \
+                    and not (self.online and sc.dispatch is None):
+                self.dispatch = sc.resolve_dispatch()
+        if self.prof.is_stacked:
+            raise ValueError("Gateway serves one fleet; scenario/profile "
+                             "is a stacked ensemble")
         if self.dispatch is None:
             self.dispatch = OnlineDispatch() if self.online \
                 else StaticDispatch()

@@ -95,6 +95,73 @@ def test_stale_suites_detects_unmonitored():
     assert check_bench.stale_suites(_artifact(), base) == []
 
 
+def test_parse_thresholds_and_per_suite_overrides():
+    """--threshold accepts a global float and SUITE=FLOAT overrides; the
+    override applies to its suite only (the ISSUE 5 satellite: loosen
+    sweep_sharded without loosening the rest of the gate)."""
+    th = check_bench.parse_thresholds(["0.25", "sweep_sharded=0.5"])
+    assert th == {"*": 0.25, "sweep_sharded": 0.5}
+    assert check_bench.parse_thresholds(None) == {"*": 0.20}
+    import pytest
+    with pytest.raises(SystemExit):
+        check_bench.parse_thresholds(["sweep_sharded=fast"])
+    with pytest.raises(SystemExit):
+        check_bench.parse_thresholds(["=0.3"])
+
+    base = _with_extra_suite(_artifact(seconds=10.0))
+    base["suites"]["sweep_sharded"]["seconds"] = 10.0
+    new = _with_extra_suite(_artifact(seconds=10.0))
+    new["suites"]["sweep_sharded"]["seconds"] = 13.0    # +30%
+    # global 20%: the sharded suite regresses
+    assert check_bench.compare(new, base, {"*": 0.20}, 0.5)
+    # per-suite 35%: within budget, and fig4 is still gated at 20%
+    th = {"*": 0.20, "sweep_sharded": 0.35}
+    assert not check_bench.compare(new, base, th, 0.5)
+    new["suites"]["fig4"]["seconds"] = 13.0
+    errs = check_bench.compare(new, base, th, 0.5)
+    assert len(errs) == 1 and "fig4" in errs[0]
+
+
+def test_compare_refuses_scenario_hash_mismatch():
+    """Artifacts carrying scenario hashes are compared by hash: a
+    mismatch is not comparable (different scenarios are different
+    benchmarks), a match skips the legacy mode-string checks."""
+    base = _artifact(seconds=10.0)
+    new = _artifact(seconds=10.0)
+    base["scenario_hash"] = "aaaa"
+    new["scenario_hash"] = "bbbb"
+    errs = check_bench.compare(new, base, 0.20, 0.5)
+    assert errs and "scenario_hash" in errs[0]
+    # equal hashes are comparable even if legacy mode strings disagree
+    new["scenario_hash"] = "aaaa"
+    new["workload"], base["workload"] = "trace", "markov"
+    assert not check_bench.compare(new, base, 0.20, 0.5)
+    # without hashes the legacy mode-string check still applies
+    del new["scenario_hash"], base["scenario_hash"]
+    errs = check_bench.compare(new, base, 0.20, 0.5)
+    assert errs and "workload" in errs[0]
+
+
+def test_main_accepts_threshold_overrides(tmp_path, capsys):
+    new = tmp_path / "new.json"
+    base = tmp_path / "base.json"
+    new.write_text(json.dumps(_artifact(seconds=13.0)))
+    base.write_text(json.dumps(_artifact(seconds=10.0)))
+    assert check_bench.main([str(new), str(base)]) == 1
+    assert check_bench.main([str(new), str(base),
+                             "--threshold", "fig4=0.5"]) == 0
+    assert check_bench.main([str(new), str(base),
+                             "--threshold", "0.5"]) == 0
+    # a typoed suite override is inoperative — WARN, error under --strict
+    capsys.readouterr()
+    assert check_bench.main([str(new), str(base), "--threshold", "0.5",
+                             "--threshold", "fig-4=0.9"]) == 0
+    assert "unknown suite 'fig-4'" in capsys.readouterr().out
+    assert check_bench.main([str(new), str(base), "--threshold", "0.5",
+                             "--threshold", "fig-4=0.9",
+                             "--strict"]) == 1
+
+
 def test_main_stale_baseline_warns_and_strict_fails(tmp_path, capsys):
     new = tmp_path / "new.json"
     base = tmp_path / "base.json"

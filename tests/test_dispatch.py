@@ -1,34 +1,45 @@
 """The dispatch-state contract (ISSUE 4): the default ``StaticDispatch``
 path through the ``DispatchEngine`` interface reproduces the PR 3 engine
 bit for bit, ``OnlineDispatch`` grids keep every batching axis (vmap /
-mesh sharding / fleet stacking), and under a ``DriftSchedule`` online-MO
+mesh sharding / fleet stacking), under a ``DriftSchedule`` online-MO
 strictly dominates static-MO on latency and energy while matching it with
-no drift.
+no drift, and the sliding-window forgetting variant
+(``OnlineDispatch(window=W)``, ISSUE 5) re-converges faster than plain
+annealing after large drifts.
 
 The golden fixture (``golden_static_pr3.json``) was captured from the
 engine at PR 3 (commit a548684), before ``DispatchEngine`` existed — do
 not regenerate it from current code, that would defeat the regression.
+The two tests that drive the deprecated kwarg entry points on purpose
+(the legacy golden contracts) opt out of the repo-wide
+LegacyAPIWarning-as-error filter.
 """
 
 import json
 import os
 import subprocess
 import sys
+from dataclasses import replace
 from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.dispatch import (DriftSchedule, OnlineDispatch,
                                  StaticDispatch, default_dispatch)
+from repro.core.policies import POLICY_CODES
 from repro.core.profiles import paper_fleet, stack_profiles, synthetic_fleet
-from repro.core.simulator import (SimConfig, make_grid, simulate,
-                                  simulate_batch, sweep_grid)
-from repro.launch.mesh import make_sweep_mesh
+from repro.core.scenario import Scenario, Sweep, records, run
+from repro.core.simulator import (SimConfig, _make_grid, _simulate,
+                                  _simulate_batch)
 
 REPO = Path(__file__).resolve().parent.parent
 GOLDEN = REPO / "tests" / "golden_static_pr3.json"
+
+LEGACY_OK = pytest.mark.filterwarnings(
+    "ignore::repro.core.scenario.LegacyAPIWarning")
 
 
 def _golden():
@@ -55,10 +66,13 @@ def _assert_metrics_equal(out, ref):
 
 # ------------------------------------------------ static bit-identity --
 
+@LEGACY_OK
 def test_static_records_bit_identical_to_pr3_golden():
-    """simulate() through the DispatchEngine interface == the records the
-    pre-interface engine produced, every field, every bit — both via the
-    default engine and an explicit StaticDispatch()."""
+    """simulate() (the legacy shim) through the DispatchEngine interface
+    == the records the pre-interface engine produced, every field, every
+    bit — both via the default engine and an explicit StaticDispatch()."""
+    from repro.core.simulator import simulate
+
     fix = _golden()
     prof = paper_fleet()
     for entry in fix["records"]:
@@ -72,7 +86,10 @@ def test_static_records_bit_identical_to_pr3_golden():
                     err_msg=f"{entry['config']}:{k}")
 
 
+@LEGACY_OK
 def test_static_sweep_bit_identical_to_pr3_golden():
+    from repro.core.simulator import sweep_grid
+
     fix = _golden()["sweep"]
     kw = dict(policies=tuple(fix["policies"]),
               user_levels=tuple(fix["user_levels"]),
@@ -94,10 +111,11 @@ def test_online_single_equals_batched_row():
     od = OnlineDispatch()
     cfgs = [SimConfig(n_users=u, n_requests=200, policy="MO", seed=u)
             for u in (2, 6, 11)]
-    grid = make_grid(prof, cfgs, dispatch=od)
-    recs = simulate_batch(prof, grid, n_requests=200, dispatch=od)
+    grid = _make_grid(prof, cfgs, dispatch=od)
+    recs = _simulate_batch(prof, grid, n_requests=200, dispatch=od)
     for i, cfg in enumerate(cfgs):
-        ref = simulate(prof, cfg, dispatch=od)
+        ref = records(Scenario(n_users=cfg.n_users, n_requests=200,
+                               policy="MO", seed=cfg.seed, dispatch=od))
         for k in ref:
             np.testing.assert_array_equal(np.asarray(recs[k][i]),
                                           np.asarray(ref[k]), err_msg=k)
@@ -106,11 +124,11 @@ def test_online_single_equals_batched_row():
 def test_online_sharded_equals_single_on_local_mesh():
     """shard_map path == plain vmap path for an online grid, bit for bit
     (the DispatchState rides inside each shard's scan; no collectives)."""
-    kw = dict(policies=("MO", "LT"), user_levels=(3, 7), seeds=(0, 1),
-              n_requests=250, dispatch=OnlineDispatch())
-    ref = sweep_grid(paper_fleet(), **kw)
-    out = sweep_grid(paper_fleet(), mesh=make_sweep_mesh(), **kw)
-    for k in ref:
+    sc = Scenario(n_requests=250, dispatch=OnlineDispatch())
+    sw = Sweep(policy=("MO", "LT"), n_users=(3, 7), seed=(0, 1))
+    ref = run(sc, sw)
+    out = run(replace(sc, mesh="local"), sw)
+    for k in ref.metric_names:
         np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
 
 
@@ -119,13 +137,15 @@ def test_online_fleet_stacked_matches_per_fleet():
     (F, ...) sweep equals each fleet's own single sweep."""
     fleets = [synthetic_fleet(jax.random.PRNGKey(i), 5) for i in range(2)]
     ens = stack_profiles(fleets)
-    kw = dict(policies=("MO",), user_levels=(4, 8), seeds=(0,),
-              n_requests=250, dispatch=OnlineDispatch())
-    m = sweep_grid(ens, **kw)
-    assert m["latency_ms"].shape == (2, 1, 2, 1, 1, 1, 1)
+    sw = Sweep(policy=("MO",), n_users=(4, 8), seed=(0,))
+    m = run(Scenario(profile=ens, n_requests=250,
+                     dispatch=OnlineDispatch()), sw)
+    assert m.axes[0] == "fleet"
+    assert m["latency_ms"].shape == (2, 1, 2, 1)
     for f, fleet in enumerate(fleets):
-        ref = sweep_grid(fleet, **kw)
-        for k in ref:
+        ref = run(Scenario(profile=fleet, n_requests=250,
+                           dispatch=OnlineDispatch()), sw)
+        for k in ref.metric_names:
             np.testing.assert_array_equal(m[k][f], ref[k], err_msg=k)
 
 
@@ -135,18 +155,20 @@ def test_drifted_grid_vmaps_and_shards():
     prof = paper_fleet()
     drift = DriftSchedule.throttle(prof, 4, at_step=80, t_mult=3.0,
                                    e_mult=8.0)
-    kw = dict(policies=("MO", "LC"), user_levels=(3, 7), seeds=(0,),
-              n_requests=250, drift=drift)
-    ref = sweep_grid(prof, **kw)
-    out = sweep_grid(prof, mesh=make_sweep_mesh(), **kw)
-    _assert_metrics_equal(out, ref)
-    cfgs = [SimConfig(n_users=u, n_requests=150, seed=u) for u in (3, 9)]
-    grid = make_grid(prof, cfgs)
-    recs = simulate_batch(prof, grid, n_requests=150, drift=drift)
-    for i, cfg in enumerate(cfgs):
-        one = simulate(prof, cfg, drift=drift)
+    sc = Scenario(profile=prof, n_requests=250, drift=drift)
+    sw = Sweep(policy=("MO", "LC"), n_users=(3, 7), seed=(0,))
+    ref = run(sc, sw)
+    out = run(replace(sc, mesh="local"), sw)
+    _assert_metrics_equal({k: out[k] for k in out.metric_names},
+                          {k: ref[k] for k in ref.metric_names})
+    drec = records(Scenario(profile=prof, n_users=3, n_requests=150,
+                            seed=3, drift=drift),
+                   Sweep(n_users=(3, 9), seed=(3, 9)))
+    for i, u in enumerate((3, 9)):
+        one = records(Scenario(profile=prof, n_users=u, n_requests=150,
+                               seed=u, drift=drift))
         for k in one:
-            np.testing.assert_array_equal(np.asarray(recs[k][i]),
+            np.testing.assert_array_equal(np.asarray(drec[k][i, i]),
                                           np.asarray(one[k]), err_msg=k)
 
 
@@ -163,21 +185,84 @@ def test_online_dominates_static_under_drift_and_matches_without():
     prof = paper_fleet()
     drift = DriftSchedule.throttle(prof, 4, at_step=400, t_mult=3.0,
                                    e_mult=8.0)
-    kw = dict(policies=("MO",), user_levels=(10,), seeds=(0, 1),
-              n_requests=2000, oracle=(True,))
-    stat = sweep_grid(prof, drift=drift, **kw)
-    onl = sweep_grid(prof, drift=drift, dispatch=OnlineDispatch(), **kw)
-    sl = stat["latency_ms"][0, 0, 0, 0, 0, :]
-    ol = onl["latency_ms"][0, 0, 0, 0, 0, :]
-    se = stat["energy_mwh"][0, 0, 0, 0, 0, :]
-    oe = onl["energy_mwh"][0, 0, 0, 0, 0, :]
-    assert (ol < sl).all(), (ol, sl)
-    assert (oe < se).all(), (oe, se)
+    sc = Scenario(profile=prof, policy="MO", n_users=10, n_requests=2000,
+                  oracle_estimator=True)
+    sw = Sweep(seed=(0, 1))
+    stat = run(replace(sc, drift=drift), sw)
+    onl = run(replace(sc, drift=drift, dispatch=OnlineDispatch()), sw)
+    assert (onl["latency_ms"] < stat["latency_ms"]).all()
+    assert (onl["energy_mwh"] < stat["energy_mwh"]).all()
 
-    stat0 = sweep_grid(prof, **kw)
-    onl0 = sweep_grid(prof, dispatch=OnlineDispatch(), **kw)
-    for k in stat0:
+    stat0 = run(sc, sw)
+    onl0 = run(replace(sc, dispatch=OnlineDispatch()), sw)
+    for k in stat0.metric_names:
         np.testing.assert_allclose(onl0[k], stat0[k], rtol=1e-5, err_msg=k)
+
+
+def test_windowed_online_reconverges_faster_after_drift():
+    """The forgetting satellite (ROADMAP drift-detection item): under the
+    canonical DriftSchedule.throttle harness, the sliding-window variant
+    routes measurably better than plain annealing while the fleet is
+    drifted.
+
+    Both engines start from identical hot beliefs (every cell has seen
+    the offline truth often enough that the annealed step is at full
+    ``alpha`` and the window prior has washed out), then the throttle
+    hits and each engine routes + observes against the DRIFTED truth.
+    "Post-drift latency" is the true service time of each engine's own
+    choices: the windowed belief is fully post-drift after ``window``
+    observations of a cell, while the annealed belief still carries
+    ~0.9^n of the stale evidence, so the windowed engine must reroute
+    sooner and pay strictly less."""
+    prof = paper_fleet()
+    drift = DriftSchedule.throttle(prof, 4, at_step=400, t_mult=3.0,
+                                   e_mult=8.0)
+    drifted = drift.at_step(prof, 400)
+    code = POLICY_CODES["MO"]
+    q = jnp.zeros(prof.n_pairs)
+    key = jax.random.PRNGKey(0)
+
+    def replay(engine, n_steps=64):
+        st = engine.init(prof)
+        for _ in range(12):                    # hot pre-drift beliefs
+            for p in range(prof.n_pairs):
+                for g in range(prof.n_groups):
+                    st = engine.observe(st, p, g, prof.T[p, g],
+                                        prof.E[p, g])
+        lat = []
+        for t in range(n_steps):
+            g = t % prof.n_groups
+            p, st = engine.select(st, prof, code, jnp.asarray(g), q, key,
+                                  jnp.asarray(0.5), jnp.asarray(20.0))
+            lat.append(float(drifted.T[int(p), g]))
+            st = engine.observe(st, int(p), g, drifted.T[int(p), g],
+                                drifted.E[int(p), g])
+        return float(np.mean(lat)), st
+
+    annealed, _ = replay(OnlineDispatch())
+    for w in (8, 16):
+        windowed, _ = replay(OnlineDispatch(window=w))
+        assert windowed < annealed, (w, windowed, annealed)
+
+    # estimator-level: after exactly W post-drift observations of one
+    # hot cell, the windowed belief IS the drifted truth while the
+    # annealed belief still carries ~0.9^W of the stale gap
+    w = 8
+    an, wd = OnlineDispatch(), OnlineDispatch(window=w)
+    st_a, st_w = an.init(prof), wd.init(prof)
+    for _ in range(50):                        # hot pre-drift cell
+        st_a = an.observe(st_a, 4, 2, prof.T[4, 2], prof.E[4, 2])
+        st_w = wd.observe(st_w, 4, 2, prof.T[4, 2], prof.E[4, 2])
+    for _ in range(w):                         # w post-drift observations
+        st_a = an.observe(st_a, 4, 2, drifted.T[4, 2], drifted.E[4, 2])
+        st_w = wd.observe(st_w, 4, 2, drifted.T[4, 2], drifted.E[4, 2])
+    truth = float(drifted.T[4, 2])
+    gap0 = truth - float(prof.T[4, 2])
+    win_err = abs(float(wd.tables(st_w, prof).T[4, 2]) - truth)
+    ann_err = abs(float(an.tables(st_a, prof).T[4, 2]) - truth)
+    assert win_err < 1e-3 * gap0               # fully re-converged
+    assert ann_err > 0.25 * gap0               # annealing still lags
+    assert win_err < ann_err
 
 
 def test_drift_records_reflect_true_tables():
@@ -186,10 +271,10 @@ def test_drift_records_reflect_true_tables():
     prof = paper_fleet()
     drift = DriftSchedule.throttle(prof, 4, at_step=100, t_mult=2.0,
                                    e_mult=8.0)
-    cfg = SimConfig(n_users=6, n_requests=300, policy="LC", seed=2,
-                    oracle_estimator=True)
-    base = simulate(prof, cfg)
-    dr = simulate(prof, cfg, drift=drift)
+    sc = Scenario(profile=prof, n_users=6, n_requests=300, policy="LC",
+                  seed=2, oracle_estimator=True)
+    base = records(sc)
+    dr = records(replace(sc, drift=drift))
     for k in base:
         np.testing.assert_array_equal(np.asarray(base[k][:100]),
                                       np.asarray(dr[k][:100]), err_msg=k)
@@ -233,21 +318,21 @@ def test_grid_rejects_mixed_dispatch_engines():
     cfgs = [SimConfig(n_users=3, n_requests=50, dispatch=a),
             SimConfig(n_users=3, n_requests=50, dispatch=b)]
     with pytest.raises(ValueError, match="share a single dispatch"):
-        make_grid(prof, cfgs)
+        _make_grid(prof, cfgs)
     with pytest.raises(ValueError, match="conflicts"):
-        make_grid(prof, cfgs[:1], dispatch=b)
-    make_grid(prof, cfgs[:1])                  # cfg-carried engine works
+        _make_grid(prof, cfgs[:1], dispatch=b)
+    _make_grid(prof, cfgs[:1])                 # cfg-carried engine works
     # engines are value-compared: separately constructed equal engines
     # (same hyper-parameters) are ONE engine, not a mix
-    make_grid(prof, [SimConfig(n_users=3, n_requests=50,
-                               dispatch=OnlineDispatch())
-                     for _ in range(2)])
-    make_grid(prof, cfgs[:1], dispatch=OnlineDispatch())
-    # the config's own engine drives simulate() exactly like dispatch=
+    _make_grid(prof, [SimConfig(n_users=3, n_requests=50,
+                                dispatch=OnlineDispatch())
+                      for _ in range(2)])
+    _make_grid(prof, cfgs[:1], dispatch=OnlineDispatch())
+    # the config's own engine drives the engine exactly like dispatch=
     cfg = SimConfig(n_users=4, n_requests=150, seed=3, dispatch=a)
-    ref = simulate(prof, SimConfig(n_users=4, n_requests=150, seed=3),
-                   dispatch=a)
-    out = simulate(prof, cfg)
+    ref = _simulate(prof, SimConfig(n_users=4, n_requests=150, seed=3),
+                    dispatch=a)
+    out = _simulate(prof, cfg)
     for k in ref:
         np.testing.assert_array_equal(np.asarray(out[k]),
                                       np.asarray(ref[k]), err_msg=k)
@@ -278,6 +363,15 @@ def test_engine_observe_window_default_matches_batched_override():
     sd = StaticDispatch()
     assert not sd.adaptive and OnlineDispatch.adaptive
     assert sd.observe_window({"rr": 0}, ps, gs, ts, es) == {"rr": 0}
+    # the windowed variant's sequential fold preserves ring-buffer order
+    wd = OnlineDispatch(window=6)
+    seq = wd.init(prof)
+    for i in range(W):
+        seq = wd.observe(seq, ps[i], gs[i], ts[i], es[i])
+    win = wd.observe_window(wd.init(prof), ps, gs, ts, es)
+    for k in ("tsum", "esum", "count", "ecount"):
+        np.testing.assert_allclose(np.asarray(seq[k]), np.asarray(win[k]),
+                                   rtol=1e-6, err_msg=k)
 
 
 def test_sim_config_with_dispatch_stays_hashable():
@@ -290,42 +384,55 @@ def test_sim_config_with_dispatch_stays_hashable():
 # --------------------------------------- forced 4-device subprocess --
 
 _SUBPROC_CHECK = """
-import json, jax, numpy as np
+import json, warnings
+import jax, numpy as np
 from repro.core.dispatch import DriftSchedule, OnlineDispatch
 from repro.core.profiles import paper_fleet
+from repro.core.scenario import LegacyAPIWarning, Scenario, Sweep, run
 from repro.core.simulator import sweep_grid
 from repro.launch.mesh import make_sweep_mesh
 
+warnings.simplefilter("ignore", LegacyAPIWarning)   # legacy on purpose
 assert len(jax.devices()) == 4, jax.devices()
 prof = paper_fleet()
 mesh = make_sweep_mesh()
 
 # StaticDispatch regression vs the PR 3 golden fixture on a real 4-device
-# mesh: the dispatch refactor must not move a single bit even sharded.
+# mesh, via BOTH the legacy kwarg shim and the Scenario path: neither may
+# move a single bit even sharded.
 fix = json.load(open({golden!r}))["sweep"]
 kw = dict(policies=tuple(fix["policies"]),
           user_levels=tuple(fix["user_levels"]),
           seeds=tuple(fix["seeds"]), n_requests=fix["n_requests"])
 gold = sweep_grid(prof, mesh=mesh, **kw)
+res = run(Scenario(profile=prof, n_requests=fix["n_requests"],
+                   mesh="local"),
+          Sweep(policy=tuple(fix["policies"]),
+                n_users=tuple(fix["user_levels"]),
+                seed=tuple(fix["seeds"])))
 for k, v in fix["metrics"].items():
-    np.testing.assert_array_equal(gold[k], np.asarray(v), err_msg=k)
+    want = np.asarray(v)
+    np.testing.assert_array_equal(gold[k], want, err_msg="legacy:" + k)
+    np.testing.assert_array_equal(res[k], want.reshape(res[k].shape),
+                                  err_msg="scenario:" + k)
 
-# Online: sharded == single on 4 real devices, bit for bit.
-okw = dict(policies=("MO", "LT"), user_levels=(3, 7), seeds=(0,),
-           n_requests=150, dispatch=OnlineDispatch())
-ref = sweep_grid(prof, **okw)
-out = sweep_grid(prof, mesh=mesh, **okw)
-for k in ref:
+# Online: sharded == single on 4 real devices, bit for bit (scenario path).
+osc = Scenario(profile=prof, n_requests=150, dispatch=OnlineDispatch())
+osw = Sweep(policy=("MO", "LT"), n_users=(3, 7), seed=(0,))
+ref = run(osc, osw)
+out = run(osc, osw, mesh=mesh)
+for k in ref.metric_names:
     np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
 
 # Online + drift: bitwise except the percentile metric, which tolerates
 # one float32 ULP — XLA's FMA contraction of the percentile interpolation
 # varies with the compiled batch shape (see _assert_metrics_equal).
 drift = DriftSchedule.throttle(prof, 4, at_step=40, t_mult=3.0, e_mult=8.0)
-dkw = dict(okw, drift=drift)
-ref = sweep_grid(prof, **dkw)
-out = sweep_grid(prof, mesh=mesh, **dkw)
-for k in ref:
+dsc = Scenario(profile=prof, n_requests=150, dispatch=OnlineDispatch(),
+               drift=drift)
+ref = run(dsc, osw)
+out = run(dsc, osw, mesh=mesh)
+for k in ref.metric_names:
     if k == "latency_p90_ms":
         np.testing.assert_allclose(out[k], ref[k], rtol=3e-7, err_msg=k)
     else:
@@ -337,8 +444,9 @@ print("OK")
 def test_dispatch_bitwise_in_forced_4_device_subprocess():
     """Real multi-device bit-exactness for the dispatch interface, via
     xla_force_host_platform_device_count=4 in a fresh process: the static
-    path still reproduces the PR 3 golden metrics sharded, and an online
-    + drifted sweep is sharded == single."""
+    path still reproduces the PR 3 golden metrics sharded — through the
+    legacy shim AND the Scenario path — and an online + drifted sweep is
+    sharded == single."""
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=4",
                PYTHONPATH=str(REPO / "src") + os.pathsep

@@ -22,8 +22,8 @@ def _fenced_python(md: Path) -> list[str]:
 # guide -> the runnable example each of its fenced python blocks embeds,
 # in document order
 EMBEDDED_EXAMPLES = {
-    "sweep_engine.md": ["trace_workload.py", "online_drift.py",
-                        "sweep_quickstart.py"],
+    "sweep_engine.md": ["scenario_api.py", "trace_workload.py",
+                        "online_drift.py", "sweep_quickstart.py"],
 }
 
 

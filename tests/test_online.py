@@ -57,6 +57,84 @@ def test_observe_passes_extra_state_keys_through():
 
 
 @settings(max_examples=12, deadline=None)
+@given(st.integers(1, 12), st.floats(1.0, 20.0), st.integers(1, 40))
+def test_window_estimator_matches_numpy_reference(window, prior_weight,
+                                                  n_obs):
+    """The ring-buffer sliding-window estimator == a NumPy reference that
+    literally keeps the last `window` observations: belief = (pw * prior
+    + sum(last W)) / (pw + n), pw = max(prior_weight - count, 0). Covers
+    wraparound, partial fills, and the prior wash-out."""
+    prof = paper_fleet()
+    rng = np.random.default_rng(window * 1000 + n_obs)
+    obs = rng.uniform(50.0, 900.0, n_obs).astype(np.float32)
+    state = ONL.init_window_state(prof, window)
+    for o in obs:
+        state = ONL.observe_windowed(state, 1, 3, o, window=window)
+    tbl = ONL.window_tables(state, prof, window=window,
+                            prior_weight=prior_weight)
+    last = obs[-window:]
+    pw = max(prior_weight - n_obs, 0.0)
+    want = (pw * float(prof.T[1, 3]) + last.sum()) / (pw + len(last))
+    np.testing.assert_allclose(float(tbl.T[1, 3]), want, rtol=1e-4)
+    # untouched cells: bit-equal to the prior (T and E)
+    T = np.asarray(tbl.T)
+    mask = np.ones_like(T, bool)
+    mask[1, 3] = False
+    np.testing.assert_array_equal(T[mask],
+                                  np.asarray(prof.T, np.float32)[mask])
+    np.testing.assert_array_equal(np.asarray(tbl.E),
+                                  np.asarray(prof.E, np.float32))
+    # full turnover forgets the past entirely: after `window` constant
+    # observations the belief IS that constant (prior fully washed out
+    # once count >= prior_weight)
+    for _ in range(window + int(prior_weight)):
+        state = ONL.observe_windowed(state, 1, 3, np.float32(333.0),
+                                     window=window)
+    tbl = ONL.window_tables(state, prof, window=window,
+                            prior_weight=prior_weight)
+    np.testing.assert_allclose(float(tbl.T[1, 3]), 333.0, rtol=1e-5)
+
+
+def test_window_counts_are_int32_so_the_ring_never_freezes():
+    """Ring counts must be integer: a float32 counter saturates at 2^24
+    (c + 1.0 == c), freezing the ring index of a long-lived gateway and
+    pinning stale slots forever. With int32, incrementing and slot
+    rotation still work past that boundary."""
+    import jax.numpy as jnp
+
+    prof = paper_fleet()
+    W = 4
+    state = ONL.init_window_state(prof, W)
+    assert state["count"].dtype == jnp.int32
+    assert state["ecount"].dtype == jnp.int32
+    state["count"] = state["count"].at[0, 0].set(2**24)
+    before = int(state["count"][0, 0])
+    state = ONL.observe_windowed(state, 0, 0, 100.0, window=W)
+    state = ONL.observe_windowed(state, 0, 0, 200.0, window=W)
+    assert int(state["count"][0, 0]) == before + 2
+    # the two observations landed in DIFFERENT slots (a frozen float32
+    # index would overwrite one slot and sum only the last value)
+    np.testing.assert_allclose(float(state["tsum"][0, 0]), 300.0)
+
+
+def test_window_estimator_energy_has_independent_count():
+    """Energy observations are optional: T-only observes advance the T
+    ring but leave the E belief exactly at the prior (no silent decay)."""
+    prof = paper_fleet()
+    W = 4
+    state = ONL.init_window_state(prof, W)
+    for _ in range(10):
+        state = ONL.observe_windowed(state, 0, 0, 200.0, None, window=W)
+    tbl = ONL.window_tables(state, prof, window=W, prior_weight=2.0)
+    np.testing.assert_allclose(float(tbl.T[0, 0]), 200.0, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(tbl.E),
+                                  np.asarray(prof.E, np.float32))
+    assert float(state["ecount"][0, 0]) == 0.0
+    state = ONL.observe_windowed(state, 0, 0, 200.0, 0.5, window=W)
+    assert float(state["ecount"][0, 0]) == 1.0
+
+
+@settings(max_examples=12, deadline=None)
 @given(st.floats(0.02, 0.5), st.floats(1.0, 30.0), st.floats(200.0, 900.0))
 def test_ewma_annealing_cold_tracks_prior_hot_converges(alpha, prior_weight,
                                                         obs):

@@ -5,16 +5,15 @@ import numpy as np
 import pytest
 
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import run_policy
+from repro.core.scenario import Scenario, Sweep, run
 
 
 @pytest.fixture(scope="module")
 def results():
-    prof = paper_fleet()
-    out = {}
-    for pol in ("MO", "RR", "RND", "LC", "LE", "LT", "HA"):
-        out[pol] = run_policy(prof, pol, n_users=15, n_requests=2500)
-    return out
+    pols = ("MO", "RR", "RND", "LC", "LE", "LT", "HA")
+    res = run(Scenario(n_users=15, n_requests=2500), Sweep(policy=pols))
+    return {pol: {m: float(res.sel(m, policy=pol))
+                  for m in res.metric_names} for pol in pols}
 
 
 def test_latency_ordering(results):
@@ -58,22 +57,21 @@ def test_throughput(results):
 
 def test_gamma_monotonicity():
     """Fig 5: latency non-increasing in gamma; gamma=0 cheapest energy."""
-    prof = paper_fleet()
-    lat, en = [], []
-    for g in (0.0, 0.5, 1.0):
-        r = run_policy(prof, "MO", n_users=15, n_requests=2000, gamma=g)
-        lat.append(r["latency_ms"])
-        en.append(r["energy_compute_mwh"])
+    res = run(Scenario(policy="MO", n_users=15, n_requests=2000),
+              Sweep(gamma=(0.0, 0.5, 1.0)))
+    lat = list(res["latency_ms"])
+    en = list(res["energy_compute_mwh"])
     assert lat[0] >= lat[1] >= lat[2] * 0.95
     assert en[0] <= min(en[1], en[2]) + 1e-3
 
 
 def test_low_load_mo_tracks_ha_accuracy():
     """Fig 4f: at 1 user MO accuracy is close to HA."""
-    prof = paper_fleet()
-    mo = run_policy(prof, "MO", n_users=1, n_requests=800)
-    ha = run_policy(prof, "HA", n_users=1, n_requests=800)
-    assert mo["map"] > ha["map"] - 8.0
+    res = run(Scenario(n_users=1, n_requests=800),
+              Sweep(policy=("MO", "HA")))
+    mo = float(res.sel("map", policy="MO"))
+    ha = float(res.sel("map", policy="HA"))
+    assert mo > ha - 8.0
 
 
 def test_table1_winners_match_paper():

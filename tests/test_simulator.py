@@ -1,37 +1,41 @@
-"""Simulator invariants (property-based where it pays)."""
+"""Simulator invariants (property-based where it pays). Engine-facing
+tests drive the Scenario API (``repro.core.scenario``); grid-level
+plumbing tests exercise the internal ``_make_grid``/``_simulate_batch``
+layer directly (the scenario engine's substrate); the deprecated kwarg
+shims are pinned in ``test_scenario.py`` and via the marked legacy test
+at the bottom."""
 
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.estimator import markov_transition, stationary
 from repro.core.policies import mo_select_batch
 from repro.core.profiles import paper_fleet, stack_profiles, synthetic_fleet
-from repro.core.simulator import (SimConfig, _init_draws, grid_cache_clear,
-                                  grid_cache_info, make_grid, run_policy,
-                                  simulate, simulate_batch, summarize,
-                                  summarize_batch, sweep, sweep_grid)
+from repro.core.scenario import Scenario, Sweep, records, run
+from repro.core.simulator import (SimConfig, _init_draws, _make_grid,
+                                  _simulate_batch, grid_cache_clear,
+                                  grid_cache_info, summarize,
+                                  summarize_batch)
 
 
 def test_littles_law():
     """Closed-loop: concurrency = throughput x mean latency (±10%)."""
-    prof = paper_fleet()
     for users in (3, 10):
-        cfg = SimConfig(n_users=users, n_requests=2500, policy="MO")
-        recs = simulate(prof, cfg)
-        s = summarize(recs, prof, cfg)
-        n_eff = float(s["throughput_rps"] * s["latency_ms"] / 1000.0)
+        s = run(Scenario(n_users=users, n_requests=2500, policy="MO"))
+        n_eff = float(s.scalar("throughput_rps")
+                      * s.scalar("latency_ms") / 1000.0)
         assert abs(n_eff - users) / users < 0.12, (users, n_eff)
 
 
 def test_fifo_no_overlap():
     """Per-server: service intervals never overlap (single-server FIFO)."""
     prof = paper_fleet()
-    cfg = SimConfig(n_users=8, n_requests=1200, policy="RND", seed=3)
-    recs = simulate(prof, cfg)
+    recs = records(Scenario(n_users=8, n_requests=1200, policy="RND",
+                            seed=3))
     arr = np.asarray(recs["t_arrival"])
     lat = np.asarray(recs["latency"])
     srv = np.asarray(recs["server"])
@@ -50,8 +54,7 @@ def test_fifo_no_overlap():
 
 def test_latency_at_least_service_time():
     prof = paper_fleet()
-    cfg = SimConfig(n_users=15, n_requests=1500)
-    recs = simulate(prof, cfg)
+    recs = records(Scenario(n_users=15, n_requests=1500))
     T = np.asarray(prof.T) / 1000.0
     tmin = T[np.asarray(recs["server"]), np.asarray(recs["g_true"])]
     # 1 ms tolerance: sim times are f32, so latency = finish - arrival
@@ -63,11 +66,11 @@ def test_latency_at_least_service_time():
 @given(st.integers(0, 10_000), st.integers(2, 30))
 def test_synthetic_fleet_scales(seed, n_pairs):
     prof = synthetic_fleet(jax.random.PRNGKey(seed), n_pairs)
-    cfg = SimConfig(n_users=6, n_requests=300, policy="MO", seed=seed)
-    recs = simulate(prof, cfg)
-    s = summarize(recs, prof, cfg)
-    assert np.isfinite(s["latency_ms"]) and s["latency_ms"] > 0
-    assert 0 < s["map"] <= 100
+    s = run(Scenario(profile=prof, n_users=6, n_requests=300,
+                     policy="MO", seed=seed))
+    assert np.isfinite(s.scalar("latency_ms")) \
+        and s.scalar("latency_ms") > 0
+    assert 0 < s.scalar("map") <= 100
 
 
 def test_markov_chain_is_stochastic():
@@ -79,9 +82,10 @@ def test_markov_chain_is_stochastic():
     assert pi[3] > pi[0]     # busy-crossing skew
 
 
-def test_simulate_batch_matches_looped_run_policy():
-    """Batched engine == looped reference, bit-for-bit, on a 3-config grid
-    (records are bit-identical, so per-row `summarize` metrics are too)."""
+def test_simulate_batch_matches_per_config_runs():
+    """Batched engine == per-config single runs, bit-for-bit, on a
+    heterogeneous 3-config grid (records are bit-identical, so per-row
+    `summarize` metrics are too)."""
     prof = paper_fleet()
     cfgs = [SimConfig(n_users=9, n_requests=500, policy="MO", gamma=0.25,
                       seed=0),
@@ -89,13 +93,16 @@ def test_simulate_batch_matches_looped_run_policy():
                       seed=1),
             SimConfig(n_users=9, n_requests=500, policy="RR", gamma=0.75,
                       seed=2)]
-    grid = make_grid(prof, cfgs)
-    recs = simulate_batch(prof, grid, n_requests=500)
+    grid = _make_grid(prof, cfgs)
+    recs = _simulate_batch(prof, grid, n_requests=500)
     for i, cfg in enumerate(cfgs):
         row = {k: v[i] for k, v in recs.items()}
         got = {k: float(v) for k, v in summarize(row, prof, cfg).items()}
-        want = run_policy(prof, cfg.policy, cfg.n_users, cfg.n_requests,
-                          cfg.gamma, cfg.delta, cfg.seed)
+        one = records(Scenario(n_users=9, n_requests=500,
+                               policy=cfg.policy, gamma=cfg.gamma,
+                               seed=cfg.seed))
+        want = {k: float(v)
+                for k, v in summarize(one, prof, cfg).items()}
         assert got == want, (cfg.policy, got, want)
 
 
@@ -105,11 +112,12 @@ def test_simulate_batch_padding_is_exact():
     prof = paper_fleet()
     cfgs = [SimConfig(n_users=u, n_requests=400, policy="MO", seed=u)
             for u in (3, 7, 15)]
-    grid = make_grid(prof, cfgs)
+    grid = _make_grid(prof, cfgs)
     assert grid.n_users_max == 15 and grid.n_configs == 3
-    recs = simulate_batch(prof, grid, n_requests=400)
-    for i, cfg in enumerate(cfgs):
-        ref = simulate(prof, cfg)
+    recs = _simulate_batch(prof, grid, n_requests=400)
+    for i, (u, cfg) in enumerate(zip((3, 7, 15), cfgs)):
+        ref = records(Scenario(n_users=u, n_requests=400, policy="MO",
+                               seed=u))
         for k in ref:
             np.testing.assert_array_equal(np.asarray(recs[k][i]),
                                           np.asarray(ref[k]), err_msg=k)
@@ -126,9 +134,9 @@ def test_make_grid_memoizes_and_batches_draws():
             for p in ("MO", "RR", "RND", "LC", "LE", "LT", "HA")
             for u in (1, 3, 5, 7, 9, 11, 13, 15) for s in (0, 1, 2)]
     grid_cache_clear()
-    grid = make_grid(prof, cfgs)
+    grid = _make_grid(prof, cfgs)
     assert grid_cache_info() == {"hits": 144, "misses": 24, "size": 24}
-    again = make_grid(prof, cfgs)
+    again = _make_grid(prof, cfgs)
     assert grid_cache_info() == {"hits": 144 + 168, "misses": 24,
                                  "size": 24}
     for f in grid._fields:
@@ -151,7 +159,7 @@ def test_make_grid_mixed_stickiness_bitwise():
     grid_cache_clear()
     cfgs = [SimConfig(n_users=u, n_requests=100, seed=s, stickiness=st)
             for u in (2, 6) for s in (0, 9) for st in (0.5, 0.85, 0.99)]
-    grid = make_grid(prof, cfgs)
+    grid = _make_grid(prof, cfgs)
     assert grid_cache_info()["misses"] == len(cfgs)
     for i, c in enumerate(cfgs):
         t0, r = _init_draws(c.seed, c.stickiness,
@@ -170,10 +178,10 @@ def test_fleet_axis_simulate_batch_and_sweep():
     assert ens.is_stacked and ens.n_fleets == 3 and ens.n_pairs == 5
     cfgs = [SimConfig(n_users=4, n_requests=200, policy="MO", seed=0),
             SimConfig(n_users=7, n_requests=200, policy="LT", seed=1)]
-    grid = make_grid(ens, cfgs)
-    recs = simulate_batch(ens, grid, n_requests=200)
+    grid = _make_grid(ens, cfgs)
+    recs = _simulate_batch(ens, grid, n_requests=200)
     assert recs["latency"].shape == (3, 2, 200)
-    ref = simulate_batch(fleets[2], grid, n_requests=200)
+    ref = _simulate_batch(fleets[2], grid, n_requests=200)
     for k in ref:
         np.testing.assert_array_equal(np.asarray(recs[k][2]),
                                       np.asarray(ref[k]), err_msg=k)
@@ -182,12 +190,13 @@ def test_fleet_axis_simulate_batch_and_sweep():
     s_ref = summarize_batch(ref, fleets[2], warmup=20)
     np.testing.assert_array_equal(np.asarray(s["latency_ms"][2]),
                                   np.asarray(s_ref["latency_ms"]))
-    m = sweep_grid(ens, policies=("MO", "LT"), user_levels=(4,),
-                   seeds=(0,), n_requests=200)
-    m_ref = sweep_grid(fleets[0], policies=("MO", "LT"), user_levels=(4,),
-                       seeds=(0,), n_requests=200)
-    assert m["latency_ms"].shape == (3, 2, 1, 1, 1, 1, 1)
-    np.testing.assert_array_equal(m["latency_ms"][0], m_ref["latency_ms"])
+    m = run(Scenario(profile=ens, n_requests=200),
+            Sweep(policy=("MO", "LT"), n_users=(4,), seed=(0,)))
+    m_ref = run(Scenario(profile=fleets[0], n_requests=200),
+                Sweep(policy=("MO", "LT"), n_users=(4,), seed=(0,)))
+    assert m["latency_ms"].shape == (3, 2, 1, 1)
+    np.testing.assert_array_equal(m["latency_ms"][0],
+                                  m_ref["latency_ms"])
 
 
 def test_make_grid_100k_at_least_10x_faster_than_looped():
@@ -206,8 +215,8 @@ def test_make_grid_100k_at_least_10x_faster_than_looped():
     for u in levels:                       # warm the scalar-path jits
         _init_draws(999_983, 0.85, n_groups=prof.n_groups, n_users=u)
     grid_cache_clear()                     # warm the batched-path jits
-    make_grid(prof, [SimConfig(n_users=c.n_users, n_requests=100,
-                               seed=c.seed + 1000) for c in cycle])
+    _make_grid(prof, [SimConfig(n_users=c.n_users, n_requests=100,
+                                seed=c.seed + 1000) for c in cycle])
     grid_cache_clear()
 
     n_slice = 2000
@@ -227,7 +236,7 @@ def test_make_grid_100k_at_least_10x_faster_than_looped():
     for _ in range(3):
         grid_cache_clear()
         t0 = time.perf_counter()
-        grid = make_grid(prof, cfgs)
+        grid = _make_grid(prof, cfgs)
         attempts.append(time.perf_counter() - t0)
         assert grid.n_configs == len(cfgs)
         assert grid_cache_info()["misses"] == 24
@@ -251,20 +260,27 @@ def test_summarize_batch_close_to_looped():
     """Fused vmap summarize may reassociate reductions; it must stay within
     float32 tolerance of the per-config path."""
     prof = paper_fleet()
-    cfgs = [SimConfig(n_users=u, n_requests=400, policy=p, seed=s)
-            for u, p, s in [(5, "MO", 0), (15, "HA", 1)]]
-    grid = make_grid(prof, cfgs)
-    recs = simulate_batch(prof, grid, n_requests=400)
+    scs = [Scenario(n_users=5, n_requests=400, policy="MO", seed=0),
+           Scenario(n_users=15, n_requests=400, policy="HA", seed=1)]
+    cfgs = [sc.to_config() for sc in scs]
+    grid = _make_grid(prof, cfgs)
+    recs = _simulate_batch(prof, grid, n_requests=400)
     batched = summarize_batch(recs, prof, warmup=40)
-    for i, cfg in enumerate(cfgs):
-        ref = summarize(simulate(prof, cfg), prof, cfg)
+    for i, sc in enumerate(scs):
+        ref = summarize(records(sc), prof, cfgs[i])
         for k in ref:
             np.testing.assert_allclose(float(batched[k][i]), float(ref[k]),
                                        rtol=1e-5, err_msg=k)
 
 
+@pytest.mark.filterwarnings(
+    "ignore::repro.core.scenario.LegacyAPIWarning")
 def test_sweep_grid_axes_and_sweep_compat():
-    """sweep() (compat wrapper) agrees with indexing sweep_grid directly."""
+    """Legacy contract: sweep() (compat wrapper) agrees with indexing
+    sweep_grid directly, and both still produce the historical 6-axis
+    layout."""
+    from repro.core.simulator import sweep, sweep_grid
+
     prof = paper_fleet()
     pols, users, seeds = ["MO", "LC"], [3, 7], (0, 1)
     m = sweep_grid(prof, policies=pols, user_levels=users, seeds=seeds,
@@ -287,7 +303,7 @@ def test_mo_select_batch_matches_moscore_kernel():
     rng = jax.random.PRNGKey(11)
     gs = jax.random.randint(rng, (96,), 0, prof.n_groups)
     q0 = jax.random.randint(jax.random.fold_in(rng, 1), (prof.n_pairs,),
-                            0, 3).astype(jnp.float32)
+                            0, 3).astype(jax.numpy.float32)
     ps_ref, q_ref = mo_select_batch(prof, gs, q0, delta=20.0, gamma=0.6)
     ps_k, q_k = moscore_route(prof.T, prof.E, prof.mAP, gs, q0,
                               delta=20.0, gamma=0.6)
@@ -298,10 +314,9 @@ def test_mo_select_batch_matches_moscore_kernel():
 def test_estimator_tracks_under_strong_models():
     """With an always-accurate fleet, estimator accuracy ~= chain
     stickiness-bound; with weak fleet it degrades (the paper's dynamic)."""
-    prof = paper_fleet()
-    strong = SimConfig(n_users=5, n_requests=1500, policy="HA")
-    weak = SimConfig(n_users=5, n_requests=1500, policy="LT")
-    s_acc = summarize(simulate(prof, strong), prof, strong)["estimator_acc"]
-    w_acc = summarize(simulate(prof, weak), prof, weak)["estimator_acc"]
+    res = run(Scenario(n_users=5, n_requests=1500),
+              Sweep(policy=("HA", "LT")))
+    s_acc = float(res.sel("estimator_acc", policy="HA"))
+    w_acc = float(res.sel("estimator_acc", policy="LT"))
     assert s_acc > w_acc
     assert s_acc > 0.6

@@ -15,7 +15,8 @@ import numpy as np
 import pytest
 
 from repro.core.profiles import paper_fleet, stack_profiles, synthetic_fleet
-from repro.core.simulator import ConfigGrid, SimConfig, make_grid, sweep_grid
+from repro.core.scenario import Scenario, Sweep, run
+from repro.core.simulator import ConfigGrid, SimConfig, _make_grid
 from repro.distributed.sharding import config_axis_spec, pad_leading
 from repro.launch.mesh import make_sweep_mesh
 
@@ -23,9 +24,10 @@ REPO = Path(__file__).resolve().parent.parent
 
 
 def _small_sweep(mesh=None, prof=None):
-    return sweep_grid(prof if prof is not None else paper_fleet(),
-                      policies=("MO", "LT", "HA"), user_levels=(3, 7),
-                      seeds=(0, 1), n_requests=250, mesh=mesh)
+    return run(Scenario(profile=prof if prof is not None else "paper",
+                        n_requests=250, mesh=mesh),
+               Sweep(policy=("MO", "LT", "HA"), n_users=(3, 7),
+                     seed=(0, 1)))
 
 
 def test_sharded_equals_single_on_local_mesh():
@@ -33,8 +35,8 @@ def test_sharded_equals_single_on_local_mesh():
     12 configs over the mesh exercises padding whenever the device count
     doesn't divide 12)."""
     ref = _small_sweep()
-    out = _small_sweep(mesh=make_sweep_mesh())
-    for k in ref:
+    out = _small_sweep(mesh="local")
+    for k in ref.metric_names:
         np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
 
 
@@ -42,9 +44,9 @@ def test_sharded_equals_single_stacked_fleet():
     fleets = stack_profiles(
         [synthetic_fleet(jax.random.PRNGKey(i), 5) for i in range(2)])
     ref = _small_sweep(prof=fleets)
-    out = _small_sweep(mesh=make_sweep_mesh(), prof=fleets)
-    assert ref["latency_ms"].shape[0] == 2
-    for k in ref:
+    out = _small_sweep(mesh="local", prof=fleets)
+    assert ref.axes[0] == "fleet" and ref["latency_ms"].shape[0] == 2
+    for k in ref.metric_names:
         np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
 
 
@@ -53,50 +55,49 @@ def test_sharded_equals_single_trace_workload():
     trace is replicated and the config axis split, bit-identically."""
     from repro.data.traces import bundled_trace
 
-    tw = bundled_trace()
-    ref = sweep_grid(paper_fleet(), policies=("MO", "LT"), user_levels=(3, 7),
-                     seeds=(0, 1), n_requests=200, workload=tw)
-    out = sweep_grid(paper_fleet(), policies=("MO", "LT"), user_levels=(3, 7),
-                     seeds=(0, 1), n_requests=200, workload=tw,
-                     mesh=make_sweep_mesh())
-    for k in ref:
+    sc = Scenario(workload=bundled_trace(), n_requests=200)
+    sw = Sweep(policy=("MO", "LT"), n_users=(3, 7), seed=(0, 1))
+    ref = run(sc, sw)
+    out = run(sc, sw, mesh=make_sweep_mesh())
+    for k in ref.metric_names:
         np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
 
 
 _SUBPROC_CHECK = """
-import json, jax, numpy as np
-from repro.core.profiles import paper_fleet
-from repro.core.simulator import sweep_grid
+import json
+import jax, numpy as np
+from repro.core.scenario import Scenario, Sweep, run
 from repro.data.traces import bundled_trace
 from repro.launch.mesh import make_sweep_mesh
 
 assert len(jax.devices()) == 4, jax.devices()
-kw = dict(policies=("MO", "RR", "LC", "LT", "HA"), user_levels=(3, 7),
-          seeds=(0,), n_requests=150)          # 10 configs -> padded to 12
-prof = paper_fleet()
-ref = sweep_grid(prof, **kw)
+sw = Sweep(policy=("MO", "RR", "LC", "LT", "HA"), n_users=(3, 7),
+           seed=(0,))                         # 10 configs -> padded to 12
+sc = Scenario(n_requests=150)
+ref = run(sc, sw)
 mesh = make_sweep_mesh()
-out = sweep_grid(prof, mesh=mesh, **kw)
-for k in ref:
+out = run(sc, sw, mesh=mesh)
+for k in ref.metric_names:
     np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
 
 # Markov regression vs the PR 2 golden fixture, on a real 4-device mesh:
-# the WorkloadSource refactor must not move a single bit even sharded.
+# neither the WorkloadSource refactor nor the Scenario layer may move a
+# single bit even sharded.
 fix = json.load(open({golden!r}))["sweep"]
-gold = sweep_grid(prof, policies=tuple(fix["policies"]),
-                  user_levels=tuple(fix["user_levels"]),
-                  seeds=tuple(fix["seeds"]), n_requests=fix["n_requests"],
-                  mesh=mesh)
+gold = run(Scenario(n_requests=fix["n_requests"], mesh="local"),
+           Sweep(policy=tuple(fix["policies"]),
+                 n_users=tuple(fix["user_levels"]),
+                 seed=tuple(fix["seeds"])))
 for k, v in fix["metrics"].items():
-    np.testing.assert_array_equal(gold[k], np.asarray(v), err_msg=k)
+    want = np.asarray(v).reshape(gold[k].shape)
+    np.testing.assert_array_equal(gold[k], want, err_msg=k)
 
 # Trace workload: sharded == single on 4 real devices too.
-tw = bundled_trace()
-tkw = dict(policies=("MO", "LT"), user_levels=(3, 7), seeds=(0,),
-           n_requests=150, workload=tw)
-t_ref = sweep_grid(prof, **tkw)
-t_out = sweep_grid(prof, mesh=mesh, **tkw)
-for k in t_ref:
+tsc = Scenario(workload=bundled_trace(), n_requests=150)
+tsw = Sweep(policy=("MO", "LT"), n_users=(3, 7), seed=(0,))
+t_ref = run(tsc, tsw)
+t_out = run(tsc, tsw, mesh=mesh)
+for k in t_ref.metric_names:
     np.testing.assert_array_equal(t_out[k], t_ref[k], err_msg=k)
 print("OK")
 """
@@ -122,7 +123,7 @@ def test_sharded_bitwise_in_forced_4_device_subprocess():
 def test_pad_leading_pads_and_preserves():
     prof = paper_fleet()
     cfgs = [SimConfig(n_users=u, n_requests=100, seed=u) for u in (2, 5, 9)]
-    grid = make_grid(prof, cfgs)
+    grid = _make_grid(prof, cfgs)
     padded, n = pad_leading(grid, 4)
     assert n == 3
     assert all(leaf.shape[0] == 4 for leaf in jax.tree.leaves(padded))

@@ -19,8 +19,9 @@ from hypothesis import given, settings, strategies as st
 from repro.core.estimator import group_of_count, markov_transition
 from repro.core.policies import POLICY_CODES
 from repro.core.profiles import paper_fleet
-from repro.core.simulator import (SimConfig, make_grid, simulate,
-                                  simulate_batch, sweep_grid)
+from repro.core.scenario import Scenario, Sweep, records, run
+from repro.core.simulator import (SimConfig, _make_grid, _simulate_batch,
+                                  summarize)
 from repro.core.workload import MarkovWorkload, default_workload
 from repro.data.traces import (TraceWorkload, bundled_trace, load_trace,
                                save_trace, synthetic_trace)
@@ -39,12 +40,13 @@ def _golden():
 # ------------------------------------------------ Markov bit-identity --
 
 def test_markov_records_bit_identical_to_pr2_golden():
-    """simulate() through the WorkloadSource interface == the records the
-    pre-interface engine produced, every field, every bit."""
+    """The engine through the WorkloadSource interface (scenario path) ==
+    the records the pre-interface engine produced, every field, every
+    bit."""
     fix = _golden()
     prof = paper_fleet()
     for entry in fix["records"]:
-        recs = simulate(prof, SimConfig(**entry["config"]))
+        recs = records(Scenario(profile=prof, **entry["config"]))
         assert set(recs) == set(entry["records"])
         for k, v in entry["records"].items():
             np.testing.assert_array_equal(
@@ -53,19 +55,21 @@ def test_markov_records_bit_identical_to_pr2_golden():
 
 def test_markov_sweep_bit_identical_to_pr2_golden():
     fix = _golden()["sweep"]
-    m = sweep_grid(paper_fleet(), policies=tuple(fix["policies"]),
-                   user_levels=tuple(fix["user_levels"]),
-                   seeds=tuple(fix["seeds"]), n_requests=fix["n_requests"])
+    res = run(Scenario(n_requests=fix["n_requests"]),
+              Sweep(policy=tuple(fix["policies"]),
+                    n_users=tuple(fix["user_levels"]),
+                    seed=tuple(fix["seeds"])))
     for k, v in fix["metrics"].items():
-        np.testing.assert_array_equal(m[k], np.asarray(v), err_msg=k)
+        want = np.asarray(v).reshape(res[k].shape)
+        np.testing.assert_array_equal(res[k], want, err_msg=k)
 
 
 def test_explicit_markov_workload_matches_default():
     """Passing MarkovWorkload() explicitly is the default path."""
-    prof = paper_fleet()
-    cfg = SimConfig(n_users=4, n_requests=150, policy="MO", seed=7)
-    ref = simulate(prof, cfg)
-    out = simulate(prof, cfg, workload=MarkovWorkload())
+    sc = Scenario(n_users=4, n_requests=150, policy="MO", seed=7)
+    ref = records(sc)
+    out = records(Scenario(n_users=4, n_requests=150, policy="MO", seed=7,
+                           workload=MarkovWorkload()))
     for k in ref:
         np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]),
                                       err_msg=k)
@@ -178,8 +182,8 @@ def test_trace_records_bit_identical_to_numpy_replay():
                       oracle_estimator=True)
             for p in ("MO", "RR", "LC", "LT")
             for u in (3, 7) for s in (0, 1)]
-    grid = make_grid(prof, cfgs, workload=tw)
-    recs = simulate_batch(prof, grid, n_requests=160, workload=tw)
+    grid = _make_grid(prof, cfgs, workload=tw)
+    recs = _simulate_batch(prof, grid, n_requests=160, workload=tw)
     for i, cfg in enumerate(cfgs):
         ref = _np_trace_replay(prof, cfg, tw, grid.n_users_max)
         for k, v in ref.items():
@@ -188,19 +192,17 @@ def test_trace_records_bit_identical_to_numpy_replay():
                 err_msg=f"{cfg.policy}/u{cfg.n_users}/s{cfg.seed}:{k}")
 
 
-def test_trace_sweep_grid_matches_replayed_metrics():
-    """sweep_grid's fused summaries over a trace grid equal the engine
-    summarizer applied to the NumPy-replayed records (float32-tight)."""
-    from repro.core.simulator import summarize
-
+def test_trace_sweep_matches_replayed_metrics():
+    """The fused summaries over a trace grid equal the engine summarizer
+    applied to the NumPy-replayed records (float32-tight)."""
     prof = paper_fleet()
     tw = bundled_trace()
     pols, users, seeds = ("MO", "LT"), (3, 7), (0, 1)
-    m = sweep_grid(prof, policies=pols, user_levels=users, seeds=seeds,
-                   n_requests=160, oracle=(True,), workload=tw)
-    for pi, pol in enumerate(pols):
-        for ui, u in enumerate(users):
-            for si, s in enumerate(seeds):
+    m = run(Scenario(workload=tw, n_requests=160, oracle_estimator=True),
+            Sweep(policy=pols, n_users=users, seed=seeds))
+    for pol in pols:
+        for u in users:
+            for s in seeds:
                 cfg = SimConfig(n_users=u, n_requests=160, policy=pol,
                                 seed=s, oracle_estimator=True)
                 ref = _np_trace_replay(prof, cfg, tw, max(users))
@@ -208,7 +210,8 @@ def test_trace_sweep_grid_matches_replayed_metrics():
                                   for k, v in ref.items()}, prof, cfg)
                 for k, v in want.items():
                     np.testing.assert_allclose(
-                        m[k][pi, ui, 0, 0, 0, si], float(v), rtol=1e-5,
+                        m.sel(k, policy=pol, n_users=u, seed=s),
+                        float(v), rtol=1e-5,
                         err_msg=f"{pol}/u{u}/s{s}:{k}")
 
 
@@ -220,10 +223,12 @@ def test_trace_single_equals_batched_row():
     tw = synthetic_trace(seed=5, n_streams=4, n_steps=64)
     cfgs = [SimConfig(n_users=u, n_requests=200, policy="MO", seed=u,
                       workload=tw) for u in (2, 6, 11)]
-    grid = make_grid(prof, cfgs)
-    recs = simulate_batch(prof, grid, n_requests=200, workload=tw)
+    grid = _make_grid(prof, cfgs)
+    recs = _simulate_batch(prof, grid, n_requests=200, workload=tw)
     for i, cfg in enumerate(cfgs):
-        ref = simulate(prof, cfg)
+        ref = records(Scenario(workload=tw, n_users=cfg.n_users,
+                               n_requests=200, policy="MO",
+                               seed=cfg.seed))
         for k in ref:
             np.testing.assert_array_equal(np.asarray(recs[k][i]),
                                           np.asarray(ref[k]), err_msg=k)
@@ -318,12 +323,12 @@ def test_simulate_batch_rejects_trace_grid_under_markov_default():
     prof = paper_fleet()
     tw = bundled_trace()
     cfgs = [SimConfig(n_users=5, n_requests=50, seed=0)]
-    grid = make_grid(prof, cfgs, workload=tw)
+    grid = _make_grid(prof, cfgs, workload=tw)
     with pytest.raises(ValueError, match="nonzero workload phase"):
-        simulate_batch(prof, grid, n_requests=50)
-    simulate_batch(prof, grid, n_requests=50, workload=tw)   # correct call
-    markov_grid = make_grid(prof, cfgs)
-    simulate_batch(prof, markov_grid, n_requests=50)         # default fine
+        _simulate_batch(prof, grid, n_requests=50)
+    _simulate_batch(prof, grid, n_requests=50, workload=tw)  # correct call
+    markov_grid = _make_grid(prof, cfgs)
+    _simulate_batch(prof, markov_grid, n_requests=50)        # default fine
 
 
 def test_grid_rejects_mixed_workload_sources():
@@ -333,10 +338,10 @@ def test_grid_rejects_mixed_workload_sources():
     cfgs = [SimConfig(n_users=3, n_requests=50, workload=t1),
             SimConfig(n_users=3, n_requests=50, workload=t2)]
     with pytest.raises(ValueError, match="share a single workload"):
-        make_grid(prof, cfgs)
+        _make_grid(prof, cfgs)
     with pytest.raises(ValueError, match="conflicts"):
-        make_grid(prof, cfgs[:1], workload=t2)
-    grid = make_grid(prof, cfgs[:1])           # cfg-carried source works
+        _make_grid(prof, cfgs[:1], workload=t2)
+    grid = _make_grid(prof, cfgs[:1])          # cfg-carried source works
     assert grid.phase.shape == (1, 3)
 
 
