@@ -108,8 +108,9 @@ def main() -> None:
 
     from benchmarks import (ablation_delta, bench_kernels, bench_scale,
                             fig2_motivation, fig4_baselines, fig5_gamma,
-                            online_drift, roofline_summary, sweep_sharded,
-                            table1_pairs, workload_trace)
+                            online_drift, roofline_summary,
+                            serving_throughput, sweep_sharded, table1_pairs,
+                            workload_trace)
 
     suites = {
         "fig2": lambda: fig2_motivation.run(),
@@ -128,6 +129,9 @@ def main() -> None:
         "online_drift": lambda: online_drift.run(
             n_requests=800 if args.fast else 2000,
             seeds=(0,) if args.fast else (0, 1)),
+        "serving_throughput": lambda: serving_throughput.run(
+            base, n_requests=50_000 if args.fast else 200_000,
+            window=512 if args.fast else 1024),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: roofline_summary.run(),
     }

@@ -1,0 +1,90 @@
+"""Routed-request throughput of the windowed serving plane.
+
+The request plane's hot path is ``WindowedGateway.route_window``: one
+jitted device program per admission window (estimator gather + belief
+tables + the fused ``moscore`` routing kernel, backend-aware). This
+suite measures it warm, per window size and dispatch engine:
+
+  * ``routed_rps`` — routed requests/sec sustained over the run (the
+    acceptance bar is 1e5+ on the default fleet);
+  * ``p50_ms`` / ``p99_ms`` — router tail latency per WINDOW (the wait a
+    request pays for its window's routing decision).
+
+``per_request`` is the deprecated per-request path (windows of one) for
+contrast — the gap is the point of the windowed redesign. ``plane_e2e``
+runs the full :class:`~repro.serving.engine.ServingPlane` loop (poll ->
+observe -> route -> submit) and reports end-to-end req/s including the
+host-side executor-pool accounting."""
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from repro.core.dispatch import OnlineDispatch
+from repro.core.scenario import Scenario
+from repro.serving.engine import ServingPlane
+from repro.serving.gateway import WindowedGateway
+
+N_STREAMS = 1024
+
+
+def _throughput(gw: WindowedGateway, window: int, n_requests: int):
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, N_STREAMS, size=n_requests + window)
+    q0 = np.zeros(gw.prof.n_pairs, np.float32)
+    gw.route_window(ids[:window], q0)[0].block_until_ready()   # warm/compile
+    times, done = [], 0
+    t_all = time.perf_counter()
+    while done < n_requests:
+        t0 = time.perf_counter()
+        pairs, _gs, _q = gw.route_window(ids[done:done + window], q0)
+        pairs.block_until_ready()
+        times.append(time.perf_counter() - t0)
+        done += window
+    elapsed = time.perf_counter() - t_all
+    t = np.asarray(times) * 1000.0
+    return done / elapsed, float(np.percentile(t, 50)), \
+        float(np.percentile(t, 99))
+
+
+def run(scenario: Scenario | None = None, n_requests: int = 200_000,
+        window: int = 1024) -> list[str]:
+    base = replace(scenario if scenario is not None else Scenario(),
+                   policy="MO", dispatch=None)
+    rows = ["serving_throughput.case,routed_rps,p50_ms,p99_ms"]
+    cases = [(f"static_w{w}", None, w)
+             for w in (window // 4, window, window * 4)]
+    cases.append((f"online_w{window}", OnlineDispatch(), window))
+    best = 0.0
+    for name, disp, w in cases:
+        gw = WindowedGateway(replace(base, dispatch=disp),
+                             n_streams=N_STREAMS, backend="auto")
+        rps, p50, p99 = _throughput(gw, w, n_requests)
+        best = max(best, rps)
+        rows.append(f"serving_throughput.{name},{rps:.0f},{p50:.3f},"
+                    f"{p99:.3f}")
+
+    # the deprecated per-request path, for contrast (much smaller run —
+    # one device program per request is exactly what it costs)
+    gw1 = WindowedGateway(base, n_streams=N_STREAMS, backend="auto")
+    rps1, p50, p99 = _throughput(gw1, 1, max(2000, n_requests // 100))
+    rows.append(f"serving_throughput.per_request,{rps1:.0f},{p50:.3f},"
+                f"{p99:.3f}")
+
+    # full plane loop: admission + routing + async pool + observation
+    plane = ServingPlane.build(replace(base, n_users=N_STREAMS),
+                               window=window)
+    n_e2e = max(window * 8, n_requests // 8)
+    t0 = time.perf_counter()
+    recs = plane.run(n_e2e)
+    e2e_rps = n_e2e / (time.perf_counter() - t0)
+    # steady-state router rate inside the plane: median per-window time
+    # (the mean would charge the first window's compile to every window)
+    router_rps = window / float(np.median(recs["router_window_s"]))
+    rows.append(f"serving_throughput.plane_e2e,{e2e_rps:.0f},,")
+    rows.append(f"serving_throughput.plane_router_steady,{router_rps:.0f},,")
+    rows.append(f"serving_throughput.routed_rps_best,{best:.0f},,")
+    rows.append(f"serving_throughput.windowed_vs_per_request,"
+                f"{best / rps1:.1f},,")
+    return rows

@@ -1,6 +1,6 @@
 """The Scenario API: one spec object through sim, serving and benchmarks."""
 from repro.core.scenario import Scenario, Sweep, run
-from repro.serving.gateway import Gateway
+from repro.serving.gateway import WindowedGateway
 
 # 1. A Scenario bundles everything one configuration needs — fleet
 #    profile, workload, dispatch engine, drift, mesh spec, and the
@@ -28,7 +28,7 @@ spec = sc.to_json()
 assert Scenario.from_json(spec) == sc
 print("scenario hash:", sc.hash)
 
-# 5. Serving shares the SAME object: a Gateway built from the scenario
-#    routes with its policy, gamma, delta and dispatch engine.
-gw = Gateway(sc)
+# 5. Serving shares the SAME object: a windowed gateway built from the
+#    scenario routes with its policy, gamma, delta and dispatch engine.
+gw = WindowedGateway(sc)
 print("gateway policy:", gw.policy, "- one spec, sim AND serving")

@@ -95,6 +95,28 @@ class DispatchEngine:
                                  delta)
         return p, {**state, "rr": state["rr"] + 1}
 
+    def select_window(self, state, prof, code, gs, q0, keys, gamma,
+                      delta):
+        """Route a whole admission window with queue feedback — the
+        batched :meth:`select`. ``gs``/``keys`` are (W,) groups and
+        per-request threefry keys, ``q0`` the (P,) queue depths at
+        admission. A ``lax.scan`` threads ``(state, q)`` through the W
+        selections (decision w+1 sees decision w's queue bump), so the
+        result is bit-identical to W sequential :meth:`select` calls;
+        returns ``(pairs (W,), q_after (P,), new_state)``. The serving
+        gateway jits this once per window shape — one device program per
+        admission window instead of W dispatches."""
+
+        def step(carry, inp):
+            st, q = carry
+            g, key = inp
+            p, st = self.select(st, prof, code, g, q, key, gamma, delta)
+            return (st, q.at[p].add(1.0)), p
+
+        (state, q), pairs = jax.lax.scan(
+            step, (state, q0.astype(f32)), (gs, keys))
+        return pairs, q, state
+
     def observe(self, state, p, g, obs_t_ms, obs_e_mwh=None):
         """Fold one completed request's measurements — latency (ms) and
         optionally energy (mWh) at cell ``(p, g)`` — into the state."""
@@ -202,10 +224,11 @@ class OnlineDispatch(DispatchEngine):
             return ONL.observe_window(state, pairs, groups, obs_t_ms,
                                       obs_e_mwh, alpha=self.alpha,
                                       prior_weight=self.prior_weight)
-        # ring-buffer updates are order-dependent within a cell; the
-        # windowed mode folds the batch sequentially (correct, unfused)
-        return DispatchEngine.observe_window(self, state, pairs, groups,
-                                             obs_t_ms, obs_e_mwh)
+        # ring-buffer updates are order-dependent within a cell, so the
+        # windowed mode folds the batch with a sequential lax.scan — one
+        # fused program, bit-identical to per-request observes
+        return ONL.observe_windowed_batch(state, pairs, groups, obs_t_ms,
+                                          obs_e_mwh, window=self.window)
 
 
 _DEFAULT_DISPATCH = StaticDispatch()

@@ -149,6 +149,34 @@ def observe_windowed(state, p, g, obs_t_ms, obs_e_mwh=None, *,
     return out
 
 
+def observe_windowed_batch(state, pairs, groups, obs_t_ms,
+                           obs_e_mwh=None, *, window: int):
+    """Fold a whole routing window into the ring buffers as ONE device
+    program — the batched :func:`observe_windowed`.
+
+    Ring updates are order-dependent *within* a cell (each observation
+    overwrites the oldest slot), so unlike the annealed
+    :func:`observe_window` this fold cannot be vmapped per cell; instead
+    a ``lax.scan`` applies the W cell updates sequentially, preserving
+    completion order exactly — bit-identical to W :func:`observe_windowed`
+    calls, but one fused program instead of W scatter round-trips (the
+    serving gateway's windowed observation path under
+    ``OnlineDispatch(window=...)``)."""
+    pairs = jnp.asarray(pairs, jnp.int32)
+    groups = jnp.asarray(groups, jnp.int32)
+    obs_t = jnp.asarray(obs_t_ms, f32)
+    has_e = obs_e_mwh is not None
+    obs_e = jnp.asarray(obs_e_mwh, f32) if has_e else None
+
+    def fold(st, w):
+        return observe_windowed(st, pairs[w], groups[w], obs_t[w],
+                                obs_e[w] if has_e else None,
+                                window=window), None
+
+    state, _ = jax.lax.scan(fold, state, jnp.arange(pairs.shape[0]))
+    return state
+
+
 def window_tables(state, prof: ProfileTable, *, window: int,
                   prior_weight: float = 10.0) -> ProfileTable:
     """Belief tables from the ring buffers: each cell is the mean of its

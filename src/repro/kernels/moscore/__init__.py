@@ -1,4 +1,6 @@
-from repro.kernels.moscore.ops import moscore_route
+from repro.kernels.moscore.ops import (default_backend, moscore_route,
+                                       resolve_backend)
 from repro.kernels.moscore.ref import ref_moscore_route
 
-__all__ = ["moscore_route", "ref_moscore_route"]
+__all__ = ["moscore_route", "ref_moscore_route", "default_backend",
+           "resolve_backend"]

@@ -1,4 +1,13 @@
-"""Jitted wrapper: lane padding, transposition, unpadding."""
+"""Jitted wrapper: lane padding, transposition, unpadding — and the
+backend-aware dispatch between the Pallas kernel and the XLA reference.
+
+Both backends implement the same contract bit-for-bit (the kernel tests
+assert it), so callers pick purely on speed: the Pallas kernel wins where
+it compiles natively (TPU); everywhere else it runs in interpret mode and
+*loses* to the XLA ``lax.scan`` reference (~0.3x on CPU — the ``kernels``
+bench suite tracks the ratio). ``backend="auto"`` — what the serving
+gateway's hot path uses — resolves that choice per platform.
+"""
 
 from __future__ import annotations
 
@@ -8,17 +17,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.moscore.moscore import moscore_pallas
+from repro.kernels.moscore.ref import ref_moscore_route
 
 BIG = 1e30
 
+BACKENDS = ("pallas", "xla", "auto")
+
+
+def default_backend() -> str:
+    """The fastest correct routing backend for this process' platform:
+    the compiled Pallas kernel on TPU, the XLA reference scan elsewhere
+    (where Pallas would fall back to interpret mode)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_backend(backend: str) -> str:
+    """Normalize a backend spec to a concrete one (``"auto"`` picks per
+    platform via :func:`default_backend`)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown moscore backend {backend!r}; one of "
+                         f"{BACKENDS}")
+    return default_backend() if backend == "auto" else backend
+
 
 @functools.partial(jax.jit, static_argnames=("delta", "gamma", "interpret"))
-def moscore_route(T, E, mAP, gs, q0, *, delta: float = 20.0,
-                  gamma: float = 0.5, interpret: bool = True):
-    """Route a window of requests with queue feedback.
-
-    T/E/mAP: (P, G) profile tables; gs: (W,) int32 estimated groups;
-    q0: (P,) queue depths. Returns (choices (W,), q_final (P,))."""
+def _pallas_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
+                  interpret: bool):
     P, G = T.shape
     Pp = (P + 127) // 128 * 128
     padP = Pp - P
@@ -36,3 +60,29 @@ def moscore_route(T, E, mAP, gs, q0, *, delta: float = 20.0,
     choices, qf = moscore_pallas(Tt, Et, Mt, gsc, q0p, delta=delta,
                                  gamma=gamma, interpret=interpret)
     return choices[:, 0], qf[0, :P]
+
+
+_xla_route = jax.jit(ref_moscore_route, static_argnames=("delta", "gamma"))
+
+
+def moscore_route(T, E, mAP, gs, q0, *, delta: float = 20.0,
+                  gamma: float = 0.5, interpret: bool = True,
+                  backend: str = "pallas"):
+    """Route a window of requests with queue feedback.
+
+    T/E/mAP: (P, G) profile tables; gs: (W,) int32 estimated groups;
+    q0: (P,) queue depths. Returns (choices (W,), q_final (P,)).
+
+    ``backend`` selects the implementation: ``"pallas"`` (default — the
+    fused kernel, in interpret mode unless ``interpret=False``),
+    ``"xla"`` (the ``lax.scan`` reference, jitted), or ``"auto"``
+    (:func:`default_backend` — Pallas compiled on TPU, XLA elsewhere).
+    All backends return bit-identical choices; safe to call under an
+    outer ``jit``."""
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _xla_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma)
+    if backend == "pallas" and jax.default_backend() == "tpu":
+        interpret = False
+    return _pallas_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma,
+                         interpret=interpret)

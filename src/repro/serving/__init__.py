@@ -1,6 +1,9 @@
-from repro.serving.engine import ServingEngine
-from repro.serving.executor import Executor
-from repro.serving.gateway import Gateway
-from repro.serving.request import Request, Response
+from repro.serving.engine import ServingEngine, ServingPlane
+from repro.serving.executor import AsyncExecutorPool, Executor
+from repro.serving.gateway import Gateway, WindowedGateway
+from repro.serving.request import (Request, RequestWindow, Response,
+                                   ResponseWindow)
 
-__all__ = ["Request", "Response", "Gateway", "Executor", "ServingEngine"]
+__all__ = ["Request", "Response", "RequestWindow", "ResponseWindow",
+           "Gateway", "WindowedGateway", "Executor", "AsyncExecutorPool",
+           "ServingEngine", "ServingPlane"]

@@ -1,29 +1,158 @@
-"""End-to-end serving engine: workload -> gateway -> executors -> metrics.
+"""End-to-end serving engines: workload -> gateway -> executors -> metrics.
 
-In ``real`` mode the fleet runs actual (tiny) detection models on this host
-and the estimator consumes *real* detection counts — the full closed loop of
-the paper (§III) with no modelled shortcuts except the profile tables that
-drive the balancer's expectations (exactly the paper's offline-profiling
-role)."""
+Two drivers share the stack:
+
+* :class:`ServingPlane` — the windowed (micro-batched) request plane.
+  Requests are admitted a window at a time; one jitted ``route_window``
+  call routes the whole window against the live executor queue depths,
+  the :class:`~repro.serving.executor.AsyncExecutorPool` enqueues it
+  without blocking, and completions polled between windows feed the
+  gateway's windowed observation hooks (dispatch-state belief and the
+  detection-count estimator). Built from a
+  :class:`~repro.core.scenario.Scenario`; this is the high-throughput
+  path (``benchmarks/serving_throughput.py`` drives the same machinery).
+
+* :class:`ServingEngine` — the original per-request closed loop, kept
+  for ``real`` mode (actual tiny detectors on this host, wall-clock
+  service times, real detection counts feeding the estimator — the full
+  loop of the paper's §III). It now drives the SAME windowed gateway
+  with windows of one, so it emits no deprecation warnings and stays
+  bit-compatible with the windowed plane on a shared request stream.
+"""
 
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import estimator as EST
 from repro.core.profiles import ProfileTable
 from repro.data.workload import VideoStreamWorkload
-from repro.serving.executor import Executor
-from repro.serving.gateway import Gateway
+from repro.serving.executor import AsyncExecutorPool, Executor
+from repro.serving.gateway import WindowedGateway
 from repro.serving.request import Request
+
+# detection probability of one object given pair mAP (workload.noisy_count
+# and the estimator's noisy_detected_count use the same ramp)
+_P_DET = lambda m: np.minimum(1.0, 0.80 + 0.20 * m / 100.0)
+
+
+@dataclass
+class ServingPlane:
+    """Windowed closed-ish loop over a modelled fleet.
+
+    Per iteration: poll the pool for completions (feeding the gateway's
+    windowed observation hooks), admit the next window of streams,
+    route it in one jitted call against live queue depths, enqueue it on
+    the pool, and advance simulated time by the window's offered-load
+    interval. Scene complexity per stream follows the same Markov chain
+    as the simulator/workload."""
+
+    gateway: WindowedGateway
+    pool: AsyncExecutorPool
+    window: int = 64
+    n_streams: int = 15
+    stickiness: float = 0.85
+    offered_rps: float | None = None   # None: ~90% of fleet capacity
+    seed: int = 0
+    _recs: dict = field(default=None, repr=False)
+
+    @classmethod
+    def build(cls, scenario, *, window: int = 64, backend: str = "auto",
+              offered_rps: float | None = None) -> "ServingPlane":
+        """One Scenario -> the whole plane: the gateway adopts the
+        scenario's profile/policy/γ/Δ/dispatch/seed, the pool its fleet,
+        the workload its user count and stickiness."""
+        gw = WindowedGateway(scenario, backend=backend,
+                             n_streams=max(1024, scenario.n_users))
+        return cls(gw, AsyncExecutorPool(gw.prof), window=window,
+                   n_streams=scenario.n_users,
+                   stickiness=scenario.stickiness,
+                   offered_rps=offered_rps, seed=scenario.seed)
+
+    def _capacity_rps(self) -> float:
+        # the pool's CURRENT true times (post-drift), not the offline prof
+        return float(np.sum(1.0 / self.pool._T_s.mean(axis=1)))
+
+    def _observe(self, resp, rng) -> None:
+        """Feed one polled completion window back: measured latency and
+        energy into the dispatch state (keyed by the ESTIMATED group the
+        decision used), modelled detection counts into the estimator."""
+        if resp.size == 0:
+            return
+        self.gateway.observe_window(resp.pairs, resp.est_groups,
+                                    resp.latency_ms, resp.energy_mwh)
+        true_count = np.where(resp.groups < self.gateway.prof.n_groups - 1,
+                              resp.groups, 5)
+        det = rng.binomial(true_count, _P_DET(resp.map_proxy))
+        det += rng.random(resp.size) < 0.05 * (1 - resp.map_proxy / 100.0)
+        self.gateway.observe_detections_window(resp.stream_ids, det)
+        r = self._recs
+        r["latency"].append(resp.latency_ms / 1000.0)
+        r["energy"].append(resp.energy_mwh)
+        r["map"].append(resp.map_proxy)
+        r["pair"].append(resp.pairs)
+        r["g_true"].append(resp.groups)
+        r["g_est"].append(resp.est_groups)
+
+    def run(self, n_requests: int = 2048):
+        """Drive ``n_requests`` through the plane; returns per-request
+        record arrays (completion order) plus router timing:
+        ``router_s`` (total wall-clock inside ``route_window``) and
+        ``router_window_s`` (per-window wall-clock samples). Repeated
+        calls CONTINUE the plane — clock, streams, queues and belief
+        state persist — so drift can be injected between runs."""
+        G = self.gateway.prof.n_groups
+        if getattr(self, "_rng", None) is None:     # first run: cold plane
+            self._rng = np.random.default_rng(self.seed)
+            P_mat = np.asarray(EST.markov_transition(G, self.stickiness))
+            self._cumP = P_mat.cumsum(axis=1)
+            self._scene = self._rng.choice(
+                G, self.n_streams, p=np.asarray(EST.stationary(P_mat)))
+            self._now = 0.0
+            self._served = 0
+        rng, cumP, scene = self._rng, self._cumP, self._scene
+        rps = self.offered_rps or 0.9 * self._capacity_rps()
+        self._recs = {k: [] for k in ("latency", "energy", "map", "pair",
+                                      "g_true", "g_est")}
+        router_win = []
+        now, done = self._now, 0
+        while done < n_requests:
+            w = min(self.window, n_requests - done)
+            self._observe(self.pool.poll(now), rng)
+            rid0 = self._served + done
+            streams = np.arange(rid0, rid0 + w) % self.n_streams
+            scene[streams] = (rng.random((w, 1))
+                              > cumP[scene[streams]]).sum(axis=1)
+            t0 = time.perf_counter()
+            pairs, gs, _q = self.gateway.route_window(streams,
+                                                      self.pool.depths())
+            pairs = np.asarray(pairs)
+            router_win.append(time.perf_counter() - t0)
+            self.pool.submit_window(pairs, scene[streams], now,
+                                    est_groups=np.asarray(gs),
+                                    stream_ids=streams,
+                                    rids=np.arange(rid0, rid0 + w))
+            now += w / rps
+            done += w
+        self._observe(self.pool.poll(np.inf), rng)   # drain the tail
+        self._now = max(now, float(self.pool._avail.max(initial=0.0)))
+        self._served += done
+        recs = {k: np.concatenate(v) for k, v in self._recs.items()}
+        recs["router_s"] = float(np.sum(router_win))
+        recs["router_window_s"] = np.asarray(router_win)
+        return recs
+
+    summarize = staticmethod(lambda recs: ServingEngine.summarize(recs))
 
 
 @dataclass
 class ServingEngine:
     prof: ProfileTable
-    gateway: Gateway
+    gateway: WindowedGateway
     executors: list
     workload: VideoStreamWorkload
 
@@ -31,8 +160,8 @@ class ServingEngine:
     def build(cls, prof: ProfileTable, *, policy="MO", gamma=0.5, delta=20.0,
               n_streams=8, mode="modelled", tiers=None, online=False,
               dispatch=None, img_res=64, seed=0):
-        gw = Gateway(prof, policy=policy, gamma=gamma, delta=delta,
-                     online=online, dispatch=dispatch)
+        gw = WindowedGateway(prof, policy=policy, gamma=gamma, delta=delta,
+                             online=online, dispatch=dispatch)
         tiers = tiers or ["ssd_v1"] * prof.n_pairs
         exs = [Executor(i, str(prof.names[i] if prof.names else i), prof,
                         mode=mode, tier=tiers[i])
@@ -43,7 +172,8 @@ class ServingEngine:
 
     def run(self, n_requests: int = 200, concurrency: int | None = None):
         """Closed-loop: ``concurrency`` streams each keep one request in
-        flight (Locust semantics). Returns per-request record arrays."""
+        flight (Locust semantics). Returns per-request record arrays.
+        Per-request = windows of one on the windowed gateway."""
         conc = concurrency or self.workload.n_streams
         recs = {k: [] for k in ("latency", "energy", "map", "pair", "g_true",
                                 "g_est", "q")}
@@ -58,17 +188,19 @@ class ServingEngine:
                           payload=frame)
             q = np.array([ex.outstanding(now) for ex in self.executors],
                          np.float32)
-            pair, g_est = self.gateway.route(stream, q)
+            ps, gs, _qa = self.gateway.route_window([stream], q)
+            pair, g_est = int(ps[0]), int(gs[0])
             resp = self.executors[pair].submit(req, g_true, now)
             if resp.detected_count >= 0:      # real detector output
-                self.gateway.observe_detections(stream, resp.detected_count)
+                self.gateway.observe_detections_window(
+                    [stream], [resp.detected_count])
             else:                             # modelled detection count
                 det = self.workload.noisy_count(
                     stream, float(self.prof.mAP[pair, g_true]))
-                self.gateway.observe_detections(stream, det)
-            self.gateway.observe_latency(pair, g_est,
-                                         (resp.finish_s - now) * 1000.0,
-                                         resp.energy_mwh)
+                self.gateway.observe_detections_window([stream], [det])
+            self.gateway.observe_window([pair], [g_est],
+                                        [(resp.finish_s - now) * 1000.0],
+                                        [resp.energy_mwh])
             recs["latency"].append(resp.finish_s - now)
             recs["energy"].append(resp.energy_mwh)
             recs["map"].append(resp.map_proxy)

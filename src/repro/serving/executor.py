@@ -10,6 +10,11 @@ Two modes:
 
 Each executor is a FIFO: ``submit`` returns the response-ready time given
 the queue; the gateway reads ``outstanding(now)`` as q_p.
+
+:class:`AsyncExecutorPool` is the windowed request plane's counterpart:
+the whole fleet's queues in one object, fed a routed window at a time
+(``submit_window`` never blocks — completions surface asynchronously via
+``poll``, usually out of submission order).
 """
 
 from __future__ import annotations
@@ -23,7 +28,7 @@ import numpy as np
 
 from repro.core.profiles import ProfileTable
 from repro.models import detection
-from repro.serving.request import Request, Response
+from repro.serving.request import Request, Response, ResponseWindow
 
 
 @dataclass
@@ -70,3 +75,111 @@ class Executor:
             detected_count=count,
             energy_mwh=float(self.prof.E[self.pair, g_true]),
             map_proxy=float(self.prof.mAP[self.pair, g_true]))
+
+
+@dataclass
+class AsyncExecutorPool:
+    """The whole fleet's executor queues as one non-blocking object.
+
+    ``submit_window`` enqueues a routed window — each pair's requests
+    serialize FIFO behind that pair's backlog, with modelled service
+    times from the profile table — and returns immediately with the
+    *scheduled* finish times; the gateway's dispatch loop never blocks on
+    simulated service completion. Completions surface later through
+    :meth:`poll`, in completion order and (because pairs drain at
+    different speeds) generally OUT of submission order — exactly the
+    feedback stream the windowed observation path has to digest.
+    :meth:`depths` is the live per-pair in-flight count the next routing
+    window scores against (q_p of Algorithm 1).
+
+    Accounting invariant (property-tested): every completion polled was
+    previously submitted, so queue depths never go negative and
+    ``submitted == polled + in_flight`` at every instant.
+    """
+
+    prof: ProfileTable
+
+    def __post_init__(self):
+        if self.prof.is_stacked:
+            raise ValueError("executor pool serves one fleet, not a "
+                             "stacked ensemble")
+        P = self.prof.n_pairs
+        self._T_s = np.asarray(self.prof.T, np.float64) / 1000.0
+        self._E = np.asarray(self.prof.E, np.float64)
+        self._M = np.asarray(self.prof.mAP, np.float64)
+        self._avail = np.zeros(P, np.float64)   # per-pair FIFO frontier
+        self._depth = np.zeros(P, np.int64)
+        self.submitted = 0
+        self.polled = 0
+        # pending completions, appended per window, drained by poll()
+        self._pending: list[ResponseWindow] = []
+
+    @property
+    def in_flight(self) -> int:
+        return int(self._depth.sum())
+
+    def apply_drift(self, t_scale, e_scale=None) -> None:
+        """Scale the TRUE service times (and optionally energies) from
+        now on — thermal throttling, a model swap. Balancers are never
+        told; an adaptive gateway finds out through its windowed
+        observations (cf. ``DriftSchedule`` in the simulator)."""
+        self._T_s = self._T_s * np.asarray(t_scale, np.float64)
+        if e_scale is not None:
+            self._E = self._E * np.asarray(e_scale, np.float64)
+
+    def depths(self) -> np.ndarray:
+        """(P,) live queue depths — q_p for the next admission window."""
+        return self._depth.astype(np.float32).copy()
+
+    def submit_window(self, pairs, groups, now: float, *, est_groups=None,
+                      stream_ids=None, rids=None) -> ResponseWindow:
+        """Enqueue one routed window at time ``now`` (non-blocking).
+
+        ``pairs``: (W,) routing decisions; ``groups``: (W,) TRUE
+        complexity groups (drive modelled service time/energy). Returns
+        the scheduled :class:`ResponseWindow` immediately — the same
+        records :meth:`poll` will surface once ``now`` passes their
+        finish times."""
+        pairs = np.asarray(pairs, np.int64)
+        groups = np.asarray(groups, np.int64)
+        W = pairs.shape[0]
+        svc = self._T_s[pairs, groups]
+        finish = np.empty(W, np.float64)
+        for p in np.unique(pairs):              # FIFO within each pair
+            m = pairs == p
+            finish[m] = max(now, self._avail[p]) + np.cumsum(svc[m])
+            self._avail[p] = finish[m][-1]
+        np.add.at(self._depth, pairs, 1)
+        self.submitted += W
+
+        def arr(x, dtype=np.int64):
+            return np.zeros(W, dtype) if x is None else np.asarray(x, dtype)
+
+        resp = ResponseWindow(
+            rids=arr(rids), stream_ids=arr(stream_ids), pairs=pairs,
+            groups=groups, est_groups=arr(est_groups),
+            arrival_s=np.full(W, float(now)), finish_s=finish,
+            energy_mwh=self._E[pairs, groups],
+            map_proxy=self._M[pairs, groups])
+        self._pending.append(resp)
+        return resp
+
+    def poll(self, now: float) -> ResponseWindow:
+        """Drain every completion with ``finish_s <= now``, merged across
+        pairs into ONE window in completion order (possibly empty;
+        ``poll(np.inf)`` drains everything)."""
+        if not self._pending:
+            return ResponseWindow()
+        cat = {f: np.concatenate([getattr(w, f) for w in self._pending])
+               for f in ("rids", "stream_ids", "pairs", "groups",
+                         "est_groups", "arrival_s", "finish_s",
+                         "energy_mwh", "map_proxy")}
+        done = cat["finish_s"] <= now
+        keep = {f: v[~done] for f, v in cat.items()}
+        self._pending = [] if keep["pairs"].size == 0 \
+            else [ResponseWindow(**keep)]
+        order = np.argsort(cat["finish_s"][done], kind="stable")
+        out = ResponseWindow(**{f: v[done][order] for f, v in cat.items()})
+        np.subtract.at(self._depth, out.pairs, 1)
+        self.polled += out.size
+        return out

@@ -1,26 +1,51 @@
-"""The gateway: per-request (or windowed) policy decisions.
+"""The request plane's router: micro-batched admission, device-resident
+state.
 
-Holds the offline ProfileTable, a pluggable dispatch engine
-(``repro.core.dispatch`` — the SAME ``init``/``select``/``observe`` code
-the batched simulator threads through its scan), and the per-stream
-estimator state (last detected count). Per-request decisions use the
-jitted Algorithm-1 scorer via the engine; batched routing windows go
-through the fused ``moscore`` Pallas kernel against the engine's belief
-tables — identical results (tests assert so). With an
-:class:`~repro.core.dispatch.OnlineDispatch` engine the gateway folds
-every observed latency/energy back into the EWMA belief state
-(per-request ``observe_latency`` or the batched ``observe_window``).
+:class:`WindowedGateway` is the serving plane's primary router. It admits
+requests in *windows*: one jitted device program routes the whole window —
+estimator gather (last detected count per stream, a device-resident
+``(n_streams,)`` array, not a host dict), Algorithm-1 scoring with
+intra-window queue feedback, and the dispatch-state advance — so the
+router's cost per request is a window's worth of XLA work divided by W
+instead of a Python loop body. The MO hot path runs the fused ``moscore``
+kernel (``repro.kernels.moscore``), backend-aware: the compiled Pallas
+kernel on TPU, the bit-identical XLA reference scan elsewhere
+(``backend="auto"``). Every other policy routes through the dispatch
+engine's :meth:`~repro.core.dispatch.DispatchEngine.select_window` scan —
+the SAME ``init``/``select``/``observe`` code the batched simulator
+threads through its scan, so simulation and serving still run one
+stateful code path.
+
+Observations flow back in windows too: ``observe_window`` folds a batch
+of completed-request measurements into the dispatch engine's belief state
+(one fused program, via the engine's ``observe_window`` hook), and
+``observe_detections_window`` scatters detected counts into the
+device-resident estimator state (duplicate streams resolve to the
+*latest* entry, matching a sequential replay).
+
+Per-request randomness is derived by ``fold_in(key, request_index)``
+from an absolute request counter — NOT by chain-splitting a key per
+call — so the key stream is invariant to how requests are partitioned
+into windows: two gateways with the same seed and different window sizes
+route identical request streams identically (regression-tested).
 
 A gateway can be built straight from a
-:class:`~repro.core.scenario.Scenario` — ``Gateway(scenario)`` — so
-simulation and serving share ONE config object: the scenario's profile,
-policy, γ, Δ, dispatch engine and seed all apply to knobs left at their
-constructor defaults, while any explicitly passed non-default kwarg
-(``policy=``, ``gamma=``, ``dispatch=``, ...) wins — tweak one knob on
-a shared spec without losing the rest."""
+:class:`~repro.core.scenario.Scenario` — ``WindowedGateway(scenario)`` —
+so simulation and serving share ONE config object: the scenario's
+profile, policy, γ, Δ, dispatch engine and seed all apply to knobs left
+at their constructor defaults, while any explicitly passed non-default
+kwarg (``policy=``, ``gamma=``, ``dispatch=``, ...) wins.
+
+:class:`Gateway` — the original per-request router — remains as a thin
+deprecation-warned shim: ``route`` is ``route_window`` with a window of
+one, proven bit-identical to the windowed path by
+``tests/test_serving_plane.py``. See ``docs/serving.md`` for the
+architecture guide and the migration table.
+"""
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -33,23 +58,36 @@ from repro.core.dispatch import (DispatchEngine, OnlineDispatch,
                                  StaticDispatch)
 from repro.core.policies import POLICY_CODES
 from repro.core.profiles import ProfileTable
-from repro.kernels.moscore import moscore_route
+from repro.kernels.moscore import moscore_route, resolve_backend
+
+i32 = jnp.int32
+f32 = jnp.float32
 
 
 @dataclass
-class Gateway:
-    prof: ProfileTable    # or a repro.core.scenario.Scenario (resolved
-                          # in __post_init__; its policy/γ/Δ/dispatch/
-                          # seed apply)
+class WindowedGateway:
+    """Windowed (micro-batched) router over a heterogeneous fleet.
+
+    ``prof`` is a :class:`~repro.core.profiles.ProfileTable` or a
+    :class:`~repro.core.scenario.Scenario` (resolved in
+    ``__post_init__``; its policy/γ/Δ/dispatch/seed apply to knobs left
+    at their defaults). ``n_streams`` is the estimator-state capacity
+    (stream ids must stay below it); ``backend`` picks the MO routing
+    kernel (``"auto"`` | ``"pallas"`` | ``"xla"``, see
+    ``repro.kernels.moscore``)."""
+
+    prof: ProfileTable
     policy: str = "MO"
     gamma: float = 0.5
     delta: float = 20.0
     online: bool = False      # shorthand for dispatch=OnlineDispatch()
-    seed: int = 1234          # seeds the RND baseline's stream
+    seed: int = 1234          # seeds the per-request key stream (RND)
     dispatch: DispatchEngine | None = None
-    _stream_counts: dict = field(default_factory=dict)
-    _dstate: Any = None
-    _rng: Any = None
+    n_streams: int = 1024
+    backend: str = "auto"
+    _counts: Any = field(default=None, repr=False)
+    _dstate: Any = field(default=None, repr=False)
+    _step: int = field(default=0, repr=False)
 
     def __post_init__(self):
         from repro.core.scenario import Scenario
@@ -58,9 +96,9 @@ class Gateway:
             self.prof = sc.resolve_profile()
             # the scenario's knobs apply to every field still at its
             # constructor default; an explicitly passed kwarg wins, so
-            # Gateway(sc, policy="LT") tweaks one knob on a shared spec
-            # (passing a kwarg AT its default defers to the scenario —
-            # a dataclass cannot see the difference)
+            # WindowedGateway(sc, policy="LT") tweaks one knob on a
+            # shared spec (passing a kwarg AT its default defers to the
+            # scenario — a dataclass cannot see the difference)
             for name, default, value in (
                     ("policy", "MO", sc.policy),
                     ("gamma", 0.5, sc.gamma),
@@ -76,90 +114,185 @@ class Gateway:
                     and not (self.online and sc.dispatch is None):
                 self.dispatch = sc.resolve_dispatch()
         if self.prof.is_stacked:
-            raise ValueError("Gateway serves one fleet; scenario/profile "
+            raise ValueError("gateway serves one fleet; scenario/profile "
                              "is a stacked ensemble")
         if self.dispatch is None:
             self.dispatch = OnlineDispatch() if self.online \
                 else StaticDispatch()
         self.online = isinstance(self.dispatch, OnlineDispatch)
-        self._rng = jax.random.PRNGKey(self.seed)
+        self.backend = resolve_backend(self.backend)
+        self._key = jax.random.PRNGKey(self.seed)
+        self._counts = jnp.zeros((self.n_streams,), i32)
         self._dstate = self.dispatch.init(self.prof)
+        self._step = 0
+
         code = POLICY_CODES[self.policy]
         engine, prof = self.dispatch, self.prof
+        n_groups, n_streams = prof.n_groups, self.n_streams
+        gamma, delta = float(self.gamma), float(self.delta)
+        backend, base_key = self.backend, self._key
 
         @jax.jit
-        def _select(state, g, q, rnd, gamma, delta):
-            return engine.select(state, prof, code, g, q, rnd, gamma, delta)
+        def _route_fused(state, counts, q0, ids):
+            # MO fast path: estimator gather + the fused routing kernel
+            # against the engine's current belief tables; rr advances by
+            # W exactly as W select() calls would have advanced it
+            gs = EST.group_of_count(counts[ids], n_groups)
+            tbl = engine.tables(state, prof)
+            pairs, q = moscore_route(tbl.T, tbl.E, tbl.mAP, gs,
+                                     q0.astype(f32), delta=delta,
+                                     gamma=gamma, backend=backend)
+            state = {**state, "rr": state["rr"] + ids.shape[0]}
+            return pairs, gs, q, state
 
         @jax.jit
-        def _observe(state, p, g, t_ms, e_mwh):
+        def _route_scan(state, counts, q0, ids, step0):
+            # generic path (every policy): the engine's select_window
+            # scan, with per-request keys folded from the ABSOLUTE
+            # request index — window-partition invariant
+            gs = EST.group_of_count(counts[ids], n_groups)
+            idx = step0 + jnp.arange(ids.shape[0], dtype=i32)
+            keys = jax.vmap(lambda i: jax.random.fold_in(base_key, i))(idx)
+            pairs, q, state = engine.select_window(
+                state, prof, code, gs, q0.astype(f32), keys,
+                jnp.asarray(gamma, f32), jnp.asarray(delta, f32))
+            return pairs, gs, q, state
+
+        @jax.jit
+        def _obs_counts(counts, ids, cnts):
+            # last-write-wins scatter: scatter-MAX of the window index
+            # per stream is well-defined under duplicates (unlike
+            # .at[].set), so the result is bit-identical to a sequential
+            # per-request replay
+            w = ids.shape[0]
+            pos = jnp.full((n_streams,), -1, i32).at[ids].max(
+                jnp.arange(w, dtype=i32))
+            latest = cnts[jnp.clip(pos, 0)]
+            return jnp.where(pos >= 0, latest, counts)
+
+        @jax.jit
+        def _observe_win(state, pairs, groups, t_ms, e_mwh):
+            return engine.observe_window(state, pairs, groups, t_ms,
+                                         e_mwh)
+
+        @jax.jit
+        def _observe_one(state, p, g, t_ms, e_mwh):
             return engine.observe(state, p, g, t_ms, e_mwh)
 
-        self._select = _select
-        self._observe = _observe
+        self._route_fused = _route_fused
+        self._route_scan = _route_scan
+        self._obs_counts = _obs_counts
+        self._observe_win = _observe_win
+        self._observe_one = _observe_one
 
-    # -- estimator ----------------------------------------------------------
-    def estimate_group(self, stream_id: int) -> int:
-        cnt = self._stream_counts.get(stream_id, 0)
-        return int(EST.group_of_count(jnp.asarray(cnt), self.prof.n_groups))
+    # -- estimator state ----------------------------------------------------
 
-    def observe_detections(self, stream_id: int, detected_count: int) -> None:
-        self._stream_counts[stream_id] = detected_count
+    def _check_streams(self, ids: np.ndarray):
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_streams):
+            raise ValueError(
+                f"stream id out of range [0, {self.n_streams}) — raise "
+                f"n_streams= (gateway estimator-state capacity)")
 
-    def observe_latency(self, pair: int, group: int, latency_ms: float,
-                        energy_mwh: float | None = None) -> None:
-        """Fold one completed request's measurements into the dispatch
-        state (skipped entirely for non-adaptive engines — the hot
-        serving path pays nothing under :class:`StaticDispatch`)."""
-        if not self.dispatch.adaptive:
-            return
-        self._dstate = self._observe(
-            self._dstate, jnp.asarray(pair, jnp.int32),
-            jnp.asarray(group, jnp.int32),
-            jnp.asarray(latency_ms, jnp.float32),
-            None if energy_mwh is None
-            else jnp.asarray(energy_mwh, jnp.float32))
+    def observe_detections_window(self, stream_ids, detected_counts):
+        """Scatter a batch of detected object counts into the
+        device-resident estimator state (one program; the latest entry
+        wins for a stream that completes twice in one window)."""
+        ids = np.asarray(stream_ids, np.int64)
+        self._check_streams(ids)
+        self._counts = self._obs_counts(
+            self._counts, jnp.asarray(ids, i32),
+            jnp.asarray(np.asarray(detected_counts), i32))
+
+    # -- dispatch-state observation -----------------------------------------
 
     def observe_window(self, pairs, groups, latency_ms,
                        energy_mwh=None) -> None:
-        """Batched :meth:`observe_latency` over a completed routing window
-        — the engine's own ``observe_window`` hook (for
-        :class:`OnlineDispatch`, one fused device program equivalent to
-        per-request observes)."""
+        """Fold a completed window's measurements into the dispatch
+        state via the engine's ``observe_window`` hook — one fused device
+        program (skipped entirely for non-adaptive engines: the hot
+        serving path pays nothing under :class:`StaticDispatch`)."""
         if not self.dispatch.adaptive:
             return
-        self._dstate = self.dispatch.observe_window(
-            self._dstate, jnp.asarray(pairs, jnp.int32),
-            jnp.asarray(groups, jnp.int32),
-            jnp.asarray(latency_ms, jnp.float32),
+        self._dstate = self._observe_win(
+            self._dstate, jnp.asarray(np.asarray(pairs), i32),
+            jnp.asarray(np.asarray(groups), i32),
+            jnp.asarray(np.asarray(latency_ms), f32),
             None if energy_mwh is None
-            else jnp.asarray(energy_mwh, jnp.float32))
+            else jnp.asarray(np.asarray(energy_mwh), f32))
 
     def _tables(self) -> ProfileTable:
         return self.dispatch.tables(self._dstate, self.prof)
 
     # -- decisions ----------------------------------------------------------
-    def route(self, stream_id: int, queue_depths) -> tuple[int, int]:
-        """One request -> (pair, est_group)."""
-        g = self.estimate_group(stream_id)
-        self._rng, k = jax.random.split(self._rng)
-        p, self._dstate = self._select(
-            self._dstate, jnp.asarray(g, jnp.int32),
-            jnp.asarray(queue_depths, jnp.float32), k,
-            jnp.asarray(self.gamma, jnp.float32),
-            jnp.asarray(self.delta, jnp.float32))
-        return int(p), g
 
     def route_window(self, stream_ids, queue_depths):
-        """Batched routing window through the fused kernel (MO policy only);
-        returns (pairs (W,), est_groups (W,), q_after). Scores against the
-        dispatch engine's current belief tables, exactly like
-        :meth:`route`."""
-        assert self.policy == "MO", "windowed routing is the MO fast path"
-        gs = jnp.asarray([self.estimate_group(s) for s in stream_ids],
-                         jnp.int32)
-        p = self._tables()
-        pairs, q = moscore_route(p.T, p.E, p.mAP, gs,
-                                 jnp.asarray(queue_depths, jnp.float32),
-                                 delta=self.delta, gamma=self.gamma)
-        return np.asarray(pairs), np.asarray(gs), np.asarray(q)
+        """Route one admission window in one jitted call.
+
+        ``stream_ids``: (W,) ints below ``n_streams``; ``queue_depths``:
+        (P,) live queue depths at admission. Returns ``(pairs (W,),
+        est_groups (W,), q_after (P,))`` as device arrays — queue
+        feedback is applied *within* the window (decision w+1 sees
+        decision w's bump), and ``q_after`` is the depths to thread into
+        the next window when no executor feedback arrives in between.
+        Bit-identical for any window partition of the same request
+        stream (the per-request :class:`Gateway` shim is the W=1 case).
+        """
+        ids = np.asarray(stream_ids, np.int64)
+        self._check_streams(ids)
+        ids_d = jnp.asarray(ids, i32)
+        q0 = jnp.asarray(queue_depths, f32)   # no-copy for device arrays
+        if self.policy == "MO":
+            pairs, gs, q, self._dstate = self._route_fused(
+                self._dstate, self._counts, q0, ids_d)
+        else:
+            pairs, gs, q, self._dstate = self._route_scan(
+                self._dstate, self._counts, q0, ids_d,
+                jnp.asarray(self._step, i32))
+        self._step += int(ids.shape[0])
+        return pairs, gs, q
+
+
+class Gateway(WindowedGateway):
+    """Per-request shim over the windowed request plane (deprecated).
+
+    ``route`` / ``observe_detections`` / ``observe_latency`` are the
+    W=1 forms of the windowed hooks — bit-identical to
+    :class:`WindowedGateway` on the same request stream (asserted in
+    ``tests/test_serving_plane.py``), just W device programs where the
+    windowed path needs one. New code should admit windows; see the
+    migration table in ``docs/serving.md``."""
+
+    def __post_init__(self):
+        from repro.core.scenario import LegacyAPIWarning
+        warnings.warn(
+            "repro.serving.Gateway routes one request per device program; "
+            "it is a deprecated shim over the windowed request plane — "
+            "use WindowedGateway.route_window / ServingPlane (see "
+            "docs/serving.md for the migration table)",
+            LegacyAPIWarning, stacklevel=3)
+        super().__post_init__()
+
+    # -- estimator ----------------------------------------------------------
+    def estimate_group(self, stream_id: int) -> int:
+        return int(EST.group_of_count(self._counts[int(stream_id)],
+                                      self.prof.n_groups))
+
+    def observe_detections(self, stream_id: int, detected_count: int) -> None:
+        self.observe_detections_window([stream_id], [detected_count])
+
+    def observe_latency(self, pair: int, group: int, latency_ms: float,
+                        energy_mwh: float | None = None) -> None:
+        """Fold one completed request's measurements into the dispatch
+        state (skipped entirely for non-adaptive engines)."""
+        if not self.dispatch.adaptive:
+            return
+        self._dstate = self._observe_one(
+            self._dstate, jnp.asarray(pair, i32), jnp.asarray(group, i32),
+            jnp.asarray(latency_ms, f32),
+            None if energy_mwh is None else jnp.asarray(energy_mwh, f32))
+
+    # -- decisions ----------------------------------------------------------
+    def route(self, stream_id: int, queue_depths) -> tuple[int, int]:
+        """One request -> (pair, est_group): a window of one."""
+        pairs, gs, _q = self.route_window([stream_id], queue_depths)
+        return int(pairs[0]), int(gs[0])

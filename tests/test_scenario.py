@@ -453,37 +453,40 @@ def test_profile_registry_extensible():
 # ------------------------------------------------- serving gateway ----
 
 def test_gateway_accepts_scenario():
-    """Gateway(scenario) adopts the scenario's profile, policy, gamma,
-    delta, seed and dispatch engine — sim and serving share ONE config
-    object."""
-    from repro.serving.gateway import Gateway
+    """WindowedGateway(scenario) adopts the scenario's profile, policy,
+    gamma, delta, seed and dispatch engine — sim and serving share ONE
+    config object (the deprecated per-request Gateway shim inherits the
+    identical resolution; tests/test_serving_plane.py pins the shim)."""
+    from repro.serving.gateway import WindowedGateway
 
     sc = Scenario(policy="LT", gamma=0.75, delta=5.0, seed=7,
                   dispatch=OnlineDispatch(window=4))
-    gw = Gateway(sc)
+    gw = WindowedGateway(sc)
     assert gw.policy == "LT" and gw.gamma == 0.75 and gw.delta == 5.0
     assert gw.seed == 7 and gw.dispatch == OnlineDispatch(window=4)
     assert gw.online is True       # any OnlineDispatch flavour counts
     np.testing.assert_array_equal(
         np.asarray(gw.prof.T), np.asarray(sc.resolve_profile().T))
     # identical decisions to the kwarg-built gateway
-    ref = Gateway(paper_fleet(), policy="LT", gamma=0.75, delta=5.0,
-                  seed=7, dispatch=OnlineDispatch(window=4))
+    ref = WindowedGateway(paper_fleet(), policy="LT", gamma=0.75,
+                          delta=5.0, seed=7,
+                          dispatch=OnlineDispatch(window=4))
     q = np.zeros(5, np.float32)
-    for s in range(4):
-        assert gw.route(s, q) == ref.route(s, q)
+    np.testing.assert_array_equal(
+        np.asarray(gw.route_window(range(4), q)[0]),
+        np.asarray(ref.route_window(range(4), q)[0]))
     with pytest.raises(ValueError, match="stacked"):
-        Gateway(Scenario(profile=stack_profiles(
+        WindowedGateway(Scenario(profile=stack_profiles(
             [paper_fleet(), paper_fleet()])))
     # a redundant online=True must NOT swap the scenario's tuned engine
     # for a default OnlineDispatch(); it only fills in when the scenario
     # left dispatch unset
-    tuned = Gateway(sc, online=True)
+    tuned = WindowedGateway(sc, online=True)
     assert tuned.dispatch == OnlineDispatch(window=4)
-    bare = Gateway(Scenario(), online=True)
+    bare = WindowedGateway(Scenario(), online=True)
     assert bare.dispatch == OnlineDispatch()
     # explicitly passed non-default knobs win over the scenario (tweak
     # one knob on a shared spec); untouched knobs adopt the scenario's
-    tweaked = Gateway(sc, policy="HA", gamma=0.9)
+    tweaked = WindowedGateway(sc, policy="HA", gamma=0.9)
     assert tweaked.policy == "HA" and tweaked.gamma == 0.9
     assert tweaked.delta == 5.0 and tweaked.seed == 7

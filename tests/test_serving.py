@@ -4,6 +4,7 @@ adaptation, hierarchical balancing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import online as ONL
 from repro.core.dispatch import OnlineDispatch, StaticDispatch
@@ -38,15 +39,17 @@ def test_engine_real_detectors_close_the_loop():
     assert len(np.unique(recs["pair"])) >= 2
 
 
+@pytest.mark.filterwarnings("ignore::repro.core.scenario.LegacyAPIWarning")
 def test_gateway_respects_feasibility():
     prof = paper_fleet()
     gw = Gateway(prof, policy="MO", delta=10.0)
-    gw._stream_counts[0] = 4          # complex scene
+    gw.observe_detections(0, 4)       # complex scene
     pair, g = gw.route(0, np.zeros(5))
     thr = float(jnp.max(prof.mAP[:, g])) - 10.0
     assert float(prof.mAP[pair, g]) >= thr
 
 
+@pytest.mark.filterwarnings("ignore::repro.core.scenario.LegacyAPIWarning")
 def test_gateway_seedable_rng():
     """Same seed -> identical RND decision streams; different seeds
     diverge (the constructor's seed= replaced a hardcoded PRNGKey)."""
@@ -62,6 +65,7 @@ def test_gateway_seedable_rng():
     assert Gateway(prof).seed == 1234          # historical default kept
 
 
+@pytest.mark.filterwarnings("ignore::repro.core.scenario.LegacyAPIWarning")
 def test_gateway_runs_dispatch_engine_state():
     """The gateway drives the SAME DispatchEngine hooks as the simulator:
     static discards observations; online folds them into the EWMA belief
@@ -82,6 +86,7 @@ def test_gateway_runs_dispatch_engine_state():
     assert int(st_gw._dstate["rr"]) == 1
 
 
+@pytest.mark.filterwarnings("ignore::repro.core.scenario.LegacyAPIWarning")
 def test_gateway_window_matches_per_request_online():
     """Regression (ISSUE 4): with online=True, the windowed moscore path
     must make the same decisions as per-request route() calls with manual
