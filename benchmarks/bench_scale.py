@@ -1,6 +1,10 @@
 """Large-scale posture: decision latency and simulator behaviour as the
 fleet grows from the paper's 5 nodes toward thousands (the regime the
-multi-pod deployment targets; paper §V names this as the open problem)."""
+multi-pod deployment targets; paper §V names this as the open problem),
+plus the scaled USER axis: one fused ``run()`` at 10^5 users via
+``Scenario(user_block=...)`` block decomposition, reporting both
+configs/sec (block rows through the device program) and users/sec — the
+numbers the user-scaling regression gate watches."""
 
 import time
 
@@ -12,6 +16,7 @@ from repro.core.hierarchy import hierarchical_select, pod_aggregate
 from repro.core.policies import mo_select
 from repro.core.profiles import stack_profiles, synthetic_fleet
 from repro.core.scenario import Scenario, Sweep
+from repro.core.useraxis import n_user_blocks
 from repro.kernels.moscore import moscore_route
 
 
@@ -81,4 +86,23 @@ def run() -> list[str]:
     SC.run(ens_sc, sw)
     t_ens = time.perf_counter() - t0
     rows.append(f"scale.fleet_ensemble_4x63cfg_warm_s,{t_ens:.2f},,,")
+
+    # user axis: n_users=10^5 as ONE fused program (98 balancer-replica
+    # block rows of 1024 users riding the config axis, segment-reduced
+    # back to one config's metrics). users/sec is the headline the
+    # user-scaling test suite pins at >= 10x the looped dense path;
+    # 10^6 runs the same way (tests/test_useraxis.py, opt-in marker).
+    N, C = 100_000, 1024
+    sc_u = Scenario(n_users=N, n_requests=32, user_block=C,
+                    warmup_frac=0.25)
+    SC.run(sc_u)                                      # compile
+    t0 = time.perf_counter()
+    u = SC.run(sc_u)
+    t_user = time.perf_counter() - t0
+    k = n_user_blocks(N, C)
+    rows.append(f"scale.user_axis_1e5_warm_s,{t_user:.2f},,"
+                f"{u.scalar('latency_ms'):.0f},{u.scalar('map'):.1f}")
+    rows.append(f"scale.user_axis_1e5_users_per_sec,{N / t_user:.0f},,,")
+    rows.append(f"scale.user_axis_1e5_configs_per_sec,"
+                f"{k / t_user:.1f},,,")
     return rows

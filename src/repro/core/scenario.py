@@ -95,8 +95,10 @@ def register_profile(name: str, builder: Callable[[], ProfileTable]):
 CONFIG_AXES = ("policy", "n_users", "gamma", "delta", "stickiness",
                "oracle_estimator", "seed")
 #: Scenario fields that fix the compiled program's *shape*: axes over
-#: them run one fused program per value.
-STATIC_AXES = ("n_requests", "warmup_frac")
+#: them run one fused program per value. ``user_block`` is the user-axis
+#: block size (``repro.core.useraxis``) — it changes how many block rows
+#: each config expands into, a grid shape.
+STATIC_AXES = ("n_requests", "warmup_frac", "user_block")
 #: Scenario component fields: ``drift`` axes over same-shape schedules
 #: fuse as an extra vmapped batch axis; same-shape ``profile`` axes fuse
 #: as a stacked fleet axis; the rest loop one fused program per value.
@@ -140,6 +142,15 @@ class Scenario:
     workload: WorkloadSource | None = None
     dispatch: DispatchEngine | None = None
     drift: DriftSchedule | None = None
+    user_block: int | None = None
+    # user-axis block size (repro.core.useraxis): n_users > user_block
+    # decomposes into ceil(n_users/user_block) independent balancer
+    # replicas of <= user_block users, run as extra config rows and
+    # segment-reduced back — the scaling path to 10^5..10^6-user fleets.
+    # None (default) = one balancer, the paper's single-queue model.
+    # Part of the scientific identity (it changes the physical system
+    # when n_users > user_block), so it enters the spec/hash — but only
+    # when set, keeping every existing scenario's hash unchanged.
     mesh: int | str | None = None
 
     def __post_init__(self):
@@ -155,6 +166,12 @@ class Scenario:
         if self.policy not in POLICY_CODES:
             raise ValueError(f"unknown policy {self.policy!r}; one of "
                              f"{sorted(POLICY_CODES)}")
+        if self.user_block is not None and (
+                not isinstance(self.user_block, int)
+                or isinstance(self.user_block, bool)
+                or self.user_block <= 0):
+            raise ValueError("user_block must be None or a positive int, "
+                             f"got {self.user_block!r}")
         if not (self.mesh is None or self.mesh == "local"
                 or (isinstance(self.mesh, int)
                     and not isinstance(self.mesh, bool)
@@ -195,7 +212,7 @@ class Scenario:
         exactly. Components serialize by value (profiles by registry name
         when symbolic, inline tables otherwise; traces inline their
         counts), so a spec is self-contained."""
-        return {
+        spec = {
             "schema": SCHEMA,
             "profile": _profile_to_json(self.profile),
             "policy": self.policy,
@@ -212,6 +229,11 @@ class Scenario:
             "drift": _drift_to_json(self.drift),
             "mesh": self.mesh,
         }
+        # only when set: the key's absence keeps every pre-user-axis
+        # scenario's canonical spec (and hash) byte-identical
+        if self.user_block is not None:
+            spec["user_block"] = int(self.user_block)
+        return spec
 
     @classmethod
     def from_json(cls, spec: dict | str) -> "Scenario":
@@ -237,6 +259,8 @@ class Scenario:
             workload=_workload_from_json(spec.get("workload")),
             dispatch=_dispatch_from_json(spec.get("dispatch")),
             drift=_drift_from_json(spec.get("drift")),
+            user_block=(None if spec.get("user_block") is None
+                        else int(spec["user_block"])),
             mesh=spec.get("mesh"),
         )
 
@@ -657,7 +681,16 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
         cfgs = [SIM.SimConfig(**{**base, **dict(zip(config_names, vals))})
                 for vals in itertools.product(
                     *(v for _, v in config_axes))]
-        grid = SIM._make_grid(prof, cfgs, workload=workload)
+        if sc.user_block is None:
+            grid, segments = SIM._make_grid(prof, cfgs,
+                                            workload=workload), None
+        else:
+            # user-blocked grid: each config's balancer-replica blocks
+            # are extra rows on the config axis (vmapped/sharded as
+            # usual), segment-reduced back to per-config metrics below
+            grid, segments = SIM._make_user_grid(prof, cfgs,
+                                                 sc.user_block,
+                                                 workload=workload)
 
         if drift_axis is not None:
             out = _drift_axis_fused(prof, workload, dispatch,
@@ -667,6 +700,9 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
             out = SIM._sweep_summaries(prof, workload, dispatch, drift,
                                        grid, n_requests=n_requests,
                                        warmup=warmup, mesh=mesh_obj)
+        if segments is not None:
+            out = SIM.aggregate_block_summaries(out, segments, len(cfgs),
+                                                block_axis=-1)
 
         block_shape = ((len(drift_axis[1]),) if drift_axis else ()) \
             + ((prof.n_fleets,) if prof.is_stacked else ()) \
@@ -719,6 +755,18 @@ def records(scenario: Scenario, sweep: Sweep | None = None):
     prof = scenario.resolve_profile()
     workload = scenario.resolve_workload()
     dispatch = scenario.resolve_dispatch()
+    if scenario.user_block is not None:
+        # single-block configs run the identical program, so records are
+        # well-defined (and bit-identical to user_block=None); multi-
+        # block configs have no single per-request stream to return
+        max_users = max([scenario.n_users]
+                        + [max(v) for n, v in (sweep.axes if sweep else ())
+                           if n == "n_users"])
+        if max_users > scenario.user_block:
+            raise ValueError(
+                "records() needs n_users <= user_block (a multi-block "
+                "config is K independent balancer replicas with no "
+                "single record stream); use run() for aggregate metrics")
     if sweep is None or not sweep.axes:
         return SIM._simulate(prof, scenario.to_config(),
                              workload=workload, dispatch=dispatch,

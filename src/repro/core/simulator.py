@@ -98,6 +98,8 @@ from repro.core.dispatch import (DispatchEngine, DriftSchedule,
                                  default_dispatch)
 from repro.core.policies import POLICY_CODES
 from repro.core.profiles import ProfileTable
+from repro.core.useraxis import (aggregate_block_summaries, block_segments,
+                                 block_sizes)
 from repro.core.workload import (MarkovWorkload, WorkloadSource,
                                  _init_draws, default_workload,
                                  grid_cache_clear, grid_cache_info)
@@ -308,6 +310,138 @@ def _make_grid(prof: ProfileTable, configs,
         true0=jnp.asarray(true0),
         phase=jnp.asarray(phase),
     )
+
+
+def _expand_user_blocks(cfgs, user_block: int):
+    """Decompose each config into its user blocks (balancer replicas, see
+    ``repro.core.useraxis``): returns ``(rows, segments)`` where ``rows``
+    is a flat list of ``(cfg_index, block_index, block_users)`` — one
+    entry per expanded grid row, configs' blocks contiguous — and
+    ``segments`` maps each row back to its config (int32)."""
+    rows: list[tuple[int, int, int]] = []
+    blocks_per_cfg = []
+    for ci, c in enumerate(cfgs):
+        sizes = block_sizes(c.n_users, user_block)
+        blocks_per_cfg.append(len(sizes))
+        rows.extend((ci, bi, bu) for bi, bu in enumerate(sizes))
+    return rows, block_segments(blocks_per_cfg)
+
+
+def _make_user_grid(prof: ProfileTable, configs, user_block: int,
+                    workload: WorkloadSource | None = None,
+                    dispatch: DispatchEngine | None = None,
+                    chunk: int | None = None):
+    """Pack configs into a user-blocked :class:`ConfigGrid`: a config
+    with ``n_users = N > user_block`` becomes ``ceil(N / user_block)``
+    block rows of ≤ ``user_block`` users each — independent balancer
+    replicas riding the ordinary config axis, so the grid vmaps, shards
+    over a mesh and fleet-stacks with zero new engine machinery, and its
+    leaves stay ``O(total_users)`` instead of ``O(B × n_users_max)``.
+
+    Returns ``(grid, segments)``; feed both to
+    :func:`_sweep_user_summaries` to recover per-config metrics by
+    segment reduction over each config's contiguous block rows.
+
+    Determinism contract:
+      * single-block configs (``n_users <= user_block``) draw through the
+        legacy memoized one-shot path (:meth:`WorkloadSource.grid_draws`)
+        and aggregate as one-element folds, so they stay bit-identical
+        to the un-blocked engine (the golden fixtures pin this);
+      * multi-block configs draw through the streamed per-user-keyed path
+        (:meth:`WorkloadSource.stream_draws`, device memory bounded by
+        ``chunk``) and block ``b`` scans under ``fold_in(rng0, b)`` — a
+        distinct physical system (K replicas, not one balancer), declared
+        as such by ``user_block`` entering the scenario identity/hash.
+
+    ``n_requests`` stays the PER-BLOCK scan length (it is a static scan
+    shape): a K-block config serves ``K × n_requests`` requests total.
+    """
+    cfgs = list(configs)
+    if not cfgs:
+        raise ValueError("empty config grid")
+    if len({(c.n_requests, c.warmup_frac) for c in cfgs}) > 1:
+        raise ValueError(
+            "configs in one grid must agree on n_requests/warmup_frac "
+            "(they are scan-shape parameters, passed separately to "
+            "simulate_batch/summarize_batch)")
+    workload = _resolve_workload(workload, cfgs)
+    _resolve_dispatch(dispatch, cfgs)
+    G = prof.n_groups
+    rows, segments = _expand_user_blocks(cfgs, user_block)
+    U = max(bu for _, _, bu in rows)
+    B = len(rows)
+
+    multi = {ci for ci, bi, _ in rows if bi > 0}
+    if multi:
+        workload.validate_user_block(user_block)
+    legacy_keys = {ci: (c.seed, float(c.stickiness), c.n_users, G)
+                   for ci, c in enumerate(cfgs) if ci not in multi}
+    draws = workload.grid_draws(list(legacy_keys.values())) \
+        if legacy_keys else {}
+    streams: dict[tuple, tuple] = {}
+    for ci in sorted(multi):
+        c = cfgs[ci]
+        sk = (c.seed, float(c.stickiness), c.n_users)
+        if sk not in streams:
+            streams[sk] = workload.stream_draws(
+                c.seed, c.stickiness, n_groups=G, n_users=c.n_users,
+                chunk=chunk)
+
+    true0 = np.zeros((B, U), np.int32)
+    rng = np.zeros((B, 2), np.uint32)
+    phase = np.zeros((B, U), np.int32)
+    fold_rows: list[int] = []
+    fold_keys: list[np.ndarray] = []
+    for i, (ci, bi, bu) in enumerate(rows):
+        c = cfgs[ci]
+        if ci in multi:
+            t0, r0, ph = streams[(c.seed, float(c.stickiness), c.n_users)]
+            lo = bi * user_block
+            true0[i, :bu] = t0[lo:lo + bu]
+            phase[i, :bu] = ph[lo:lo + bu]
+            fold_rows.append(i)
+            fold_keys.append(r0)
+        else:
+            t0, r0, ph = draws[legacy_keys[ci]]
+            true0[i, :bu] = t0
+            phase[i, :bu] = ph
+            rng[i] = r0
+    if fold_rows:
+        # per-block scan keys: fold the block index into the config's
+        # stream key, one vmapped threefry program for all multi rows
+        folded = np.asarray(jax.vmap(jax.random.fold_in)(
+            jnp.asarray(np.stack(fold_keys), jnp.uint32),
+            jnp.asarray([rows[i][1] for i in fold_rows], i32)))
+        rng[fold_rows] = folded
+
+    grid = ConfigGrid(
+        policy_code=jnp.asarray([POLICY_CODES[cfgs[ci].policy]
+                                 for ci, _, _ in rows], i32),
+        n_users=jnp.asarray([bu for _, _, bu in rows], i32),
+        gamma=jnp.asarray([cfgs[ci].gamma for ci, _, _ in rows], f32),
+        delta=jnp.asarray([cfgs[ci].delta for ci, _, _ in rows], f32),
+        stickiness=jnp.asarray([cfgs[ci].stickiness
+                                for ci, _, _ in rows], f32),
+        oracle=jnp.asarray([cfgs[ci].oracle_estimator
+                            for ci, _, _ in rows], bool),
+        rng=jnp.asarray(rng),
+        true0=jnp.asarray(true0),
+        phase=jnp.asarray(phase),
+    )
+    return grid, segments
+
+
+def _sweep_user_summaries(prof, workload, dispatch, drift, grid: ConfigGrid,
+                          segments, n_cfgs: int, *, n_requests: int,
+                          warmup: int, mesh: Mesh | None):
+    """Fused sweep over a user-blocked grid: the expanded block rows run
+    through the ordinary single-device/sharded paths (per-user workload
+    state rides the sharded config axis), then segment-reduce back to
+    per-config metrics on device. Single-block configs pass through the
+    aggregation bit-identically."""
+    out = _sweep_summaries(prof, workload, dispatch, drift, grid,
+                           n_requests=n_requests, warmup=warmup, mesh=mesh)
+    return aggregate_block_summaries(out, segments, n_cfgs, block_axis=-1)
 
 
 def _simulate_core(prof: ProfileTable, workload: WorkloadSource,

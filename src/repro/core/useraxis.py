@@ -1,0 +1,209 @@
+"""The user axis at scale: block decomposition + segment-reduced
+aggregation.
+
+The paper evaluates up to 15 concurrent users per balancer; the ROADMAP
+north star is millions. The engine's config axis already fuses thousands
+of configurations into one device program, so the scaled user axis rides
+it: a configuration with ``n_users = N`` and ``user_block = C`` is
+decomposed into ``K = ceil(N / C)`` **user blocks** — independent
+balancer replicas, each serving its contiguous slice of ≤ C users with
+its own queue/estimator/dispatch state. Block rows are ordinary config
+rows, so the whole fleet of replicas vmaps, shards over a mesh
+(``shard_map`` splits blocks across devices — per-user queue and
+workload state is literally sharded alongside configs) and fleet-stacks
+with zero new engine machinery. Per-config metrics come back by
+**segment reduction** over each config's contiguous block rows.
+
+Reduction contract (pinned by ``tests/test_useraxis.py``): every
+reduction here is a *left fold in index order*. ``jax.ops.segment_sum``
+scatter-adds elements sequentially, which makes it bit-stable across
+eager/jit and across the padded-dense and ragged-flat layouts of the
+same values. A plain ``where(mask, x, 0).sum(-1)`` is NOT that — XLA
+vectorizes row reductions with reassociation and drifts by float ULPs —
+so the dense masked reduction (:func:`masked_user_sum`) is implemented
+via the same segment fold (pad entries map to a dropped segment) rather
+than ``jnp.sum``. That is what makes the segment-reduced aggregation
+bit-equal to the dense masked reference, including all-padded and
+single-user edge cases, and what keeps ``K = 1`` configs bit-identical
+through the aggregation pass (a one-element fold, a divide by 1.0 and a
+one-element max are all exact).
+
+Aggregation semantics over a config's blocks
+(:func:`aggregate_block_summaries`): blocks are balancer replicas
+running *concurrently*, each over the same scan length, so
+
+  * per-request means (latency, energy, mAP, estimator accuracy) are
+    request-weighted means = uniform means over blocks (every block
+    contributes the same number of post-warmup requests);
+  * ``throughput_rps`` sums over blocks (independent replicas serve in
+    parallel);
+  * ``makespan_s`` is the max over blocks (the slowest replica);
+  * ``latency_p90_ms`` is the mean of per-block p90s — a documented
+    approximation (the exact fleet-wide percentile would need the full
+    ``(K, n_requests)`` latency set that block summaries exist to avoid).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DEFAULT_STREAM_CHUNK", "n_user_blocks", "block_sizes",
+           "block_segments", "segment_user_sum", "segment_user_mean",
+           "segment_user_max", "masked_user_sum", "masked_user_mean",
+           "aggregate_block_summaries", "grid_nbytes"]
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+#: Default per-device-call chunk width for streamed workload draws
+#: (``WorkloadSource.stream_draws``): bounds the largest single draw
+#: program at ~256 KiB of int32 per leaf regardless of ``n_users``.
+DEFAULT_STREAM_CHUNK = 65536
+
+
+# ------------------------------------------------- block decomposition --
+
+def n_user_blocks(n_users: int, user_block: int) -> int:
+    """How many balancer-replica blocks a config of ``n_users`` splits
+    into at block size ``user_block`` (at least 1)."""
+    if user_block <= 0:
+        raise ValueError(f"user_block must be positive, got {user_block}")
+    return max(1, math.ceil(n_users / user_block))
+
+
+def block_sizes(n_users: int, user_block: int) -> list[int]:
+    """Users per block: ``user_block`` for every full block, the
+    remainder on the last (``[N]`` when ``N <= user_block``)."""
+    k = n_user_blocks(n_users, user_block)
+    return [min(user_block, n_users - b * user_block) for b in range(k)]
+
+
+def block_segments(blocks_per_cfg) -> np.ndarray:
+    """Config-id segment vector for an expanded grid: config ``i``'s
+    ``blocks_per_cfg[i]`` block rows are contiguous, so the segment ids
+    are ``[0]*K0 + [1]*K1 + ...`` (int32)."""
+    return np.repeat(np.arange(len(blocks_per_cfg), dtype=np.int32),
+                     np.asarray(blocks_per_cfg, np.int64))
+
+
+# ------------------------------------------- canonical left-fold sums --
+
+def segment_user_sum(values, segments, num_segments: int):
+    """Segment sum over the LEADING axis, accumulated as a left fold in
+    index order (``jax.ops.segment_sum``'s scatter-add order) — the one
+    canonical reduction every user-axis aggregation goes through."""
+    return jax.ops.segment_sum(jnp.asarray(values),
+                               jnp.asarray(segments, i32),
+                               num_segments=num_segments)
+
+
+def segment_user_mean(values, segments, num_segments: int):
+    """Left-fold segment mean; empty segments give 0 (safe divide), a
+    one-element segment passes its value through bitwise (``x / 1.0``)."""
+    values = jnp.asarray(values)
+    seg = jnp.asarray(segments, i32)
+    total = segment_user_sum(values, seg, num_segments)
+    count = segment_user_sum(jnp.ones(seg.shape, values.dtype), seg,
+                             num_segments)
+    shape = count.shape + (1,) * (total.ndim - count.ndim)
+    count = count.reshape(shape)
+    return total / jnp.maximum(count, jnp.ones((), values.dtype))
+
+
+def segment_user_max(values, segments, num_segments: int):
+    """Segment max over the leading axis; empty segments give 0 (not
+    ``-inf`` — the aggregation consumers treat absent as zero work)."""
+    out = jax.ops.segment_max(jnp.asarray(values),
+                              jnp.asarray(segments, i32),
+                              num_segments=num_segments)
+    return jnp.where(jnp.isneginf(out), jnp.zeros((), out.dtype), out)
+
+
+def masked_user_sum(values, n_users):
+    """Dense masked per-user reduction: ``values`` is ``(B, U)`` padded,
+    row ``b``'s live entries are ``values[b, :n_users[b]]``; returns the
+    ``(B,)`` per-row sums.
+
+    Implemented via the SAME left fold as :func:`segment_user_sum` — pad
+    entries map to segment ``B``, which is dropped — so it is bit-equal
+    to the segment reduction of the ragged flat layout (property-tested
+    in ``tests/test_useraxis.py``). ``where(mask, v, 0).sum(-1)`` would
+    NOT be: XLA reassociates vectorized row sums.
+    """
+    values = jnp.asarray(values)
+    if values.ndim != 2:
+        raise ValueError(f"masked_user_sum wants (B, U), got "
+                         f"{values.shape}")
+    b, u = values.shape
+    live = jnp.arange(u) < jnp.asarray(n_users, i32)[:, None]
+    seg = jnp.where(live, jnp.arange(b, dtype=i32)[:, None], b)
+    return jax.ops.segment_sum(values.reshape(-1), seg.reshape(-1),
+                               num_segments=b)
+
+
+def masked_user_mean(values, n_users):
+    """Dense masked per-user mean (all-padded rows give 0); bit-equal to
+    :func:`segment_user_mean` on the ragged layout."""
+    n = jnp.asarray(n_users, i32)
+    total = masked_user_sum(values, n)
+    count = n.astype(jnp.asarray(values).dtype)
+    return total / jnp.maximum(count, jnp.ones((), count.dtype))
+
+
+# --------------------------------------------- block-row aggregation ----
+
+#: Summary metrics that SUM over a config's blocks (independent balancer
+#: replicas serving concurrently) instead of averaging.
+_SUM_METRICS = frozenset({"throughput_rps"})
+#: Summary metrics that take the MAX over blocks (slowest replica).
+_MAX_METRICS = frozenset({"makespan_s"})
+
+
+def aggregate_block_summaries(out: dict, segments, num_configs: int,
+                              block_axis: int = -1) -> dict:
+    """Fold per-block summary metrics back to per-config metrics.
+
+    ``out`` maps metric name -> array whose ``block_axis`` (default:
+    trailing, the engine's config axis) runs over the expanded block
+    rows; ``segments`` maps each block row to its config. Means stay
+    means (uniform over blocks — every block contributes equally many
+    requests), throughput sums, makespan maxes; see the module docstring
+    for the exact contract. A config with a single block passes through
+    bit-identically.
+    """
+    seg = jnp.asarray(segments, i32)
+    if int(seg.shape[0]) == num_configs:
+        # K = 1 everywhere: the expanded grid IS the config grid
+        return dict(out)
+
+    def lead(v):
+        return jnp.moveaxis(jnp.asarray(v), block_axis, 0)
+
+    def unlead(v):
+        return jnp.moveaxis(v, 0, block_axis)
+
+    agg = {}
+    for k, v in out.items():
+        if k in _SUM_METRICS:
+            agg[k] = unlead(segment_user_sum(lead(v), seg, num_configs))
+        elif k in _MAX_METRICS:
+            agg[k] = unlead(segment_user_max(lead(v), seg, num_configs))
+        else:
+            agg[k] = unlead(segment_user_mean(lead(v), seg, num_configs))
+    return agg
+
+
+# ------------------------------------------------- memory accounting ----
+
+def grid_nbytes(grid) -> int:
+    """Total bytes of a grid pytree's leaves — the array-size accounting
+    the memory-ceiling tests assert on (RSS is too noisy to gate). The
+    blocked layout keeps this at ``O(total_users)``: a 10^6-user config
+    is ~8 MB of int32 leaves instead of an ``n_configs × n_users_max``
+    dense pad."""
+    return int(sum(np.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree_util.tree_leaves(grid)))

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import estimator as EST
+from repro.core.useraxis import DEFAULT_STREAM_CHUNK
 
 f32 = jnp.float32
 i32 = jnp.int32
@@ -79,6 +80,58 @@ class WorkloadSource:
         memoize or vectorise."""
         return {k: self.init_draws(k[0], k[1], n_users=k[2], n_groups=k[3])
                 for k in keys}
+
+    def validate_user_block(self, user_block: int) -> None:
+        """Reject block sizes this source cannot serve coherently. The
+        simulator's in-scan hooks see block-LOCAL user indices, so a
+        source whose draws depend on the user index (a trace's stream
+        assignment) must constrain ``user_block`` so local and global
+        indexing agree; the default (index-free sources like the Markov
+        chain) accepts everything."""
+
+    def stream_key(self, seed: int) -> np.ndarray:
+        """The config's scan key for the streamed draw path — the same
+        ``(2,)`` uint32 threefry key :meth:`init_draws` returns, so the
+        in-scan RNG stream is shared between the one-shot and streamed
+        builders."""
+        rng = jax.random.PRNGKey(int(seed))
+        _, rng = jax.random.split(rng)
+        return np.asarray(rng)
+
+    def stream_chunk(self, seed: int, stickiness, *, n_groups: int,
+                     users: np.ndarray):
+        """Per-user initial draws for an arbitrary slice of the user
+        axis: ``users`` is a 1-D int32 array of absolute user indices;
+        returns ``(true0, phase)`` chunks of the same shape. Every user's
+        draw is keyed by ``fold_in(key, u)`` on the absolute index, so
+        the result is *bitwise independent of chunking* — any partition
+        of ``range(n_users)`` reassembles to the same arrays. This is
+        the scaling path; it intentionally does NOT reproduce the
+        one-shot :meth:`init_draws` categorical (a shape-``(n,)`` draw
+        is not a prefix of a larger one under threefry)."""
+        raise NotImplementedError
+
+    def stream_draws(self, seed: int, stickiness, *, n_groups: int,
+                     n_users: int, chunk: int | None = None):
+        """Streamed :meth:`init_draws`: assembles ``(true0, rng, phase)``
+        for ``n_users`` users from fixed-width :meth:`stream_chunk`
+        calls (default width ``useraxis.DEFAULT_STREAM_CHUNK``), so the
+        device never materializes more than one chunk and every chunk
+        width compiles exactly one program (the tail chunk is padded to
+        full width and sliced host-side)."""
+        chunk = DEFAULT_STREAM_CHUNK if chunk is None else int(chunk)
+        if chunk <= 0:
+            raise ValueError(f"stream chunk must be positive, got {chunk}")
+        true0 = np.empty((n_users,), np.int32)
+        phase = np.empty((n_users,), np.int32)
+        for lo in range(0, n_users, chunk):
+            hi = min(lo + chunk, n_users)
+            users = np.arange(lo, lo + chunk, dtype=np.int32)
+            t0, ph = self.stream_chunk(seed, stickiness,
+                                       n_groups=n_groups, users=users)
+            true0[lo:hi] = np.asarray(t0, np.int32)[:hi - lo]
+            phase[lo:hi] = np.asarray(ph, np.int32)[:hi - lo]
+        return true0, self.stream_key(seed), phase
 
     def prepare(self, n_groups: int, stickiness):
         """Per-config constants used by :meth:`next_count`; traced once
@@ -137,6 +190,20 @@ def _init_categorical_batch(k_init, pi0, *, n_users: int):
     categorical draw (cheap per-level compile), vmapped over keys."""
     return jax.vmap(lambda k, p: jax.random.categorical(
         k, jnp.log(p + 1e-9), shape=(n_users,)).astype(i32))(k_init, pi0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups",))
+def _stream_chunk_markov(seed, stickiness, users, *, n_groups: int):
+    """One streamed-draw chunk of the Markov initial states: user ``u``
+    draws its stationary-categorical state under ``fold_in(k_init, u)``,
+    so any chunking of the user axis reassembles bitwise. One compile
+    per chunk width (``users.shape``)."""
+    P_trans = EST.markov_transition(n_groups, stickiness)
+    k_init, _ = jax.random.split(jax.random.PRNGKey(seed))
+    logits = jnp.log(EST.stationary(P_trans) + 1e-9)
+    true0 = jax.vmap(lambda u: jax.random.categorical(
+        jax.random.fold_in(k_init, u), logits))(users)
+    return true0.astype(i32), jnp.zeros(users.shape, i32)
 
 
 def _pow2_pad(items: list) -> list:
@@ -215,6 +282,12 @@ class MarkovWorkload(WorkloadSource):
                     _DRAW_CACHE[missing[i]] = (t0s[j], rngs[i])
         return {k: (*_DRAW_CACHE[k], np.zeros((k[2],), np.int32))
                 for k in keys}
+
+    def stream_chunk(self, seed, stickiness, *, n_groups, users):
+        return _stream_chunk_markov(jnp.asarray(seed, i32),
+                                    jnp.asarray(stickiness, f32),
+                                    jnp.asarray(users, i32),
+                                    n_groups=n_groups)
 
     def prepare(self, n_groups, stickiness):
         return EST.markov_transition(n_groups, stickiness)

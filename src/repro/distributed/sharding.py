@@ -34,6 +34,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # layer      stacked-layer leading dim of scanned weights (never sharded)
 # spatial_h / spatial_w   conv feature maps (spatial partitioning)
 # channels   conv channel dim (TP for convnets)
+# user       per-user stream state (queue counts, workload draws) — data
+#            parallel like batch: users are independent streams
 # none       explicitly replicated
 
 
@@ -85,6 +87,7 @@ DEFAULT_RULES = _mk({
     "norm": None,
     "rep": None,      # force-replicated even in constraint() (vs None ->
                       # UNCONSTRAINED); pins remat-saved activations
+    "user": ("pod", "data"),
     "spatial_h": None,
     "spatial_w": None,
     "channels": ("model",),
@@ -116,7 +119,11 @@ def config_axis_spec(mesh: Mesh) -> P:
     a ``ConfigGrid``) has no preferred mesh factorisation, so it is split
     across the product of all axes — a 1-D ``('config',)`` sweep mesh and a
     2-D ``('data', 'model')`` serving mesh shard it equally well. Trailing
-    dims are replicated.
+    dims are replicated. User-blocked grids
+    (``repro.core.simulator._make_user_grid``) put each config's
+    balancer-replica block rows on this same axis, so sharding the config
+    axis IS sharding per-user queue/workload state across devices — no
+    separate user spec needed.
     """
     return P(mesh.axis_names)
 

@@ -43,10 +43,14 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_sweep_mesh(n_devices: int | None = None) -> Mesh:
     """1-D ``('config',)`` mesh over local devices for sharded grid sweeps
-    (``repro.core.simulator.sweep_grid(..., mesh=...)``). The sweep shards
-    the flat config axis of a ``ConfigGrid`` across every mesh device; the
-    grid is embarrassingly parallel, so any device count works (the config
-    axis is padded up to a multiple of it)."""
+    (``Scenario(mesh=...)`` / the legacy ``sweep_grid(mesh=...)``). The
+    sweep shards the flat config axis of a ``ConfigGrid`` across every
+    mesh device; the grid is embarrassingly parallel, so any device count
+    works (the config axis is padded up to a multiple of it). With a
+    user-blocked scenario (``Scenario(user_block=...)``) the rows are
+    balancer-replica blocks, so the same mesh also shards the user axis:
+    a 10^6-user config becomes ~10^3 block rows spread over the devices,
+    per-user state and all."""
     n = len(jax.devices()) if n_devices is None else n_devices
     return compat_mesh((n,), ("config",))
 

@@ -113,6 +113,12 @@ class WindowedGateway:
             if self.dispatch is None \
                     and not (self.online and sc.dispatch is None):
                 self.dispatch = sc.resolve_dispatch()
+            # estimator-state capacity follows the scenario's fleet
+            # size: a 10^5-user scenario gets 10^5 stream slots without
+            # the caller sizing state by hand. Monotone — an explicit
+            # larger n_streams= wins, the default never shrinks
+            if self.n_streams == 1024:
+                self.n_streams = max(self.n_streams, sc.n_users)
         if self.prof.is_stacked:
             raise ValueError("gateway serves one fleet; scenario/profile "
                              "is a stacked ensemble")

@@ -23,7 +23,8 @@ def _fenced_python(md: Path) -> list[str]:
 # in document order
 EMBEDDED_EXAMPLES = {
     "sweep_engine.md": ["scenario_api.py", "trace_workload.py",
-                        "online_drift.py", "sweep_quickstart.py"],
+                        "online_drift.py", "sweep_quickstart.py",
+                        "user_scaling.py"],
     "serving.md": ["serving_gateway.py"],
 }
 
