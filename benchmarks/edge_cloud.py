@@ -1,0 +1,60 @@
+"""Edge-to-cloud offloading: does the paper's Fig. 4 MO-dominance survive
+when a cloud tier joins the fleet, and at what RTT does offloading stop
+paying?
+
+One fused scenario-engine run sweeps policy × cloud × seed, where the
+cloud axis is ``[None] + [CloudTier(rtt_ms=r) for r in RTTS]`` — the
+``None`` entry is the paper's pure-edge fleet, the baseline every tier
+is judged against. Reported per RTT: the mean metrics + offload share
+for MO/LT/HA, the MO-vs-HA dominance verdict (lower latency AND lower
+energy, the Fig. 4 headline restated with a cloud option on the table),
+and the break-even RTT — the largest swept RTT at which the cloud still
+improves MO's mean latency over the pure-edge baseline."""
+
+from dataclasses import replace
+
+from repro.core import scenario as SC
+from repro.core.cloud import CloudTier
+from repro.core.scenario import Scenario, Sweep
+
+RTTS = [0.0, 20.0, 40.0, 80.0, 160.0, 320.0, 640.0]
+POLICIES = ["MO", "LT", "HA"]
+METRICS = ["latency_ms", "latency_p90_ms", "energy_mwh", "map",
+           "offload_share"]
+
+
+def run(scenario: Scenario | None = None, n_requests: int = 1500,
+        n_users: int = 11, seeds=(0, 1, 2), rtts=RTTS) -> list[str]:
+    scenario = scenario if scenario is not None else Scenario()
+    tiers = [None] + [CloudTier(rtt_ms=r) for r in rtts]
+    res = SC.run(replace(scenario, n_requests=n_requests,
+                         n_users=n_users, cloud=None),
+                 Sweep(policy=POLICIES, cloud=tiers, seed=seeds))
+    mean = {m: res.mean(m, over="seed") for m in res.metric_names}
+    labels = ["local"] + [f"{r:g}" for r in rtts]
+
+    rows = ["edge_cloud.policy,rtt_ms," + ",".join(METRICS)]
+    for i, pol in enumerate(POLICIES):
+        for j, lab in enumerate(labels):
+            vals = ",".join(f"{mean[m][i, j]:.3f}" for m in METRICS)
+            rows.append(f"edge_cloud.{pol},{lab},{vals}")
+
+    # Fig. 4 dominance verdict with a cloud on the table: MO dominates HA
+    # when it is at-or-below HA on BOTH mean latency and energy.
+    mo, ha = POLICIES.index("MO"), POLICIES.index("HA")
+    lat, en = mean["latency_ms"], mean["energy_mwh"]
+    for j, lab in enumerate(labels):
+        dom = int(lat[mo, j] <= lat[ha, j] and en[mo, j] <= en[ha, j])
+        rows.append(f"edge_cloud.mo_dominates_ha,{lab},{dom},"
+                    f"{lat[mo, j] / lat[ha, j]:.3f},"
+                    f"{en[mo, j] / en[ha, j]:.3f},,")
+
+    # break-even: largest swept RTT where the cloud still beats pure edge
+    # on MO mean latency (-1 = never pays at any swept RTT)
+    paying = [r for j, r in enumerate(rtts)
+              if lat[mo, j + 1] < lat[mo, 0]]
+    break_even = max(paying) if paying else -1.0
+    rows.append(f"edge_cloud.break_even_rtt_ms,{break_even:g},,,,,")
+    share = mean["offload_share"]
+    rows.append(f"edge_cloud.offload_share_rtt0,{share[mo, 1]:.3f},,,,,")
+    return rows

@@ -107,8 +107,8 @@ def main() -> None:
         base = replace(base, mesh="local")
 
     from benchmarks import (ablation_delta, bench_kernels, bench_scale,
-                            fig2_motivation, fig4_baselines, fig5_gamma,
-                            online_drift, roofline_summary,
+                            edge_cloud, fig2_motivation, fig4_baselines,
+                            fig5_gamma, online_drift, roofline_summary,
                             serving_throughput, sweep_sharded, table1_pairs,
                             workload_trace)
 
@@ -122,6 +122,9 @@ def main() -> None:
             base, n_requests=600 if args.fast else 1500,
             seeds=(0,) if args.fast else (0, 1)),
         "ablation": lambda: ablation_delta.run(base),
+        "edge_cloud": lambda: edge_cloud.run(
+            base, n_requests=400 if args.fast else 1500,
+            seeds=(0,) if args.fast else (0, 1, 2)),
         "scale": lambda: bench_scale.run(),
         "sweep_sharded": lambda: sweep_sharded.run(),
         "workload_trace": lambda: workload_trace.run(

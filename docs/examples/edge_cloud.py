@@ -1,0 +1,40 @@
+"""Edge-to-cloud offloading: a CloudTier as a Scenario component."""
+import json
+
+from repro.core.cloud import CloudTier
+from repro.core.scenario import Scenario, Sweep, run
+
+# 1. A CloudTier extends the edge fleet with remote pairs whose profiled
+#    latency/energy fold in the network: RTT, a scene-complexity-
+#    dependent payload over a shared uplink, and the radio energy of the
+#    transfer. Algorithm 1 then sees offload-vs-local as ordinary pair
+#    choice. cloud=None (the default) is the paper's pure-edge fleet —
+#    bit-identical to the pre-cloud engine (tests/golden_cloud_pr7.json).
+tier = CloudTier(rtt_ms=40.0, bw_mbps=20.0, xfer_energy_mj_per_kb=3.6)
+res = run(Scenario(n_users=7, n_requests=150, cloud=tier))
+print("offload share at 40 ms RTT:",
+      round(float(res.scalar("offload_share")), 3))
+
+# 2. The tier is a sweepable component axis. Sweep the RTT to find where
+#    offloading stops paying, with the pure-edge fleet (None) as the
+#    baseline entry on the same axis, and restate the Fig. 4 dominance
+#    question with a cloud on the table.
+rtts = (0.0, 80.0, 640.0)
+grid = run(Scenario(n_users=7, n_requests=150),
+           Sweep(policy=("MO", "HA"),
+                 cloud=[None] + [CloudTier(rtt_ms=r) for r in rtts]))
+lat, en, share = (grid[k] for k in
+                  ("latency_ms", "energy_mwh", "offload_share"))
+for j, label in enumerate(("local",) + rtts):
+    dom = bool(lat[0, j] <= lat[1, j] and en[0, j] <= en[1, j])
+    print(f"rtt={label}: MO offloads {float(share[0, j]):.0%}, "
+          f"MO dominates HA: {dom}")
+
+# 3. Scenarios with a cloud serialize like everything else — the tier
+#    rides the spec and the hash, so benchmark artifacts refuse
+#    cross-cloud comparisons (scripts/check_bench.py), and a no-cloud
+#    spec carries no "cloud" key at all (hashes are unchanged from the
+#    pre-cloud engine).
+back = Scenario.from_json(json.dumps(Scenario(cloud=tier).to_json()))
+assert back.cloud == tier
+assert "cloud" not in Scenario().to_json()

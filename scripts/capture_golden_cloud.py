@@ -1,0 +1,71 @@
+"""Capture ``tests/golden_cloud_pr7.json`` — the pre-offload engine's
+record streams and 5-policy sweep metrics, through the Scenario path.
+
+Run ONCE from the tree at PR 7 (before the CloudTier refactor landed);
+the fixture pins that every ``cloud=None`` scenario stays bit-identical
+through the offload-aware engine. Do NOT regenerate from later code —
+that would defeat the regression (same rule as
+``scripts``-less ``golden_static_pr3.json`` / ``golden_markov_pr2.json``).
+
+Usage: PYTHONPATH=src python scripts/capture_golden_cloud.py
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.dispatch import OnlineDispatch
+from repro.core.scenario import Scenario, Sweep, records, run
+
+OUT = Path(__file__).resolve().parent.parent / "tests" / \
+    "golden_cloud_pr7.json"
+
+# Varied corners of the scenario space: baseline MO, the RND key stream,
+# non-default gamma/delta, the oracle ablation, online-EWMA dispatch, and
+# a single-block user_block config (bit-identical passthrough contract).
+RECORD_SCENARIOS = [
+    Scenario(n_users=5, n_requests=120, policy="MO", seed=3),
+    Scenario(n_users=9, n_requests=120, policy="RND", seed=1),
+    Scenario(n_users=7, n_requests=120, policy="MO", gamma=0.25,
+             delta=10.0, seed=0),
+    Scenario(n_users=4, n_requests=120, policy="LT", seed=2,
+             oracle_estimator=True),
+    Scenario(n_users=6, n_requests=120, policy="LC", seed=5,
+             user_block=16),
+    Scenario(n_users=5, n_requests=120, policy="MO", seed=7,
+             dispatch=OnlineDispatch()),
+]
+
+SWEEP = dict(policies=("MO", "RR", "LC", "LT", "HA"),
+             user_levels=(3, 7), seeds=(0, 1), n_requests=150)
+
+
+def main():
+    fix = {"captured_at": "PR 7 (pre-CloudTier engine)", "records": [],
+           "sweep": None}
+    for sc in RECORD_SCENARIOS:
+        recs = records(sc)
+        fix["records"].append({
+            "scenario": sc.to_json(),
+            "records": {k: np.asarray(v, np.float64).tolist()
+                        for k, v in recs.items()},
+        })
+    base = Scenario(n_requests=SWEEP["n_requests"])
+    res = run(base, Sweep(policy=SWEEP["policies"],
+                          n_users=SWEEP["user_levels"],
+                          seed=SWEEP["seeds"]))
+    fix["sweep"] = {
+        "scenario": base.to_json(),
+        "policies": list(SWEEP["policies"]),
+        "user_levels": list(SWEEP["user_levels"]),
+        "seeds": list(SWEEP["seeds"]),
+        "n_requests": SWEEP["n_requests"],
+        "metrics": {k: res[k].tolist() for k in res.metric_names},
+    }
+    OUT.write_text(json.dumps(fix))
+    print(f"wrote {OUT} ({OUT.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,9 @@ Like-for-like: artifacts record the base :class:`repro.core.scenario
 both artifacts carry a hash, a mismatch fails the comparison outright —
 different scenarios are different benchmarks; legacy artifacts without a
 hash fall back to the old ``workload``/``dispatch`` mode-string check.
+Independently of the hash, a ``cloud`` tier spec difference between the
+two scenarios is refused outright — an offload-aware run can shift every
+suite's timing profile.
 
 A suite present in the new run but absent from the baseline is *stale
 baseline*: the comparison silently skips it, so the suite goes
@@ -101,6 +104,13 @@ def compare(new: dict, base: dict, threshold,
         mode_keys = ("fast", "backend")     # hash covers the scenario
     else:
         mode_keys = ("fast", "backend", "workload", "dispatch")
+    # an offload-aware run is a different benchmark even when a legacy
+    # artifact carries no hash: refuse cloud-spec mismatches explicitly
+    n_cloud = (new.get("scenario") or {}).get("cloud")
+    b_cloud = (base.get("scenario") or {}).get("cloud")
+    if n_cloud != b_cloud:
+        errs.append(f"artifacts not comparable: cloud tier spec is "
+                    f"{n_cloud!r} (new) vs {b_cloud!r} (baseline)")
     for key in mode_keys:
         if key in new and key in base and new[key] != base[key]:
             errs.append(f"artifacts not comparable: {key} is "

@@ -1,0 +1,282 @@
+"""The edge-to-cloud offloading tier (ROADMAP item 2): a remote fleet
+whose profile includes network cost.
+
+The paper confines every request to an edge device-model pair; the
+retrieved papers "Optimizing Edge Offloading Decisions for Object
+Detection" and "Decentralized Edge-to-Cloud Load-balancing" (PAPERS.md)
+both model a remote tier whose *expected* latency/energy fold in the
+network: round-trip propagation, a payload transfer whose size depends on
+scene complexity (a busier frame compresses worse), and the radio energy
+of the transfer. :class:`CloudTier` packages exactly that as a Scenario
+component:
+
+  * :meth:`CloudTier.extend` appends the cloud pairs to a local
+    :class:`~repro.core.profiles.ProfileTable` — the extended table's
+    ``T[p, g]`` for a cloud pair is ``T_cloud + rtt_ms + xfer_ms(g)``
+    (with ``xfer_ms(g) = payload_kb[g] * 8 / bw_mbps``) and its
+    ``E[p, g]`` is ``E_cloud + payload_kb[g] * xfer_energy_mj_per_kb /
+    3600`` (mJ -> mWh), so the two-stage policy's accuracy filter and
+    weighted-sum scoring see offload-vs-local as ordinary pair choice —
+    Algorithm 1 needs no new branches;
+  * the returned :class:`CloudMeta` is the traced half: the cloud-pair
+    mask, the per-group transfer times and the RTT, used by the
+    simulator's uplink queue model (the shared uplink is a serial
+    resource) and by the scoring-time congestion :meth:`~CloudMeta.
+    penalty` — each in-flight offload delays the next transfer by one
+    payload, so offloading has negative feedback exactly like local
+    queue depths.
+
+At ``rtt_ms=0, bw_mbps=inf, xfer_energy_mj_per_kb=0`` the extension is
+free: the extended rows equal the raw cloud tables bit-for-bit and the
+congestion penalty vanishes, so a zero-cost cloud pair scores exactly
+like a local pair with the same profile (property-tested in
+``tests/test_edge_cloud.py``). A scenario with ``cloud=None`` never
+builds any of this — the no-cloud engine path is bit-identical to PR 7
+(``tests/golden_cloud_pr7.json``)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profiles import ProfileTable
+
+f32 = jnp.float32
+
+__all__ = ["CloudTier", "CloudMeta", "default_cloud_pairs",
+           "default_payload_kb"]
+
+
+def default_cloud_pairs(n_groups: int = 5) -> ProfileTable:
+    """The default remote fleet: two datacenter-GPU detector services.
+    Compute is fast and accurate on every group (a server-class model
+    does not fall off on complex scenes the way edge ssd-class pairs
+    do); per-request device energy is ~0 from the edge's perspective —
+    the transfer energy (:class:`CloudTier`) is what the edge pays."""
+    if n_groups != 5:
+        raise ValueError("default_cloud_pairs profiles the paper's 5 "
+                         f"complexity groups, got n_groups={n_groups}; "
+                         "pass explicit cloud_pairs for other shapes")
+    names = ("cloud/yolov8m", "cloud/yolov8x")
+    T = jnp.array([
+        [14.0, 15.0, 16.0, 17.0, 18.0],
+        [26.0, 27.0, 29.0, 31.0, 33.0],
+    ])
+    E = jnp.zeros((2, 5), f32)
+    mAP = jnp.array([
+        [77.0, 80.0, 80.5, 81.0, 81.5],
+        [78.0, 81.0, 82.0, 83.0, 84.0],
+    ])
+    return ProfileTable(T, E, mAP, names, jnp.zeros((2,), f32))
+
+
+def default_payload_kb(n_groups: int) -> np.ndarray:
+    """Scene-complexity-dependent payload sizes (KB): a busier frame
+    compresses worse, so the uplink cost grows with the group."""
+    return np.linspace(40.0, 100.0, n_groups).astype(np.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class CloudMeta:
+    """The traced half of a cloud extension — what jitted code needs.
+
+    Leaves: ``is_cloud`` (P_ext,) bool mask over the extended pair axis,
+    ``xfer_ms`` (G,) per-group uplink transfer times, ``rtt_ms`` scalar
+    round-trip time. A registered pytree replicated across the config
+    axis like the profile table, so cloud grids vmap / shard /
+    drift-vmap unchanged."""
+
+    is_cloud: jax.Array      # (P_ext,) bool
+    xfer_ms: jax.Array       # (G,) f32
+    rtt_ms: jax.Array        # () f32
+
+    def tree_flatten(self):
+        return (self.is_cloud, self.xfer_ms, self.rtt_ms), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    def penalty(self, g, q):
+        """Scoring-time uplink congestion penalty (P_ext,) in ms for a
+        request of estimated group ``g`` against live queue depths ``q``:
+        each in-flight offload occupies the shared uplink for one
+        payload, so a cloud pair's expected latency grows by
+        ``xfer_ms[g]`` per queued cloud request. Local pairs pay zero;
+        at ``bw = inf`` the penalty vanishes identically (the zero-cost
+        cloud bit-equality property depends on this)."""
+        isc = self.is_cloud.astype(f32)
+        uplink_q = jnp.sum(isc * jnp.asarray(q, f32))
+        return isc * self.xfer_ms[jnp.asarray(g)] * uplink_q
+
+
+@dataclass(frozen=True, eq=False)
+class CloudTier:
+    """A remote offloading tier as a declarative Scenario component.
+
+    ``rtt_ms`` is the round-trip propagation time, ``bw_mbps`` the
+    uplink bandwidth (``inf`` = free transfer), ``xfer_energy_mj_per_kb``
+    the radio energy per payload KB (mJ; LTE-class ~3.6),
+    ``cloud_pairs`` the remote compute profile (a ``(Pc, G)``
+    :class:`~repro.core.profiles.ProfileTable`; None = the
+    :func:`default_cloud_pairs` datacenter GPUs) and ``payload_kb`` the
+    per-group payload sizes (None = :func:`default_payload_kb`).
+
+    Value-equal like a Scenario (two tiers are ``==`` iff their JSON
+    specs match), so ``Results.sel(cloud=tier)`` and scenario hashing
+    work; ``Sweep(cloud=[replace(tier, rtt_ms=r) for r in rtts])``
+    sweeps the RTT axis."""
+
+    rtt_ms: float = 40.0
+    bw_mbps: float = 20.0
+    xfer_energy_mj_per_kb: float = 3.6
+    cloud_pairs: ProfileTable | None = None
+    payload_kb: np.ndarray | None = field(default=None)
+
+    def __post_init__(self):
+        if not (self.rtt_ms >= 0.0):
+            raise ValueError(f"rtt_ms must be >= 0, got {self.rtt_ms!r}")
+        if not (self.bw_mbps > 0.0):
+            raise ValueError(f"bw_mbps must be > 0 (inf allowed), got "
+                             f"{self.bw_mbps!r}")
+        if not (self.xfer_energy_mj_per_kb >= 0.0):
+            raise ValueError("xfer_energy_mj_per_kb must be >= 0, got "
+                             f"{self.xfer_energy_mj_per_kb!r}")
+        if self.cloud_pairs is not None:
+            if not isinstance(self.cloud_pairs, ProfileTable):
+                raise TypeError("cloud_pairs must be a ProfileTable or "
+                                f"None, got {type(self.cloud_pairs)}")
+            if self.cloud_pairs.is_stacked:
+                raise ValueError("cloud_pairs must be a single (Pc, G) "
+                                 "table, not a stacked ensemble")
+        if self.payload_kb is not None:
+            pl = np.asarray(self.payload_kb, np.float32)
+            if pl.ndim != 1 or (pl <= 0).any():
+                raise ValueError("payload_kb must be a 1-D positive "
+                                 f"array, got {self.payload_kb!r}")
+            object.__setattr__(self, "payload_kb", pl)
+
+    # -- resolution -----------------------------------------------------
+
+    def resolve_pairs(self, n_groups: int) -> ProfileTable:
+        if self.cloud_pairs is not None:
+            if self.cloud_pairs.n_groups != n_groups:
+                raise ValueError(
+                    f"cloud_pairs profiles {self.cloud_pairs.n_groups} "
+                    f"groups, fleet has {n_groups}")
+            return self.cloud_pairs
+        return default_cloud_pairs(n_groups)
+
+    def resolve_payload(self, n_groups: int) -> np.ndarray:
+        if self.payload_kb is not None:
+            if self.payload_kb.shape[0] != n_groups:
+                raise ValueError(
+                    f"payload_kb has {self.payload_kb.shape[0]} groups, "
+                    f"fleet has {n_groups}")
+            return self.payload_kb
+        return default_payload_kb(n_groups)
+
+    def xfer_ms(self, n_groups: int) -> np.ndarray:
+        """Per-group uplink transfer time: KB -> kbit over Mbps = ms
+        (zeros at ``bw_mbps = inf``)."""
+        payload = self.resolve_payload(n_groups)
+        return (payload * 8.0 / self.bw_mbps).astype(np.float32)
+
+    def extend(self, prof: ProfileTable) -> tuple[ProfileTable, CloudMeta]:
+        """Append the cloud pairs to a local fleet: the extended table's
+        cloud rows carry the network-inclusive expected latency/energy
+        (module docstring), cloud floors are zero (the datacenter's idle
+        power is not the edge operator's bill), and the returned
+        :class:`CloudMeta` decomposes the totals back for the
+        simulator's uplink model."""
+        if prof.is_stacked:
+            raise ValueError("CloudTier.extend takes a single (P, G) "
+                             "fleet; stacked ensembles are not supported "
+                             "with a cloud tier")
+        G = prof.n_groups
+        pairs = self.resolve_pairs(G)
+        payload = jnp.asarray(self.resolve_payload(G), f32)
+        xfer = jnp.asarray(self.xfer_ms(G), f32)
+        Tc = pairs.T + f32(self.rtt_ms) + xfer[None, :]
+        Ec = pairs.E + payload[None, :] \
+            * f32(self.xfer_energy_mj_per_kb) / 3600.0
+        P, Pc = prof.n_pairs, pairs.n_pairs
+        floor_local = prof.floor_mw if prof.floor_mw is not None \
+            else jnp.zeros((P,), f32)
+        ext = ProfileTable(
+            T=jnp.concatenate([prof.T, Tc]),
+            E=jnp.concatenate([prof.E, Ec]),
+            mAP=jnp.concatenate([prof.mAP, pairs.mAP]),
+            names=tuple(prof.names) + tuple(pairs.names),
+            floor_mw=jnp.concatenate([floor_local, jnp.zeros((Pc,), f32)]),
+        )
+        meta = CloudMeta(
+            is_cloud=jnp.concatenate([jnp.zeros((P,), bool),
+                                      jnp.ones((Pc,), bool)]),
+            xfer_ms=xfer,
+            rtt_ms=jnp.asarray(self.rtt_ms, f32),
+        )
+        return ext, meta
+
+    # -- serialization (the Scenario component contract) ---------------
+
+    def to_json(self) -> dict:
+        spec = {
+            "rtt_ms": float(self.rtt_ms),
+            "bw_mbps": float(self.bw_mbps),
+            "xfer_energy_mj_per_kb": float(self.xfer_energy_mj_per_kb),
+        }
+        # defaults serialize as absent keys, so default-equivalent tiers
+        # share one spec/hash (the workload/dispatch canonicalization
+        # rule); json handles inf (bw) natively via allow_nan
+        if self.cloud_pairs is not None:
+            p = self.cloud_pairs
+            spec["cloud_pairs"] = {
+                "T": np.asarray(p.T).tolist(),
+                "E": np.asarray(p.E).tolist(),
+                "mAP": np.asarray(p.mAP).tolist(),
+                "names": list(p.names),
+            }
+        if self.payload_kb is not None:
+            spec["payload_kb"] = np.asarray(self.payload_kb,
+                                            np.float64).tolist()
+        return spec
+
+    @classmethod
+    def from_json(cls, spec: dict | None) -> "CloudTier | None":
+        if spec is None:
+            return None
+        pairs = None
+        if spec.get("cloud_pairs") is not None:
+            o = spec["cloud_pairs"]
+            pairs = ProfileTable(
+                jnp.asarray(o["T"], f32), jnp.asarray(o["E"], f32),
+                jnp.asarray(o["mAP"], f32), tuple(o.get("names", ())))
+        payload = None if spec.get("payload_kb") is None \
+            else np.asarray(spec["payload_kb"], np.float32)
+        return cls(rtt_ms=float(spec.get("rtt_ms", 40.0)),
+                   bw_mbps=float(spec.get("bw_mbps", 20.0)),
+                   xfer_energy_mj_per_kb=float(
+                       spec.get("xfer_energy_mj_per_kb", 3.6)),
+                   cloud_pairs=pairs, payload_kb=payload)
+
+    def __eq__(self, other):
+        if not isinstance(other, CloudTier):
+            return NotImplemented
+        return self.to_json() == other.to_json()
+
+    def __hash__(self):
+        spec = self.to_json()
+        return hash((spec["rtt_ms"], spec["bw_mbps"],
+                     spec["xfer_energy_mj_per_kb"],
+                     "cloud_pairs" in spec, "payload_kb" in spec))
+
+    def __repr__(self):
+        bw = "inf" if math.isinf(self.bw_mbps) else f"{self.bw_mbps:g}"
+        return (f"CloudTier(rtt_ms={self.rtt_ms:g}, bw_mbps={bw}, "
+                f"xfer_energy_mj_per_kb={self.xfer_energy_mj_per_kb:g})")

@@ -85,18 +85,23 @@ class DispatchEngine:
         (the offline table itself, or an adapted copy)."""
         raise NotImplementedError
 
-    def select(self, state, prof, code, g_est, q, key, gamma, delta):
+    def select(self, state, prof, code, g_est, q, key, gamma, delta,
+               penalty=None):
         """Score one request -> ``(pair, new_state)``. ``code`` is the
         policy index (``POLICY_CODES``), ``g_est`` the estimated group,
         ``q`` the (P,) live queue depths, ``key`` a fresh threefry key
-        (consumed only by the RND baseline)."""
+        (consumed only by the RND baseline). ``penalty`` (optional, (P,)
+        ms) is the cloud tier's uplink congestion term, added to the
+        latency-aware policies' expected latency
+        (``repro.core.policies.policy_scores``); ``None`` keeps the
+        traced graph exactly as before."""
         p, _scores = select_pair(code, self.tables(state, prof), g_est, q,
                                  key, state["rr"] % prof.n_pairs, gamma,
-                                 delta)
+                                 delta, penalty)
         return p, {**state, "rr": state["rr"] + 1}
 
     def select_window(self, state, prof, code, gs, q0, keys, gamma,
-                      delta):
+                      delta, penalty_fn=None):
         """Route a whole admission window with queue feedback — the
         batched :meth:`select`. ``gs``/``keys`` are (W,) groups and
         per-request threefry keys, ``q0`` the (P,) queue depths at
@@ -105,12 +110,19 @@ class DispatchEngine:
         result is bit-identical to W sequential :meth:`select` calls;
         returns ``(pairs (W,), q_after (P,), new_state)``. The serving
         gateway jits this once per window shape — one device program per
-        admission window instead of W dispatches."""
+        admission window instead of W dispatches.
+
+        ``penalty_fn`` (optional) maps ``(g, q) -> (P,)`` per-decision
+        latency penalties — the cloud tier's congestion feedback,
+        re-evaluated against each decision's live ``q`` inside the scan
+        (:meth:`repro.core.cloud.CloudMeta.penalty`)."""
 
         def step(carry, inp):
             st, q = carry
             g, key = inp
-            p, st = self.select(st, prof, code, g, q, key, gamma, delta)
+            pen = None if penalty_fn is None else penalty_fn(g, q)
+            p, st = self.select(st, prof, code, g, q, key, gamma, delta,
+                                penalty=pen)
             return (st, q.at[p].add(1.0)), p
 
         (state, q), pairs = jax.lax.scan(

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policies import mo_scores
 from repro.core.profiles import ProfileTable
@@ -26,8 +27,11 @@ f32 = jnp.float32
 
 def pod_aggregate(prof: ProfileTable, pod_of_pair) -> ProfileTable:
     """Aggregate per-pair profiles into per-pod profiles.
-    pod_of_pair: (P,) int32 pod id per pair; n_pods = max+1."""
-    n_pods = int(jnp.max(pod_of_pair)) + 1
+    pod_of_pair: (P,) int32 pod id per pair (a CONCRETE array — the pod
+    layout is deployment topology, known host-side; n_pods = max+1 is a
+    static shape, so it is computed with numpy and stays usable inside
+    jitted callers)."""
+    n_pods = int(np.max(np.asarray(pod_of_pair))) + 1
     P, G = prof.T.shape
 
     def agg(col_min, table):
@@ -45,9 +49,15 @@ def pod_aggregate(prof: ProfileTable, pod_of_pair) -> ProfileTable:
 
 def hierarchical_select(prof: ProfileTable, pod_prof: ProfileTable,
                         pod_of_pair, g, q_exact, q_pod_stale, *,
-                        delta: float = 20.0, gamma: float = 0.5):
+                        delta: float = 20.0, gamma: float = 0.5,
+                        penalty=None):
     """Two-level Algorithm 1. q_exact: (P,) local queues (only the chosen
-    pod's slice is consulted); q_pod_stale: (n_pods,) last-synced totals."""
+    pod's slice is consulted); q_pod_stale: (n_pods,) last-synced totals.
+    ``penalty`` (optional, (P,) ms) is the cloud tier's per-pair uplink
+    congestion term, applied at level 2 where exact queues live — the
+    edge-cluster-under-global-balancer shape puts the cloud pairs in
+    their own pod, so the level-1 choice already separates
+    offload-vs-local."""
     Jp, _ = mo_scores(pod_prof.T[:, g], pod_prof.E[:, g], pod_prof.mAP[:, g],
                       q_pod_stale, delta=delta, gamma=gamma)
     pod = jnp.argmin(Jp)
@@ -55,5 +65,6 @@ def hierarchical_select(prof: ProfileTable, pod_prof: ProfileTable,
     T_g = jnp.where(in_pod, prof.T[:, g], jnp.inf)
     E_g = jnp.where(in_pod, prof.E[:, g], jnp.inf)
     mAP_g = jnp.where(in_pod, prof.mAP[:, g], -jnp.inf)
-    J, _ = mo_scores(T_g, E_g, mAP_g, q_exact, delta=delta, gamma=gamma)
+    J, _ = mo_scores(T_g, E_g, mAP_g, q_exact, delta=delta, gamma=gamma,
+                     penalty=penalty)
     return jnp.argmin(J), pod

@@ -29,15 +29,23 @@ POLICY_NAMES = {v: k for k, v in POLICY_CODES.items()}
 
 # ------------------------------------------------------------ Algorithm 1 --
 
-def mo_scores(T_g, E_g, mAP_g, q, *, delta: float, gamma: float):
+def mo_scores(T_g, E_g, mAP_g, q, *, delta: float, gamma: float,
+              penalty=None):
     """Vectorised Algorithm 1 scores over the P pairs for one request.
 
     T_g/E_g/mAP_g: (P,) profiled columns for the request's group;
     q: (P,) live queue depths. Returns (J, feasible): infeasible pairs get
-    +inf so argmin(J) == argmin over the accuracy-feasible candidate set."""
+    +inf so argmin(J) == argmin over the accuracy-feasible candidate set.
+
+    ``penalty`` (optional, (P,) ms) is an additive expected-latency term —
+    the cloud tier's uplink congestion feedback
+    (:meth:`repro.core.cloud.CloudMeta.penalty`). ``None`` (every
+    no-cloud caller) leaves the traced graph exactly as before."""
     map_max = jnp.max(mAP_g)
     feasible = mAP_g >= map_max - delta
     L_exp = T_g * (1.0 + q)
+    if penalty is not None:
+        L_exp = L_exp + penalty
     l_min = jnp.min(jnp.where(feasible, L_exp, BIG))
     l_max = jnp.max(jnp.where(feasible, L_exp, -BIG))
     e_min = jnp.min(jnp.where(feasible, E_g, BIG))
@@ -74,14 +82,17 @@ def mo_select_batch(prof: ProfileTable, gs, q0, *, delta: float = 5.0,
 # ---------------------------------------------------------------- baselines
 
 def policy_scores(code, prof: ProfileTable, g, q, rnd, rr_counter,
-                  gamma, delta):
+                  gamma, delta, penalty=None):
     """Scores (P,) for every policy; dispatch via lax.switch so one jitted
-    simulator serves all seven policies."""
+    simulator serves all seven policies. ``penalty`` (optional, (P,) ms)
+    adds to the expected-latency term of the latency-aware policies (MO,
+    LT) — the offload tier's uplink congestion feedback; the
+    latency-blind baselines ignore it by construction."""
     P = prof.n_pairs
 
     def mo(_):
         J, _f = mo_scores(prof.T[:, g], prof.E[:, g], prof.mAP[:, g], q,
-                          delta=delta, gamma=gamma)
+                          delta=delta, gamma=gamma, penalty=penalty)
         return J
 
     def rr(_):
@@ -97,7 +108,8 @@ def policy_scores(code, prof: ProfileTable, g, q, rnd, rr_counter,
         return jnp.mean(prof.E, axis=1)          # fixed global-cheapest pair
 
     def lt(_):
-        return prof.T[:, g] * (1.0 + q)
+        L = prof.T[:, g] * (1.0 + q)
+        return L if penalty is None else L + penalty
 
     def ha(_):
         return -jnp.mean(prof.mAP, axis=1)       # fixed global-best-mAP pair
@@ -106,9 +118,12 @@ def policy_scores(code, prof: ProfileTable, g, q, rnd, rr_counter,
 
 
 def select_pair(code, prof: ProfileTable, g, q, rnd, rr_counter, gamma,
-                delta):
+                delta, penalty=None):
     """``(p*, scores)`` — the one selection rule every dispatch path (the
     simulator's scan, the gateway, ``repro.core.dispatch`` engines)
-    shares: score with :func:`policy_scores`, pick the argmin."""
-    scores = policy_scores(code, prof, g, q, rnd, rr_counter, gamma, delta)
+    shares: score with :func:`policy_scores`, pick the argmin.
+    ``penalty`` flows through to the latency-aware policies (see
+    :func:`policy_scores`)."""
+    scores = policy_scores(code, prof, g, q, rnd, rr_counter, gamma, delta,
+                           penalty)
     return jnp.argmin(scores).astype(jnp.int32), scores

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import simulator as SIM
+from repro.core.cloud import CloudTier
 from repro.core.dispatch import (DispatchEngine, DriftSchedule,
                                  OnlineDispatch, StaticDispatch)
 from repro.core.policies import POLICY_CODES
@@ -101,8 +102,9 @@ CONFIG_AXES = ("policy", "n_users", "gamma", "delta", "stickiness",
 STATIC_AXES = ("n_requests", "warmup_frac", "user_block")
 #: Scenario component fields: ``drift`` axes over same-shape schedules
 #: fuse as an extra vmapped batch axis; same-shape ``profile`` axes fuse
-#: as a stacked fleet axis; the rest loop one fused program per value.
-COMPONENT_AXES = ("profile", "workload", "dispatch", "drift")
+#: as a stacked fleet axis; the rest (including ``cloud`` — each tier
+#: value extends the fleet differently) loop one fused program per value.
+COMPONENT_AXES = ("profile", "workload", "dispatch", "drift", "cloud")
 
 _SWEEPABLE = CONFIG_AXES + STATIC_AXES + COMPONENT_AXES
 
@@ -151,6 +153,15 @@ class Scenario:
     # Part of the scientific identity (it changes the physical system
     # when n_users > user_block), so it enters the spec/hash — but only
     # when set, keeping every existing scenario's hash unchanged.
+    cloud: CloudTier | None = None
+    # edge-to-cloud offloading tier (repro.core.cloud.CloudTier): when
+    # set, the fleet is extended with remote model pairs whose profiled
+    # latency/energy fold in RTT + scene-dependent transfer cost, the
+    # simulator serialises uplink transfers, and latency-aware policies
+    # see an uplink congestion penalty. None (default) = edge-only, the
+    # paper's testbed — bit-identical to the pre-cloud engine
+    # (tests/golden_cloud_pr7.json pins it). Scientific identity, so it
+    # enters the spec/hash — but only when set.
     mesh: int | str | None = None
 
     def __post_init__(self):
@@ -172,6 +183,10 @@ class Scenario:
                 or self.user_block <= 0):
             raise ValueError("user_block must be None or a positive int, "
                              f"got {self.user_block!r}")
+        if self.cloud is not None and not isinstance(self.cloud,
+                                                     CloudTier):
+            raise TypeError("cloud must be None or a CloudTier, got "
+                            f"{type(self.cloud)}")
         if not (self.mesh is None or self.mesh == "local"
                 or (isinstance(self.mesh, int)
                     and not isinstance(self.mesh, bool)
@@ -185,6 +200,16 @@ class Scenario:
         if isinstance(self.profile, str):
             return PROFILE_REGISTRY[self.profile]()
         return self.profile
+
+    def resolve_fleet(self):
+        """``(prof, cloud_meta)`` — the fleet the engine actually runs:
+        the resolved profile extended with the cloud tier's remote pairs
+        (``CloudTier.extend``) when one is set, else ``(profile, None)``.
+        """
+        prof = self.resolve_profile()
+        if self.cloud is None:
+            return prof, None
+        return self.cloud.extend(prof)
 
     def resolve_workload(self) -> WorkloadSource:
         return SIM._resolve_workload(self.workload)
@@ -230,9 +255,12 @@ class Scenario:
             "mesh": self.mesh,
         }
         # only when set: the key's absence keeps every pre-user-axis
-        # scenario's canonical spec (and hash) byte-identical
+        # (and pre-cloud) scenario's canonical spec (and hash)
+        # byte-identical
         if self.user_block is not None:
             spec["user_block"] = int(self.user_block)
+        if self.cloud is not None:
+            spec["cloud"] = self.cloud.to_json()
         return spec
 
     @classmethod
@@ -261,6 +289,7 @@ class Scenario:
             drift=_drift_from_json(spec.get("drift")),
             user_block=(None if spec.get("user_block") is None
                         else int(spec["user_block"])),
+            cloud=CloudTier.from_json(spec.get("cloud")),
             mesh=spec.get("mesh"),
         )
 
@@ -570,15 +599,16 @@ def _stack_drifts(values) -> DriftSchedule | None:
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests", "warmup"))
-def _drift_axis_fused(prof, workload, dispatch, drifts, grid, *,
+def _drift_axis_fused(prof, workload, dispatch, drifts, cloud, grid, *,
                       n_requests: int, warmup: int):
     """The fused drift axis: vmap the simulate+summarize composition over
     a stacked DriftSchedule — the whole drift × config grid (× fleet) is
     ONE device program, leaves shaped (D, [F,] B)."""
 
     def one(dr):
-        return SIM._fused_summaries(prof, workload, dispatch, dr, grid,
-                                    n_requests=n_requests, warmup=warmup)
+        return SIM._fused_summaries(prof, workload, dispatch, dr, cloud,
+                                    grid, n_requests=n_requests,
+                                    warmup=warmup)
 
     return jax.vmap(one)(drifts)
 
@@ -658,6 +688,12 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
     outer_names = [n for n, _ in outer_axes]
     outer_dims = [len(v) for _, v in outer_axes]
 
+    # a cloud axis mixing None (edge-only) and tiers must still produce
+    # one consistent metric set: edge-only combos report offload_share 0
+    cloud_vals = next((v for n, v in outer_axes if n == "cloud"),
+                      (scenario.cloud,))
+    any_cloud = any(v is not None for v in cloud_vals)
+
     metrics: dict[str, np.ndarray] | None = None
     block_shape: tuple[int, ...] = ()
     for oi, combo in enumerate(itertools.product(
@@ -670,6 +706,15 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
         drift = override["drift"] if "drift" in override else sc.drift
         workload = sc.resolve_workload()
         dispatch = sc.resolve_dispatch()
+        if sc.cloud is not None:
+            if prof.is_stacked:
+                raise ValueError("cloud tier does not compose with "
+                                 "stacked fleet profiles (each fleet "
+                                 "would need its own extension); sweep "
+                                 "single-fleet profiles instead")
+            prof, cloud_meta = sc.cloud.extend(prof)
+        else:
+            cloud_meta = None
         n_requests = sc.n_requests
         warmup = int(n_requests * sc.warmup_frac)
 
@@ -694,15 +739,22 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
 
         if drift_axis is not None:
             out = _drift_axis_fused(prof, workload, dispatch,
-                                    drift_axis[2], grid,
+                                    drift_axis[2], cloud_meta, grid,
                                     n_requests=n_requests, warmup=warmup)
         else:
+            with_hist = segments is not None \
+                and int(np.asarray(segments).shape[0]) > len(cfgs)
             out = SIM._sweep_summaries(prof, workload, dispatch, drift,
-                                       grid, n_requests=n_requests,
-                                       warmup=warmup, mesh=mesh_obj)
+                                       cloud_meta, grid,
+                                       n_requests=n_requests,
+                                       warmup=warmup, mesh=mesh_obj,
+                                       with_hist=with_hist)
         if segments is not None:
             out = SIM.aggregate_block_summaries(out, segments, len(cfgs),
                                                 block_axis=-1)
+        if any_cloud and "offload_share" not in out:
+            out = dict(out)
+            out["offload_share"] = jnp.zeros_like(out["latency_ms"])
 
         block_shape = ((len(drift_axis[1]),) if drift_axis else ()) \
             + ((prof.n_fleets,) if prof.is_stacked else ()) \
@@ -752,7 +804,7 @@ def records(scenario: Scenario, sweep: Sweep | None = None):
     bit-identical to each config's own single run — the engine's padding
     /batching guarantee.
     """
-    prof = scenario.resolve_profile()
+    prof, cloud_meta = scenario.resolve_fleet()
     workload = scenario.resolve_workload()
     dispatch = scenario.resolve_dispatch()
     if scenario.user_block is not None:
@@ -770,7 +822,7 @@ def records(scenario: Scenario, sweep: Sweep | None = None):
     if sweep is None or not sweep.axes:
         return SIM._simulate(prof, scenario.to_config(),
                              workload=workload, dispatch=dispatch,
-                             drift=scenario.drift)
+                             drift=scenario.drift, cloud=cloud_meta)
     bad = [n for n in sweep.names if n not in CONFIG_AXES]
     if bad:
         raise ValueError(
@@ -788,7 +840,7 @@ def records(scenario: Scenario, sweep: Sweep | None = None):
     recs = SIM._simulate_batch(prof, grid,
                                n_requests=scenario.n_requests,
                                workload=workload, dispatch=dispatch,
-                               drift=scenario.drift)
+                               drift=scenario.drift, cloud=cloud_meta)
     dims = sweep.shape
     pre = (prof.n_fleets,) if prof.is_stacked else ()
     return {k: v.reshape(pre + dims + v.shape[len(pre) + 1:])

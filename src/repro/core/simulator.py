@@ -99,7 +99,7 @@ from repro.core.dispatch import (DispatchEngine, DriftSchedule,
 from repro.core.policies import POLICY_CODES
 from repro.core.profiles import ProfileTable
 from repro.core.useraxis import (aggregate_block_summaries, block_segments,
-                                 block_sizes)
+                                 block_sizes, latency_histogram)
 from repro.core.workload import (MarkovWorkload, WorkloadSource,
                                  _init_draws, default_workload,
                                  grid_cache_clear, grid_cache_info)
@@ -431,23 +431,27 @@ def _make_user_grid(prof: ProfileTable, configs, user_block: int,
     return grid, segments
 
 
-def _sweep_user_summaries(prof, workload, dispatch, drift, grid: ConfigGrid,
-                          segments, n_cfgs: int, *, n_requests: int,
-                          warmup: int, mesh: Mesh | None):
+def _sweep_user_summaries(prof, workload, dispatch, drift, cloud,
+                          grid: ConfigGrid, segments, n_cfgs: int, *,
+                          n_requests: int, warmup: int, mesh: Mesh | None):
     """Fused sweep over a user-blocked grid: the expanded block rows run
     through the ordinary single-device/sharded paths (per-user workload
     state rides the sharded config axis), then segment-reduce back to
     per-config metrics on device. Single-block configs pass through the
-    aggregation bit-identically."""
-    out = _sweep_summaries(prof, workload, dispatch, drift, grid,
-                           n_requests=n_requests, warmup=warmup, mesh=mesh)
+    aggregation bit-identically; multi-block configs additionally carry
+    the per-block latency histogram so the fleet-wide p90 is an exact
+    merge, not a mean of per-block percentiles."""
+    multi = int(np.asarray(segments).shape[0]) > n_cfgs
+    out = _sweep_summaries(prof, workload, dispatch, drift, cloud, grid,
+                           n_requests=n_requests, warmup=warmup, mesh=mesh,
+                           with_hist=multi)
     return aggregate_block_summaries(out, segments, n_cfgs, block_axis=-1)
 
 
 def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
                    dispatch: DispatchEngine, drift: DriftSchedule | None,
-                   policy_code, n_users, gamma, delta, oracle, stickiness,
-                   rng, true0, phase, *, n_requests: int):
+                   cloud, policy_code, n_users, gamma, delta, oracle,
+                   stickiness, rng, true0, phase, *, n_requests: int):
     """Trace body shared by the single and batched paths. Every config
     parameter is a traced array; the only static shapes are ``n_requests``
     (scan length), ``true0``'s length (``n_users_max``) and the workload /
@@ -459,7 +463,18 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
     engine's belief tables, ``observe`` folds the request's TRUE service
     time and energy back in afterwards. ``drift`` (when given) perturbs
     the *true* profile per step — the policy never sees it except through
-    observations."""
+    observations.
+
+    ``cloud`` (:class:`~repro.core.cloud.CloudMeta` or ``None``) marks
+    the trailing pairs of ``prof`` as remote: their profiled latency
+    already includes RTT + transfer, so the truth model splits it back
+    into uplink occupancy (a single shared uplink serialises transfers —
+    the ``up_avail`` carry key, present only when a cloud tier exists),
+    remote compute (occupies the cloud pair) and downlink RTT (occupies
+    neither). The dispatcher additionally sees a congestion penalty
+    (:meth:`CloudMeta.penalty`) on latency-aware policies. ``None``
+    leaves the traced graph exactly as before — the no-cloud fixtures
+    stay bit-identical."""
     P = prof.n_pairs
     G = prof.n_groups
     U = true0.shape[0]
@@ -478,6 +493,8 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         "dispatch": dispatch.init(prof),
         "rng": rng,
     }
+    if cloud is not None:
+        carry["up_avail"] = jnp.asarray(0.0, f32)   # shared uplink frontier
 
     gamma = jnp.asarray(gamma, f32)
     delta = jnp.asarray(delta, f32)
@@ -499,15 +516,32 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         q = jnp.zeros((P,), f32).at[c["server_by_user"]].add(
             active.astype(f32), mode="drop")
 
+        penalty = None if cloud is None else cloud.penalty(g_est, q)
         p, dstate = dispatch.select(c["dispatch"], prof, code, g_est, q,
-                                    k2, gamma, delta)
+                                    k2, gamma, delta, penalty=penalty)
 
         # the TRUE fleet this step: the offline profile, or its drifted
         # copy — service time, energy and the observation all come from it
         truth = prof if drift is None else drift.at_step(prof, i)
         t_serv = truth.T[p, g_true] / 1000.0                  # ms -> s
-        start = jnp.maximum(t, c["avail"][p])
-        finish = start + t_serv
+        if cloud is None:
+            start = jnp.maximum(t, c["avail"][p])
+            finish = start + t_serv
+        else:
+            # split the profiled total back into uplink / compute / RTT:
+            # the uplink is a single shared resource (transfers serialise),
+            # remote compute occupies the cloud pair, the downlink RTT
+            # occupies neither. Local pairs have zero network terms, so
+            # their timeline is the exact no-cloud expression.
+            isc = cloud.is_cloud[p]
+            xfer_s = jnp.where(isc, cloud.xfer_ms[g_true], 0.0) / 1000.0
+            rtt_s = jnp.where(isc, cloud.rtt_ms, 0.0) / 1000.0
+            up_start = jnp.maximum(t, c["up_avail"])
+            arrive = jnp.where(isc, up_start + xfer_s, t)
+            start = jnp.maximum(arrive, c["avail"][p])
+            compute_s = jnp.maximum(t_serv - xfer_s - rtt_s, 0.0)
+            finish = start + compute_s + rtt_s
+            nc_up = jnp.where(isc, up_start + xfer_s, c["up_avail"])
 
         detected = EST.noisy_detected_count(k3, new_true, prof.mAP[p, g_true])
         dstate = dispatch.observe(dstate, p, g_est, truth.T[p, g_true],
@@ -520,7 +554,11 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         nc["pos"] = c["pos"].at[u].add(1)
         nc["server_by_user"] = c["server_by_user"].at[u].set(p)
         nc["finish_by_user"] = c["finish_by_user"].at[u].set(finish)
-        nc["avail"] = c["avail"].at[p].set(finish)
+        if cloud is None:
+            nc["avail"] = c["avail"].at[p].set(finish)
+        else:
+            nc["avail"] = c["avail"].at[p].set(finish - rtt_s)
+            nc["up_avail"] = nc_up
         nc["t_next"] = c["t_next"].at[u].set(finish)
         nc["dispatch"] = dstate
 
@@ -541,20 +579,20 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
     return recs
 
 
-def _simulate_config(prof, workload, dispatch, drift, g: ConfigGrid, *,
-                     n_requests: int):
+def _simulate_config(prof, workload, dispatch, drift, cloud, g: ConfigGrid,
+                     *, n_requests: int):
     """One config (scalar ConfigGrid leaves) -> record arrays; fields are
     accessed by name so batched and single paths can't transpose leaves."""
-    return _simulate_core(prof, workload, dispatch, drift, g.policy_code,
-                          g.n_users, g.gamma, g.delta, g.oracle,
-                          g.stickiness, g.rng, g.true0, g.phase,
+    return _simulate_core(prof, workload, dispatch, drift, cloud,
+                          g.policy_code, g.n_users, g.gamma, g.delta,
+                          g.oracle, g.stickiness, g.rng, g.true0, g.phase,
                           n_requests=n_requests)
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
-def _simulate_one(prof, workload, dispatch, drift, g: ConfigGrid, *,
+def _simulate_one(prof, workload, dispatch, drift, cloud, g: ConfigGrid, *,
                   n_requests: int):
-    return _simulate_config(prof, workload, dispatch, drift, g,
+    return _simulate_config(prof, workload, dispatch, drift, cloud, g,
                             n_requests=n_requests)
 
 
@@ -568,79 +606,107 @@ def _over_fleet(fn, prof):
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
-def _simulate_vmapped(prof, workload, dispatch, drift, grid: ConfigGrid, *,
-                      n_requests: int):
+def _simulate_vmapped(prof, workload, dispatch, drift, cloud,
+                      grid: ConfigGrid, *, n_requests: int):
     return _over_fleet(
         lambda pf: jax.vmap(
-            lambda g: _simulate_config(pf, workload, dispatch, drift, g,
-                                       n_requests=n_requests))(grid),
+            lambda g: _simulate_config(pf, workload, dispatch, drift,
+                                       cloud, g, n_requests=n_requests))(
+            grid),
         prof)
 
 
-def _fused_summaries(prof, workload, dispatch, drift, grid: ConfigGrid, *,
-                     n_requests: int, warmup: int):
+def _fused_summaries(prof, workload, dispatch, drift, cloud,
+                     grid: ConfigGrid, *, n_requests: int, warmup: int,
+                     with_hist: bool = False):
     """The simulate + summarize composition over (fleet,) config — the ONE
     source of truth shared by the single-device jit and the shard_map'ed
     path, so the two can never drift apart and break the bit-identical
     guarantee. Returns (B,) metric vectors — (F, B) for a stacked fleet —
-    without materialising (B, N) records."""
+    without materialising (B, N) records. ``with_hist`` additionally
+    emits the fixed-bin latency histogram leaf (``(B, NB)``) the
+    user-block aggregation merges into exact fleet-wide percentiles."""
 
     def per_fleet(pf):
         def one(g):
-            recs = _simulate_config(pf, workload, dispatch, drift, g,
-                                    n_requests=n_requests)
-            return _summarize_core(recs, pf, warmup)
+            recs = _simulate_config(pf, workload, dispatch, drift, cloud,
+                                    g, n_requests=n_requests)
+            return _summarize_core(recs, pf, warmup, cloud,
+                                   with_hist=with_hist)
 
         return jax.vmap(one)(grid)
 
     return _over_fleet(per_fleet, prof)
 
 
-@functools.partial(jax.jit, static_argnames=("n_requests", "warmup"))
-def _sweep_fused(prof, workload, dispatch, drift, grid: ConfigGrid, *,
-                 n_requests: int, warmup: int):
-    return _fused_summaries(prof, workload, dispatch, drift, grid,
-                            n_requests=n_requests, warmup=warmup)
+@functools.partial(jax.jit,
+                   static_argnames=("n_requests", "warmup", "with_hist"))
+def _sweep_fused(prof, workload, dispatch, drift, cloud, grid: ConfigGrid,
+                 *, n_requests: int, warmup: int, with_hist: bool = False):
+    return _fused_summaries(prof, workload, dispatch, drift, cloud, grid,
+                            n_requests=n_requests, warmup=warmup,
+                            with_hist=with_hist)
 
 
 @functools.lru_cache(maxsize=None)
 def _sweep_sharded_fn(mesh: Mesh, n_requests: int, warmup: int,
-                      stacked: bool):
+                      stacked: bool, with_hist: bool = False):
     """Build (and cache per mesh/shape signature) the shard_map'ed fused
     sweep: the config axis is split over every mesh axis, the profile
-    table, workload source, dispatch engine and drift schedule are
-    replicated, and each shard runs the plain vmapped simulate + summarize
-    — no collectives, the grid is embarrassingly parallel. The inner jit
-    re-specialises per workload/dispatch/drift pytree structure, so one
-    cache entry serves Markov and trace runs, static and online engines."""
+    table, workload source, dispatch engine, drift schedule and cloud
+    meta are replicated, and each shard runs the plain vmapped simulate +
+    summarize — no collectives, the grid is embarrassingly parallel. The
+    inner jit re-specialises per workload/dispatch/drift/cloud pytree
+    structure, so one cache entry serves Markov and trace runs, static
+    and online engines, edge-only and edge+cloud fleets."""
     cspec = config_axis_spec(mesh)
     out_spec = PartitionSpec(None, *cspec) if stacked else cspec
+    if with_hist:
+        # every metric leaf is (B,) except the (B, NB) histogram: give
+        # the tree a per-leaf spec so the bin axis stays unsharded
+        def out_spec_of(k, base):
+            return PartitionSpec(*base, None) if k == "latency_hist" \
+                else base
+    else:
+        def out_spec_of(k, base):
+            return base
 
-    def inner(pf, wl, de, dr, g):
-        return _fused_summaries(pf, wl, de, dr, g, n_requests=n_requests,
-                                warmup=warmup)
+    def inner(pf, wl, de, dr, cl, g):
+        return _fused_summaries(pf, wl, de, dr, cl, g,
+                                n_requests=n_requests, warmup=warmup,
+                                with_hist=with_hist)
 
-    return jax.jit(shard_map(
-        inner, mesh=mesh,
-        in_specs=(PartitionSpec(), PartitionSpec(), PartitionSpec(),
-                  PartitionSpec(), cspec),
-        out_specs=out_spec))
+    def fn(pf, wl, de, dr, cl, g):
+        keys = jax.eval_shape(inner, pf, wl, de, dr, cl, g).keys()
+        specs = {k: out_spec_of(k, out_spec) for k in keys}
+        return shard_map(
+            inner, mesh=mesh,
+            in_specs=(PartitionSpec(), PartitionSpec(), PartitionSpec(),
+                      PartitionSpec(), PartitionSpec(), cspec),
+            out_specs=specs)(pf, wl, de, dr, cl, g)
+
+    return jax.jit(fn)
 
 
-def _sweep_summaries(prof, workload, dispatch, drift, grid: ConfigGrid, *,
-                     n_requests: int, warmup: int, mesh: Mesh | None):
+def _sweep_summaries(prof, workload, dispatch, drift, cloud,
+                     grid: ConfigGrid, *, n_requests: int, warmup: int,
+                     mesh: Mesh | None, with_hist: bool = False):
     """Dispatch a fused sweep to the single-device or sharded path; both
     return per-config summary dicts with config as the trailing axis of
-    each (B,) / (F, B) leaf, bit-identical to each other."""
+    each (B,) / (F, B) leaf — (..., B, NB) for the optional histogram —
+    bit-identical to each other."""
     if mesh is None:
-        return _sweep_fused(prof, workload, dispatch, drift, grid,
-                            n_requests=n_requests, warmup=warmup)
+        return _sweep_fused(prof, workload, dispatch, drift, cloud, grid,
+                            n_requests=n_requests, warmup=warmup,
+                            with_hist=with_hist)
     n_dev = int(mesh.devices.size)
     padded, n = pad_leading(grid, n_dev)
-    fn = _sweep_sharded_fn(mesh, n_requests, warmup, prof.is_stacked)
-    out = fn(prof, workload, dispatch, drift,
+    fn = _sweep_sharded_fn(mesh, n_requests, warmup, prof.is_stacked,
+                           with_hist)
+    out = fn(prof, workload, dispatch, drift, cloud,
              ConfigGrid(*map(jnp.asarray, padded)))
-    return {k: v[..., :n] for k, v in out.items()}
+    return {k: (v[..., :n, :] if k == "latency_hist" else v[..., :n])
+            for k, v in out.items()}
 
 
 def simulate(prof: ProfileTable, cfg: SimConfig,
@@ -658,14 +724,17 @@ def simulate(prof: ProfileTable, cfg: SimConfig,
 def _simulate(prof: ProfileTable, cfg: SimConfig,
               workload: WorkloadSource | None = None,
               dispatch: DispatchEngine | None = None,
-              drift: DriftSchedule | None = None):
+              drift: DriftSchedule | None = None,
+              cloud=None):
     """Returns a dict of per-request record arrays (length n_requests).
     Single-fleet only — stacked tables go through :func:`simulate_batch` /
     :func:`sweep_grid`, which vmap the fleet axis. ``workload`` /
     ``dispatch`` default to the config's own (``cfg.workload`` /
     ``cfg.dispatch``), else the Markov chain and static dispatch;
     ``drift`` optionally perturbs the true profile mid-run
-    (:class:`repro.core.dispatch.DriftSchedule`)."""
+    (:class:`repro.core.dispatch.DriftSchedule`); ``cloud`` is the
+    :class:`~repro.core.cloud.CloudMeta` of an offload-extended ``prof``
+    (``CloudTier.extend``), or ``None`` for an edge-only fleet."""
     if prof.is_stacked:
         raise ValueError("simulate() takes a single (P, G) ProfileTable; "
                          "pass stacked tables to simulate_batch/sweep_grid")
@@ -683,7 +752,7 @@ def _simulate(prof: ProfileTable, cfg: SimConfig,
         oracle=jnp.asarray(cfg.oracle_estimator, bool),
         rng=jnp.asarray(rng), true0=jnp.asarray(true0, i32),
         phase=jnp.asarray(phase, i32))
-    return _simulate_one(prof, workload, dispatch, drift, g,
+    return _simulate_one(prof, workload, dispatch, drift, cloud, g,
                          n_requests=cfg.n_requests)
 
 
@@ -703,7 +772,8 @@ def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
 def _simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
                     workload: WorkloadSource | None = None,
                     dispatch: DispatchEngine | None = None,
-                    drift: DriftSchedule | None = None):
+                    drift: DriftSchedule | None = None,
+                    cloud=None):
     """Run every config in ``grid`` as ONE vmapped scan in ONE jit.
 
     Args:
@@ -743,11 +813,12 @@ def _simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
             "grid carries nonzero workload phase offsets (built with a "
             "trace source) but simulate_batch resolved the Markov "
             "default; pass the grid's own workload= explicitly")
-    return _simulate_vmapped(prof, workload, dispatch, drift, grid,
+    return _simulate_vmapped(prof, workload, dispatch, drift, cloud, grid,
                              n_requests=n_requests)
 
 
-def _summarize_core(recs, prof: ProfileTable, warmup: int):
+def _summarize_core(recs, prof: ProfileTable, warmup: int, cloud=None, *,
+                    with_hist: bool = False):
     n = recs["latency"].shape[0]
     sl = {k: v[warmup:] for k, v in recs.items()}
     makespan = jnp.max(sl["t_arrival"] + sl["latency"]) \
@@ -756,7 +827,7 @@ def _summarize_core(recs, prof: ProfileTable, warmup: int):
     floor = prof.floor_mw if prof.floor_mw is not None \
         else jnp.zeros((prof.n_pairs,))
     floor_mwh = jnp.sum(floor) * makespan / 3600.0
-    return {
+    out = {
         "latency_ms": 1000.0 * jnp.mean(sl["latency"]),
         "latency_p90_ms": 1000.0 * jnp.percentile(sl["latency"], 90),
         "throughput_rps": n_eff / makespan,
@@ -766,6 +837,12 @@ def _summarize_core(recs, prof: ProfileTable, warmup: int):
         "estimator_acc": jnp.mean(sl["correct_group"]),
         "makespan_s": makespan,
     }
+    if cloud is not None:
+        out["offload_share"] = jnp.mean(
+            cloud.is_cloud[sl["server"]].astype(f32))
+    if with_hist:
+        out["latency_hist"] = latency_histogram(sl["latency"])
+    return out
 
 
 def summarize(recs, prof: ProfileTable, cfg: SimConfig):

@@ -38,9 +38,18 @@ running *concurrently*, each over the same scan length, so
   * ``throughput_rps`` sums over blocks (independent replicas serve in
     parallel);
   * ``makespan_s`` is the max over blocks (the slowest replica);
-  * ``latency_p90_ms`` is the mean of per-block p90s — a documented
-    approximation (the exact fleet-wide percentile would need the full
-    ``(K, n_requests)`` latency set that block summaries exist to avoid).
+  * ``latency_p90_ms`` is the **exact fleet-wide percentile of the merged
+    latency histogram**: each block row emits a fixed-bin log-spaced
+    histogram (:func:`latency_histogram`; counts are integer-valued
+    float32, exact under addition to 2^24), the block histograms
+    segment-sum into the config's pooled histogram, and
+    :func:`histogram_p90` interpolates the percentile from the pooled
+    counts. Because histogram merging is exact, the K-block aggregate is
+    bit-identical to running the same estimator on the pooled dense
+    latency set — partition-invariant by construction, with quantization
+    bounded by the bin resolution (~0.5% relative at 4096 log bins over
+    [1e-5, 1e4] s). Single-block configs keep the exact
+    ``jnp.percentile`` passthrough (the golden fixtures pin it).
 """
 
 from __future__ import annotations
@@ -51,10 +60,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["DEFAULT_STREAM_CHUNK", "n_user_blocks", "block_sizes",
-           "block_segments", "segment_user_sum", "segment_user_mean",
-           "segment_user_max", "masked_user_sum", "masked_user_mean",
-           "aggregate_block_summaries", "grid_nbytes"]
+__all__ = ["DEFAULT_STREAM_CHUNK", "HIST_BINS", "HIST_LO_S", "HIST_HI_S",
+           "n_user_blocks", "block_sizes", "block_segments",
+           "segment_user_sum", "segment_user_mean", "segment_user_max",
+           "masked_user_sum", "masked_user_mean", "latency_histogram",
+           "histogram_p90", "aggregate_block_summaries", "grid_nbytes"]
 
 f32 = jnp.float32
 i32 = jnp.int32
@@ -154,6 +164,63 @@ def masked_user_mean(values, n_users):
     return total / jnp.maximum(count, jnp.ones((), count.dtype))
 
 
+# ------------------------------------------ latency histogram merge -----
+
+#: Fixed latency histogram geometry: log-spaced bins over
+#: [``HIST_LO_S``, ``HIST_HI_S``] seconds. 4096 bins over 9 decades is
+#: ~0.5% relative resolution — far below the seed-to-seed noise of any
+#: percentile metric — while one histogram is a 16 KiB leaf.
+HIST_BINS = 4096
+HIST_LO_S = 1e-5
+HIST_HI_S = 1e4
+
+_LOG_LO = math.log(HIST_LO_S)
+_LOG_SPAN = math.log(HIST_HI_S) - math.log(HIST_LO_S)
+
+
+def _hist_edges():
+    """The NB+1 bin edges in seconds (float64 host-side geometry)."""
+    return np.exp(_LOG_LO + _LOG_SPAN * np.arange(HIST_BINS + 1)
+                  / HIST_BINS)
+
+
+def latency_histogram(latencies):
+    """Fixed-bin log-histogram of a latency sample (seconds) -> ``(NB,)``
+    float32 counts. Counts are integer-valued float32, so histograms add
+    EXACTLY (up to 2^24 total requests per config) — the property that
+    makes the K-block percentile merge partition-invariant. Out-of-range
+    samples clamp into the edge bins."""
+    lat = jnp.asarray(latencies, f32).reshape(-1)
+    idx = jnp.floor((jnp.log(jnp.maximum(lat, HIST_LO_S)) - _LOG_LO)
+                    / _LOG_SPAN * HIST_BINS).astype(i32)
+    idx = jnp.clip(idx, 0, HIST_BINS - 1)
+    return jax.ops.segment_sum(jnp.ones(lat.shape, f32), idx,
+                               num_segments=HIST_BINS)
+
+
+def histogram_p90(hist, q: float = 90.0):
+    """Percentile (default p90) of a ``(..., NB)`` latency histogram, in
+    seconds: fractional rank ``q/100 * (n - 1)`` (``jnp.percentile``'s
+    'linear' convention), located by the count CDF and linearly
+    interpolated inside its bin. A deterministic pure function of the
+    counts — so ``histogram_p90(sum_k hist_k)`` is bit-identical to the
+    single-shot histogram of the pooled sample."""
+    h = jnp.asarray(hist, f32)
+    edges = jnp.asarray(_hist_edges(), f32)
+    cum = jnp.cumsum(h, axis=-1)
+    n = cum[..., -1:]
+    rank = q / 100.0 * jnp.maximum(n - 1.0, 0.0)
+    k = jnp.argmax(cum > rank, axis=-1)
+    cum_before = jnp.take_along_axis(cum, k[..., None], -1) \
+        - jnp.take_along_axis(h, k[..., None], -1)
+    in_bin = jnp.take_along_axis(h, k[..., None], -1)
+    frac = (rank - cum_before + 0.5) / jnp.maximum(in_bin, 1.0)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    left = edges[k][..., None]
+    right = edges[k + 1][..., None]
+    return (left + frac * (right - left))[..., 0]
+
+
 # --------------------------------------------- block-row aggregation ----
 
 #: Summary metrics that SUM over a config's blocks (independent balancer
@@ -174,17 +241,27 @@ def aggregate_block_summaries(out: dict, segments, num_configs: int,
     requests), throughput sums, makespan maxes; see the module docstring
     for the exact contract. A config with a single block passes through
     bit-identically.
+
+    When ``out`` carries a ``latency_hist`` leaf (bin axis trailing,
+    block rows at ``block_axis`` counted from the metric leaves — i.e.
+    one axis further in), ``latency_p90_ms`` is recomputed for
+    multi-block configs as the exact percentile of the segment-summed
+    histogram (:func:`histogram_p90`); single-block configs keep their
+    ``jnp.percentile`` value bit-identically. The histogram leaf is
+    consumed, not returned.
     """
+    out = dict(out)
+    hist = out.pop("latency_hist", None)
     seg = jnp.asarray(segments, i32)
     if int(seg.shape[0]) == num_configs:
         # K = 1 everywhere: the expanded grid IS the config grid
-        return dict(out)
+        return out
 
-    def lead(v):
-        return jnp.moveaxis(jnp.asarray(v), block_axis, 0)
+    def lead(v, axis=block_axis):
+        return jnp.moveaxis(jnp.asarray(v), axis, 0)
 
-    def unlead(v):
-        return jnp.moveaxis(v, 0, block_axis)
+    def unlead(v, axis=block_axis):
+        return jnp.moveaxis(v, 0, axis)
 
     agg = {}
     for k, v in out.items():
@@ -194,6 +271,16 @@ def aggregate_block_summaries(out: dict, segments, num_configs: int,
             agg[k] = unlead(segment_user_max(lead(v), seg, num_configs))
         else:
             agg[k] = unlead(segment_user_mean(lead(v), seg, num_configs))
+    if hist is not None:
+        # the histogram's block axis sits one slot before its trailing
+        # bin axis relative to the scalar metric leaves
+        haxis = block_axis - 1 if block_axis < 0 else block_axis
+        merged = segment_user_sum(lead(hist, haxis), seg, num_configs)
+        p90_ms = 1000.0 * unlead(histogram_p90(merged), block_axis)
+        bpc = segment_user_sum(jnp.ones((seg.shape[0],), f32), seg,
+                               num_configs)
+        agg["latency_p90_ms"] = jnp.where(bpc == 1.0,
+                                          agg["latency_p90_ms"], p90_ms)
     return agg
 
 

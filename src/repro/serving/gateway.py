@@ -56,6 +56,7 @@ import numpy as np
 from repro.core import estimator as EST
 from repro.core.dispatch import (DispatchEngine, OnlineDispatch,
                                  StaticDispatch)
+from repro.core.hierarchy import hierarchical_select, pod_aggregate
 from repro.core.policies import POLICY_CODES
 from repro.core.profiles import ProfileTable
 from repro.kernels.moscore import moscore_route, resolve_backend
@@ -74,7 +75,24 @@ class WindowedGateway:
     at their defaults). ``n_streams`` is the estimator-state capacity
     (stream ids must stay below it); ``backend`` picks the MO routing
     kernel (``"auto"`` | ``"pallas"`` | ``"xla"``, see
-    ``repro.kernels.moscore``)."""
+    ``repro.kernels.moscore``).
+
+    ``cloud`` is an optional :class:`~repro.core.cloud.CloudTier`: the
+    served fleet is extended with its remote pairs
+    (``CloudTier.extend``), and latency-aware routing sees the uplink
+    congestion penalty — which means cloud-active MO routes through the
+    generic ``select_window`` scan (the fused ``moscore`` kernel scores
+    raw tables and has no penalty hook). A scenario-built gateway
+    adopts the scenario's cloud tier like any other knob.
+
+    ``pods`` turns on hierarchical (two-level) routing
+    (``repro.core.hierarchy``): a per-pair pod-id vector partitions the
+    fleet, level 1 picks a pod by Algorithm 1 over pod-aggregate
+    profiles with queue totals snapshotted at WINDOW ADMISSION (stale
+    within the window — the price of decentralisation), level 2 runs
+    Algorithm 1 inside the pod with exact in-window queue feedback.
+    With a cloud tier, a ``pods`` vector covering only the local pairs
+    puts the remote pairs in their own extra pod."""
 
     prof: ProfileTable
     policy: str = "MO"
@@ -85,6 +103,8 @@ class WindowedGateway:
     dispatch: DispatchEngine | None = None
     n_streams: int = 1024
     backend: str = "auto"
+    cloud: Any = None         # CloudTier | None — edge-to-cloud tier
+    pods: Any = None          # (P,) pod ids | None — hierarchical routing
     _counts: Any = field(default=None, repr=False)
     _dstate: Any = field(default=None, repr=False)
     _step: int = field(default=0, repr=False)
@@ -119,9 +139,32 @@ class WindowedGateway:
             # larger n_streams= wins, the default never shrinks
             if self.n_streams == 1024:
                 self.n_streams = max(self.n_streams, sc.n_users)
+            if self.cloud is None:
+                self.cloud = sc.cloud
         if self.prof.is_stacked:
             raise ValueError("gateway serves one fleet; scenario/profile "
                              "is a stacked ensemble")
+        self._cloud_meta = None
+        if self.cloud is not None:
+            self.prof, self._cloud_meta = self.cloud.extend(self.prof)
+        self._pod_of_pair = None
+        if self.pods is not None:
+            if self.policy != "MO":
+                raise ValueError("pods= hierarchical routing is two-level "
+                                 "Algorithm 1 — MO policy only")
+            pod = np.asarray(self.pods, np.int32)
+            n_cloud = 0 if self._cloud_meta is None else int(
+                np.asarray(self._cloud_meta.is_cloud).sum())
+            if n_cloud and pod.shape == (self.prof.n_pairs - n_cloud,):
+                # the remote pairs form their own pod under the global
+                # balancer — the natural edge-clusters-plus-cloud shape
+                pod = np.concatenate(
+                    [pod, np.full((n_cloud,), pod.max() + 1, np.int32)])
+            if pod.shape != (self.prof.n_pairs,):
+                raise ValueError(
+                    f"pods must give one pod id per pair "
+                    f"({self.prof.n_pairs}), got shape {pod.shape}")
+            self._pod_of_pair = jnp.asarray(pod, i32)
         if self.dispatch is None:
             self.dispatch = OnlineDispatch() if self.online \
                 else StaticDispatch()
@@ -137,6 +180,8 @@ class WindowedGateway:
         n_groups, n_streams = prof.n_groups, self.n_streams
         gamma, delta = float(self.gamma), float(self.delta)
         backend, base_key = self.backend, self._key
+        cloud_meta, pod_of_pair = self._cloud_meta, self._pod_of_pair
+        penalty_fn = None if cloud_meta is None else cloud_meta.penalty
 
         @jax.jit
         def _route_fused(state, counts, q0, ids):
@@ -161,7 +206,32 @@ class WindowedGateway:
             keys = jax.vmap(lambda i: jax.random.fold_in(base_key, i))(idx)
             pairs, q, state = engine.select_window(
                 state, prof, code, gs, q0.astype(f32), keys,
-                jnp.asarray(gamma, f32), jnp.asarray(delta, f32))
+                jnp.asarray(gamma, f32), jnp.asarray(delta, f32),
+                penalty_fn=penalty_fn)
+            return pairs, gs, q, state
+
+        @jax.jit
+        def _route_pods(state, counts, q0, ids):
+            # hierarchical path: pod queue totals are snapshotted ONCE at
+            # window admission (stale inside the window); level-2 exact
+            # queues get in-window feedback like every other path
+            gs = EST.group_of_count(counts[ids], n_groups)
+            tbl = engine.tables(state, prof)
+            pod_tbl = pod_aggregate(tbl, pod_of_pair)
+            n_pods = pod_tbl.n_pairs
+            q_pod0 = jax.ops.segment_sum(q0.astype(f32), pod_of_pair,
+                                         num_segments=n_pods)
+
+            def step(q, g):
+                pen = None if cloud_meta is None \
+                    else cloud_meta.penalty(g, q)
+                p, _pod = hierarchical_select(
+                    tbl, pod_tbl, pod_of_pair, g, q, q_pod0,
+                    delta=delta, gamma=gamma, penalty=pen)
+                return q.at[p].add(1.0), p.astype(i32)
+
+            q, pairs = jax.lax.scan(step, q0.astype(f32), gs)
+            state = {**state, "rr": state["rr"] + ids.shape[0]}
             return pairs, gs, q, state
 
         @jax.jit
@@ -187,6 +257,7 @@ class WindowedGateway:
 
         self._route_fused = _route_fused
         self._route_scan = _route_scan
+        self._route_pods = _route_pods
         self._obs_counts = _obs_counts
         self._observe_win = _observe_win
         self._observe_one = _observe_one
@@ -247,7 +318,13 @@ class WindowedGateway:
         self._check_streams(ids)
         ids_d = jnp.asarray(ids, i32)
         q0 = jnp.asarray(queue_depths, f32)   # no-copy for device arrays
-        if self.policy == "MO":
+        if self._pod_of_pair is not None:
+            pairs, gs, q, self._dstate = self._route_pods(
+                self._dstate, self._counts, q0, ids_d)
+        elif self.policy == "MO" and self._cloud_meta is None:
+            # the fused kernel scores raw tables with no penalty hook;
+            # cloud-active MO takes the generic scan for the congestion
+            # term (bit-identical scoring otherwise)
             pairs, gs, q, self._dstate = self._route_fused(
                 self._dstate, self._counts, q0, ids_d)
         else:

@@ -142,6 +142,27 @@ def test_compare_refuses_scenario_hash_mismatch():
     assert errs and "workload" in errs[0]
 
 
+def test_compare_refuses_cloud_spec_mismatch():
+    """A cloud tier in one scenario and not the other (or a different
+    tier) is never comparable, hash or no hash — an offload-aware run is
+    a different benchmark."""
+    base = _artifact(seconds=10.0)
+    new = _artifact(seconds=10.0)
+    new["scenario"] = {"cloud": {"rtt_ms": 40.0, "bw_mbps": 20.0,
+                                 "xfer_energy_mj_per_kb": 3.6}}
+    base["scenario"] = {}
+    errs = check_bench.compare(new, base, 0.20, 0.5)
+    assert errs and "cloud" in errs[0]
+    # same tier on both sides is fine
+    base["scenario"] = dict(new["scenario"])
+    assert not check_bench.compare(new, base, 0.20, 0.5)
+    # differing tiers are refused
+    base["scenario"] = {"cloud": {"rtt_ms": 80.0, "bw_mbps": 20.0,
+                                  "xfer_energy_mj_per_kb": 3.6}}
+    errs = check_bench.compare(new, base, 0.20, 0.5)
+    assert errs and "cloud" in errs[0]
+
+
 def test_main_accepts_threshold_overrides(tmp_path, capsys):
     new = tmp_path / "new.json"
     base = tmp_path / "base.json"

@@ -1,0 +1,153 @@
+"""Tests for the two-level hierarchical balancer (core/hierarchy.py).
+
+Pins the three load-bearing properties promised in the module docstring:
+pod-aggregate correctness vs a NumPy reference, a staleness-regret bound
+for the level-1 pod choice, and permutation invariance of the selection
+within a pod."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hierarchy import hierarchical_select, pod_aggregate
+from repro.core.policies import mo_scores, mo_select
+from repro.core.profiles import ProfileTable, paper_fleet
+
+
+def _random_case(rng, P, G, n_pods):
+    T = rng.uniform(10, 500, (P, G))
+    E = rng.uniform(0.01, 0.5, (P, G))
+    mAP = rng.uniform(1, 99, (P, G))
+    # every pod non-empty: first n_pods pairs cover each pod once
+    pod = np.concatenate([np.arange(n_pods),
+                          rng.integers(0, n_pods, P - n_pods)]).astype(np.int32)
+    prof = ProfileTable(jnp.asarray(T), jnp.asarray(E), jnp.asarray(mAP))
+    return prof, pod
+
+
+@st.composite
+def hierarchy_case(draw):
+    n_pods = draw(st.integers(2, 5))
+    P = draw(st.integers(n_pods, 24))
+    G = draw(st.integers(2, 6))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    prof, pod = _random_case(rng, P, G, n_pods)
+    g = draw(st.integers(0, G - 1))
+    q = jnp.asarray(rng.integers(0, 10, P).astype(np.float32))
+    delta = draw(st.floats(0.0, 60.0))
+    gamma = draw(st.floats(0.0, 1.0))
+    return prof, pod, g, q, delta, gamma, rng
+
+
+# ------------------------------------------------------- pod aggregation --
+
+def test_pod_aggregate_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    prof, pod = _random_case(rng, P=13, G=5, n_pods=4)
+    agg = pod_aggregate(prof, jnp.asarray(pod))
+    T, E, mAP = (np.asarray(x) for x in (prof.T, prof.E, prof.mAP))
+    for k in range(4):
+        m = pod == k
+        np.testing.assert_array_equal(np.asarray(agg.T)[k], T[m].min(0))
+        np.testing.assert_array_equal(np.asarray(agg.E)[k], E[m].min(0))
+        np.testing.assert_array_equal(np.asarray(agg.mAP)[k], mAP[m].max(0))
+    assert agg.n_pairs == 4 and agg.names == ("pod0", "pod1", "pod2", "pod3")
+
+
+def test_pod_aggregate_usable_inside_jit():
+    """Regression: n_pods is host-side shape math, so pod_aggregate must
+    stay callable from jitted code closing over a concrete pod map."""
+    prof = paper_fleet()
+    pod = jnp.asarray([0, 0, 1, 1, 2], jnp.int32)
+
+    @jax.jit
+    def f(q):
+        agg = pod_aggregate(prof, pod)
+        J, _ = mo_scores(agg.T[:, 0], agg.E[:, 0], agg.mAP[:, 0],
+                         q, delta=20.0, gamma=0.5)
+        return jnp.argmin(J)
+
+    q = jax.ops.segment_sum(jnp.arange(5.0), pod, num_segments=3)
+    assert 0 <= int(f(q)) < 3
+
+
+# -------------------------------------------------------- staleness regret
+
+@settings(max_examples=40, deadline=None)
+@given(hierarchy_case())
+def test_stale_pod_choice_regret_bounded(case):
+    """Level 1 picks a pod from *stale* queue totals. The realized pod
+    score under the true totals exceeds the true optimum by at most twice
+    the score perturbation the staleness induced (standard argmin
+    perturbation bound — holds for any staleness magnitude)."""
+    prof, pod, g, q, delta, gamma, rng = case
+    n_pods = int(pod.max()) + 1
+    agg = pod_aggregate(prof, jnp.asarray(pod))
+    q_true = jax.ops.segment_sum(q, jnp.asarray(pod), num_segments=n_pods)
+    stale = q_true + jnp.asarray(
+        rng.integers(-3, 6, n_pods).astype(np.float32))
+    stale = jnp.maximum(stale, 0.0)
+
+    def pod_scores(qp):
+        J, _ = mo_scores(agg.T[:, g], agg.E[:, g], agg.mAP[:, g], qp,
+                         delta=delta, gamma=gamma)
+        return np.asarray(J)
+
+    J_stale, J_true = pod_scores(stale), pod_scores(q_true)
+    picked = int(np.argmin(J_stale))
+    eps = float(np.max(np.abs(J_stale - J_true)))
+    regret = float(J_true[picked] - J_true.min())
+    assert regret <= 2.0 * eps + 1e-5
+
+
+def test_zero_staleness_singleton_pods_reduce_to_flat_select():
+    """Each pair its own pod + fresh queue totals == flat Algorithm 1."""
+    rng = np.random.default_rng(7)
+    for g in range(3):
+        prof, _ = _random_case(rng, P=9, G=3, n_pods=9)
+        pod = jnp.arange(9, dtype=jnp.int32)
+        agg = pod_aggregate(prof, pod)
+        np.testing.assert_array_equal(np.asarray(agg.T), np.asarray(prof.T))
+        q = jnp.asarray(rng.integers(0, 8, 9).astype(np.float32))
+        p_h, pod_h = hierarchical_select(prof, agg, pod, g, q, q,
+                                         delta=15.0, gamma=0.4)
+        p_f, _, _ = mo_select(prof, g, q, delta=15.0, gamma=0.4)
+        assert int(p_h) == int(p_f) == int(pod_h)
+
+
+# -------------------------------------------------- permutation invariance
+
+@settings(max_examples=40, deadline=None)
+@given(hierarchy_case())
+def test_pod_selection_invariant_to_within_pod_permutation(case):
+    """Shuffling pairs *within* pods changes nothing the balancer can
+    observe: same pod is chosen, and the chosen pair has identical
+    profile columns (mo_scores is built from permutation-equivariant
+    reductions, so scores permute bitwise with the rows)."""
+    prof, pod, g, q, delta, gamma, rng = case
+    P = prof.n_pairs
+    perm = np.arange(P)
+    for k in range(int(pod.max()) + 1):
+        idx = np.flatnonzero(pod == k)
+        perm[idx] = rng.permutation(idx)
+    prof2 = ProfileTable(prof.T[perm], prof.E[perm], prof.mAP[perm])
+    pod2, q2 = jnp.asarray(pod[perm]), q[perm]
+
+    agg1 = pod_aggregate(prof, jnp.asarray(pod))
+    agg2 = pod_aggregate(prof2, pod2)
+    for a, b in ((agg1.T, agg2.T), (agg1.E, agg2.E), (agg1.mAP, agg2.mAP)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    n_pods = int(pod.max()) + 1
+    q_pod = jax.ops.segment_sum(q, jnp.asarray(pod), num_segments=n_pods)
+    p1, k1 = hierarchical_select(prof, agg1, jnp.asarray(pod), g, q, q_pod,
+                                 delta=delta, gamma=gamma)
+    p2, k2 = hierarchical_select(prof2, agg2, pod2, g, q2, q_pod,
+                                 delta=delta, gamma=gamma)
+    assert int(k1) == int(k2)
+    # identity-robust to score ties: compare the chosen pair's columns
+    for tbl, tbl2 in ((prof.T, prof2.T), (prof.E, prof2.E),
+                      (prof.mAP, prof2.mAP)):
+        np.testing.assert_array_equal(np.asarray(tbl)[int(p1)],
+                                      np.asarray(tbl2)[int(p2)])

@@ -44,11 +44,13 @@ def _drift():
 @pytest.mark.parametrize("dispatch", ["none", "static", "online",
                                       "windowed"])
 @pytest.mark.parametrize("drift", ["none", "throttle"])
+@pytest.mark.parametrize("cloud", ["none", "tier"])
 def test_scenario_roundtrip_all_component_combos(workload, dispatch,
-                                                 drift):
+                                                 drift, cloud):
     """Scenario.from_json(s.to_json()) == s over the full component cube
-    (workload x dispatch x drift), via the dict AND the JSON string, with
-    a stable hash."""
+    (workload x dispatch x drift x cloud), via the dict AND the JSON
+    string, with a stable hash."""
+    from repro.core.cloud import CloudTier
     from repro.core.workload import MarkovWorkload
 
     wl = {"none": None, "markov": MarkovWorkload(),
@@ -57,10 +59,13 @@ def test_scenario_roundtrip_all_component_combos(workload, dispatch,
           "online": OnlineDispatch(alpha=0.2, prior_weight=5.0),
           "windowed": OnlineDispatch(window=12)}
     dr = {"none": None, "throttle": _drift()}
+    cl = {"none": None,
+          "tier": CloudTier(rtt_ms=80.0, bw_mbps=float("inf"),
+                            payload_kb=np.linspace(30, 90, 5))}
     sc = Scenario(n_users=7, n_requests=90, policy="LT", gamma=0.25,
                   delta=15.0, stickiness=0.7, seed=11, mesh=None,
                   workload=wl[workload], dispatch=dp[dispatch],
-                  drift=dr[drift])
+                  drift=dr[drift], cloud=cl[cloud])
     back = Scenario.from_json(sc.to_json())
     assert back == sc and back.hash == sc.hash
     again = Scenario.from_json(json.dumps(sc.to_json()))
@@ -75,6 +80,10 @@ def test_scenario_roundtrip_all_component_combos(workload, dispatch,
         np.testing.assert_array_equal(np.asarray(back.workload.counts),
                                       np.asarray(sc.workload.counts))
         assert back.workload.name == sc.workload.name
+    if cloud == "tier":
+        np.testing.assert_array_equal(back.cloud.payload_kb,
+                                      sc.cloud.payload_kb)
+        assert back.cloud.bw_mbps == float("inf")
 
 
 def test_roundtripped_scenario_runs_identically():

@@ -14,7 +14,11 @@ Pinned contracts:
   * streamed (chunked) workload draws reassemble bitwise for any chunk
     size, Markov and trace both;
   * a multi-block config's metrics equal the left-fold combination of
-    its blocks run one-by-one;
+    its blocks run one-by-one — with ``latency_p90_ms`` the exact
+    percentile of the merged per-block latency histograms
+    (partition-invariant: any K-way block split of the same pooled
+    sample gives the identical merged histogram, hence the identical
+    percentile);
   * one ``run()`` at n_users=10^5 completes on CPU with users/sec >=
     10x the looped per-value (dense-user) path; 10^6 runs behind
     ``REPRO_MILLION_USERS=1``.
@@ -311,15 +315,16 @@ def test_multi_block_equals_manual_per_block_runs():
     wl, de = MarkovWorkload(), StaticDispatch()
     warmup = 12
 
-    per_block = _sweep_summaries(prof, wl, de, None, grid,
+    per_block = _sweep_summaries(prof, wl, de, None, None, grid,
                                  n_requests=120, warmup=warmup,
-                                 mesh=None)
+                                 mesh=None, with_hist=True)
+    hists = per_block.pop("latency_hist")
     # each block row == its own single-row run (the engine's vmap
     # invariant, extended to block rows)
     for b in range(3):
         row = ConfigGrid(*[leaf[b:b + 1] for leaf in grid])
-        solo = _sweep_summaries(prof, wl, de, None, row, n_requests=120,
-                                warmup=warmup, mesh=None)
+        solo = _sweep_summaries(prof, wl, de, None, None, row,
+                                n_requests=120, warmup=warmup, mesh=None)
         for k in per_block:
             _assert_metric_equal(k, per_block[k][b], solo[k][0],
                                  err_msg=f"block {b}: {k}")
@@ -333,6 +338,10 @@ def test_multi_block_equals_manual_per_block_runs():
                 want = np.float32(want + x)
         elif k == "makespan_s":
             want = blocks.max()
+        elif k == "latency_p90_ms":
+            # exact fleet-wide percentile: the merged per-block histogram
+            merged = np.asarray(hists, np.float32).sum(0)
+            want = np.float32(1000.0 * UA.histogram_p90(merged))
         else:
             acc = np.float32(0.0)
             for x in blocks:
@@ -340,6 +349,31 @@ def test_multi_block_equals_manual_per_block_runs():
             want = np.float32(acc / np.float32(3.0))
         np.testing.assert_array_equal(
             np.float32(res.scalar(k)), want, err_msg=k)
+
+
+def test_hist_p90_partition_invariant_and_matches_dense():
+    """The merged-histogram p90 is a pure function of the pooled sample:
+    any K-way split of the same latencies gives a bit-identical merged
+    histogram, hence a bit-identical percentile (0 ULP — stronger than
+    the 1-ULP pin the contract asks for); the estimator itself tracks
+    ``np.percentile`` within the log-bin quantization (~0.55%
+    relative)."""
+    rng = np.random.default_rng(0)
+    lat = rng.lognormal(-2.0, 1.0, size=4096).astype(np.float32)
+    dense = np.asarray(UA.latency_histogram(lat))
+    assert dense.shape == (UA.HIST_BINS,)
+    assert dense.sum() == lat.size
+    for k in (2, 3, 7, 16):
+        merged = np.zeros_like(dense)
+        for part in np.array_split(lat, k):
+            merged = merged + np.asarray(UA.latency_histogram(part))
+        np.testing.assert_array_equal(merged, dense, err_msg=f"K={k}")
+        np.testing.assert_array_equal(
+            np.asarray(UA.histogram_p90(merged)),
+            np.asarray(UA.histogram_p90(dense)), err_msg=f"K={k}")
+    est = float(UA.histogram_p90(dense))
+    ref = float(np.percentile(np.asarray(lat, np.float64), 90))
+    assert abs(est - ref) / ref < 5e-3, (est, ref)
 
 
 def test_user_block_is_a_static_sweep_axis():
