@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policies import mo_select_batch
-from repro.core.profiles import ProfileTable, paper_fleet
+from repro.core.profiles import ProfileTable, paper_fleet, synthetic_fleet
 from repro.kernels.decode_attention import (decode_attention,
                                             ref_decode_attention)
 from repro.kernels.flash_attention import flash_attention, ref_attention
@@ -15,7 +15,10 @@ from repro.kernels.moscore import moscore_route
 
 
 def _time(fn, *args, n=5):
-    fn(*args)  # compile
+    # block the warmup result: the compile call is async-dispatched, and
+    # un-drained warmup work would leak into the timed region below,
+    # polluting every us_per_call row
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(n):
         out = fn(*args)
@@ -41,14 +44,29 @@ def run() -> list[str]:
     t_r = _time(jax.jit(ref_decode_attention), qd, kd, vd)
     rows.append(f"kernel.decode_attention_1k,{t_k:.0f},{t_r / t_k:.2f}")
 
-    prof = paper_fleet()
-    gs = jax.random.randint(rng, (256,), 0, 5)
-    q0 = jnp.zeros((5,))
-    t_k = _time(lambda *a: moscore_route(*a, delta=20.0, gamma=0.5),
+    # moscore: every backend vs the unhoisted XLA reference scan, on the
+    # paper fleet (P=5 — scan-overhead bound) and a 200-pair synthetic
+    # fleet (reduction bound, where hoisting pays most)
+    def _moscore_rows(prof, tag):
+        gs = jax.random.randint(rng, (256,), 0, prof.n_groups)
+        q0 = jnp.zeros((prof.n_pairs,))
+        ref = jax.jit(lambda T, E, M, g, q: mo_select_batch(
+            ProfileTable(T, E, M), g, q, delta=20.0, gamma=0.5))
+        t_r = _time(ref, prof.T, prof.E, prof.mAP, gs, q0)
+        out = []
+        for backend in ("pallas", "hoisted", "pallas_hoisted", "int8"):
+            t_k = _time(lambda *a, b=backend: moscore_route(
+                *a, delta=20.0, gamma=0.5, backend=b),
                 prof.T, prof.E, prof.mAP, gs, q0)
-    ref = jax.jit(lambda T, E, M, g, q: mo_select_batch(
-        ProfileTable(T, E, M), g, q, delta=20.0, gamma=0.5))
-    t_r = _time(ref, prof.T, prof.E, prof.mAP, gs, q0)
-    rows.append(f"kernel.moscore_window256,{t_k:.0f},{t_r / t_k:.2f}")
-    rows.append(f"kernel.moscore_us_per_decision,{t_k / 256:.2f},")
+            name = "" if backend == "pallas" else f"_{backend}"
+            out.append(f"kernel.moscore{name}_{tag}window256,"
+                       f"{t_k:.0f},{t_r / t_k:.2f}")
+            if backend == "hoisted" and tag == "":
+                out.append(f"kernel.moscore_us_per_decision,"
+                           f"{t_k / 256:.2f},")
+        return out
+
+    rows += _moscore_rows(paper_fleet(), "")
+    rows += _moscore_rows(synthetic_fleet(jax.random.PRNGKey(7), 200),
+                          "p200_")
     return rows

@@ -1,0 +1,43 @@
+"""moscore backends: bit-identical fp32 hoisting, bounded-error int8."""
+import numpy as np
+
+from repro.core.profiles import paper_fleet
+from repro.core.quant import QuantProfileTable
+from repro.kernels.moscore import moscore_route, resolve_backend
+
+prof = paper_fleet()
+rng = np.random.default_rng(0)
+gs = rng.integers(0, prof.n_groups, 256)          # estimated groups
+q0 = np.zeros(prof.n_pairs, np.float32)           # live queue depths
+
+# 1. The fp32 backends are interchangeable BIT FOR BIT: the hoisted
+#    variants precompute the queue-independent half of Algorithm 1
+#    (feasibility mask, normalised energy) once per table instead of
+#    once per request — same decisions, same final queue, less work.
+ref_p, ref_q = moscore_route(prof.T, prof.E, prof.mAP, gs, q0,
+                             delta=15.0, gamma=0.5, backend="xla")
+for backend in ("pallas", "hoisted", "pallas_hoisted"):
+    p, q = moscore_route(prof.T, prof.E, prof.mAP, gs, q0,
+                         delta=15.0, gamma=0.5, backend=backend)
+    assert (np.asarray(p) == np.asarray(ref_p)).all(), backend
+    assert (np.asarray(q) == np.asarray(ref_q)).all(), backend
+
+# 2. 'auto' — what the serving gateway uses — resolves per platform
+#    (hoisted Pallas kernel on TPU, hoisted XLA scan elsewhere); the
+#    REPRO_MOSCORE_BACKEND env var overrides it process-wide.
+print("auto ->", resolve_backend("auto"))
+
+# 3. The int8 backend routes on quantized tables: T and E drop to int8
+#    with one fp32 scale per group column (~4x smaller hot payload), mAP
+#    stays fp32 so the accuracy-feasibility set is EXACT. Decisions may
+#    differ from fp32 only between near-tied candidates (the bounded-
+#    mismatch contract, tested in tests/test_quant_route.py).
+qt = QuantProfileTable.from_profile(prof)
+fp32_bytes = 2 * 4 * prof.n_pairs * prof.n_groups
+print(f"hot tables: {fp32_bytes} B fp32 -> {qt.nbytes_hot} B int8")
+p8, _ = moscore_route(prof.T, prof.E, prof.mAP, gs, q0,
+                      delta=15.0, gamma=0.5, backend="int8")
+thr = np.asarray(prof.mAP).max(axis=0) - 15.0     # still feasible, always
+assert (np.asarray(prof.mAP)[np.asarray(p8), gs] >= thr[gs]).all()
+agree = float(np.mean(np.asarray(p8) == np.asarray(ref_p)))
+print(f"int8 vs fp32 decision agreement: {agree:.0%}")

@@ -86,7 +86,7 @@ class DispatchEngine:
         raise NotImplementedError
 
     def select(self, state, prof, code, g_est, q, key, gamma, delta,
-               penalty=None):
+               penalty=None, tables=None):
         """Score one request -> ``(pair, new_state)``. ``code`` is the
         policy index (``POLICY_CODES``), ``g_est`` the estimated group,
         ``q`` the (P,) live queue depths, ``key`` a fresh threefry key
@@ -94,9 +94,14 @@ class DispatchEngine:
         ms) is the cloud tier's uplink congestion term, added to the
         latency-aware policies' expected latency
         (``repro.core.policies.policy_scores``); ``None`` keeps the
-        traced graph exactly as before."""
-        p, _scores = select_pair(code, self.tables(state, prof), g_est, q,
-                                 key, state["rr"] % prof.n_pairs, gamma,
+        traced graph exactly as before. ``tables`` (optional) is a
+        pre-materialised belief :class:`ProfileTable` for ``state`` —
+        :meth:`select_window` hoists the :meth:`tables` call out of its
+        scan and passes it here; ``None`` (every per-request caller)
+        materialises it on the spot."""
+        tbl = self.tables(state, prof) if tables is None else tables
+        p, _scores = select_pair(code, tbl, g_est, q, key,
+                                 state["rr"] % prof.n_pairs, gamma,
                                  delta, penalty)
         return p, {**state, "rr": state["rr"] + 1}
 
@@ -112,17 +117,26 @@ class DispatchEngine:
         gateway jits this once per window shape — one device program per
         admission window instead of W dispatches.
 
+        The belief tables are materialised ONCE, outside the scan:
+        :meth:`select` never touches the belief half of the state (only
+        ``rr`` advances; observations arrive separately via
+        :meth:`observe_window`), so :meth:`tables` is loop-invariant
+        across the window — hoisting it saves the per-request table
+        blend (for :class:`OnlineDispatch` in window mode, a whole
+        (P, G) prior-blend per request), bit-identically.
+
         ``penalty_fn`` (optional) maps ``(g, q) -> (P,)`` per-decision
         latency penalties — the cloud tier's congestion feedback,
         re-evaluated against each decision's live ``q`` inside the scan
         (:meth:`repro.core.cloud.CloudMeta.penalty`)."""
+        tbl = self.tables(state, prof)
 
         def step(carry, inp):
             st, q = carry
             g, key = inp
             pen = None if penalty_fn is None else penalty_fn(g, q)
             p, st = self.select(st, prof, code, g, q, key, gamma, delta,
-                                penalty=pen)
+                                penalty=pen, tables=tbl)
             return (st, q.at[p].add(1.0)), p
 
         (state, q), pairs = jax.lax.scan(

@@ -64,6 +64,74 @@ def mo_select(prof: ProfileTable, g, q, *, delta: float = 5.0,
     return jnp.argmin(J), J, feasible
 
 
+# ------------------------------------------- hoisted (queue-independent) --
+#
+# Algorithm 1 splits cleanly into queue-independent and queue-dependent
+# halves: the accuracy-feasibility mask (mAP, Δ), the feasible-set energy
+# extrema e_min/e_max and the normalised energy term E_n depend only on
+# the request's GROUP, never on the live queue — yet :func:`mo_scores`
+# recomputes all of them for every request of a routing window. The
+# hoisted form precomputes the whole (P, G) queue-independent half ONCE
+# per table (:func:`mo_precompute`) and leaves only the expected-latency
+# normalisation + argmin in the per-request step (:func:`mo_scores_hoisted`).
+#
+# Bit-identity: min/max reductions are exactly associative and the
+# surviving per-step expression is written identically, so the hoisted
+# scores — and therefore the routing decisions — are bit-identical to the
+# unhoisted path (asserted across backends in tests/test_kernels.py and
+# pinned against the golden_static_pr3 decisions).
+
+
+def mo_precompute(T, E, mAP, *, delta: float):
+    """The queue-independent half of Algorithm 1, for a whole (P, G) table.
+
+    Returns ``(feasible, E_n)``, both (P, G): the accuracy-feasibility
+    mask and the feasible-set-normalised energy term. Column g of each
+    equals what :func:`mo_scores` computes per request for group ``g`` —
+    bitwise (the reductions are min/max, which commute exactly)."""
+    map_max = jnp.max(mAP, axis=-2, keepdims=True)
+    feasible = mAP >= map_max - delta
+    e_min = jnp.min(jnp.where(feasible, E, BIG), axis=-2, keepdims=True)
+    e_max = jnp.max(jnp.where(feasible, E, -BIG), axis=-2, keepdims=True)
+    E_n = (E - e_min) / jnp.maximum(e_max - e_min, 1e-9)
+    return feasible, E_n
+
+
+def mo_scores_hoisted(T_g, En_g, feas_g, q, *, gamma: float, penalty=None):
+    """Per-request Algorithm 1 scores from precomputed group constants.
+
+    ``T_g``/``En_g``/``feas_g``: (P,) group-g columns of the profile and
+    of :func:`mo_precompute`'s outputs; ``q``: (P,) live queue depths.
+    Only the expected-latency normalisation survives in the step — J is
+    bit-identical to :func:`mo_scores` on the same inputs."""
+    L_exp = T_g * (1.0 + q)
+    if penalty is not None:
+        L_exp = L_exp + penalty
+    l_min = jnp.min(jnp.where(feas_g, L_exp, BIG))
+    l_max = jnp.max(jnp.where(feas_g, L_exp, -BIG))
+    L_n = (L_exp - l_min) / jnp.maximum(l_max - l_min, 1e-9)
+    J = gamma * L_n + (1.0 - gamma) * En_g
+    return jnp.where(feas_g, J, BIG)
+
+
+def mo_select_batch_hoisted(prof: ProfileTable, gs, q0, *,
+                            delta: float = 5.0, gamma: float = 0.5):
+    """:func:`mo_select_batch` with the queue-independent work hoisted out
+    of the scan — the XLA form of the ``hoisted`` moscore backend. Same
+    contract, bit-identical assignments and final queue."""
+    feasible, E_n = mo_precompute(prof.T, prof.E, prof.mAP, delta=delta)
+    # transpose once so the scan gathers contiguous (P,) group rows
+    Tt, Ent, Ft = prof.T.T, E_n.T, feasible.T
+
+    def step(q, g):
+        J = mo_scores_hoisted(Tt[g], Ent[g], Ft[g], q, gamma=gamma)
+        p = jnp.argmin(J)
+        return q.at[p].add(1.0), p
+
+    q, ps = jax.lax.scan(step, q0.astype(f32), gs)
+    return ps, q
+
+
 def mo_select_batch(prof: ProfileTable, gs, q0, *, delta: float = 5.0,
                     gamma: float = 0.5):
     """Sequential assignment of a routing window with queue feedback:

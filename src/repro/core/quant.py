@@ -1,0 +1,127 @@
+"""int8-quantized routing tables for the moscore hot path.
+
+The router's working set is tiny — (P, G) fp32 tables — but on the
+serving hot path the latency/energy half is re-materialised every
+admission window (the :class:`~repro.core.dispatch.OnlineDispatch`
+belief blend) and handed to the fused kernel. :class:`QuantProfileTable`
+stores ``T`` and ``E`` as int8 with one fp32 scale per *group column*:
+all P pairs of a group share a scale, so dequantisation is a (P, G)
+multiply and the error per cell is bounded by half a quantisation step
+of its column's absmax (|x - deq(q(x))| <= absmax_g / 254).
+
+``mAP`` is deliberately NOT quantized. It exists only to build the
+accuracy-feasibility mask — a queue-independent bool table the hoisted
+kernel precomputes once — and quantising it flips feasibility at the Δ
+boundary, which lets the router pick accuracy-infeasible pairs (score
+regret up to the full normalised range, measured). Keeping mAP fp32
+matches the belief-table contract too: ``OnlineDispatch`` adapts T/E
+from observations and keeps mAP offline-profiled, so T/E are exactly
+the tables that churn per window.
+
+The quantisation machinery is ``repro.training.compression.quantize_int8``
+— the same per-chunk absmax scheme the cross-pod gradient reduction uses
+(and ``tests/test_kv_quant.py``'s int8 KV cache before it) — applied with
+``chunk = P`` to the transposed (G, P) table, so each chunk IS a group
+column.
+
+Routing against dequantised tables is NOT bit-identical to fp32 routing:
+the contract is *bounded decision mismatch* instead — every choice stays
+accuracy-feasible by construction, mismatches happen only between
+near-tied candidates (fp32-score regret bounded; hypothesis-tested in
+``tests/test_quant_route.py`` with end-metric deltas bounded on the
+paper-fleet sweep). The fp32 ``hoisted`` backend keeps the bit-identical
+contract; ``int8`` trades near-tie exactness for a 4x smaller hot-table
+footprint. See ``docs/kernels.md``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profiles import ProfileTable
+from repro.training.compression import dequantize_int8, quantize_int8
+
+f32 = jnp.float32
+
+
+def _quantize_columns(x):
+    """(P, G) fp32 -> ((P, G) int8, (G,) fp32 per-group-column scales),
+    via :func:`quantize_int8` on the transposed table with ``chunk = P``
+    (each chunk is exactly one group column)."""
+    P = x.shape[-2]
+    q, scales, _shape = quantize_int8(jnp.asarray(x, f32).T, chunk=P)
+    return q.T, scales
+
+
+def _dequantize_columns(q, scales):
+    """Inverse of :func:`_quantize_columns` (shapes (P, G) + (G,))."""
+    return dequantize_int8(q.T, scales, q.T.shape).T
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class QuantProfileTable:
+    """A :class:`~repro.core.profiles.ProfileTable` with its latency and
+    energy tables quantized to int8 under per-group-column fp32 scales —
+    the wire/VMEM format the int8 moscore backend scores against.
+
+    ``qT``/``qE`` are (P, G) int8 with (G,) scales; ``mAP`` rides along
+    fp32 (see the module docstring for why). A registered pytree, so it
+    crosses ``jit`` boundaries and :meth:`from_profile` /
+    :meth:`dequantize` are traced (the gateway can quantize the
+    OnlineDispatch belief blend per window inside its jitted route)."""
+
+    qT: jax.Array               # (P, G) int8
+    qE: jax.Array               # (P, G) int8
+    t_scale: jax.Array          # (G,) fp32 per-group-column scales
+    e_scale: jax.Array          # (G,)
+    mAP: jax.Array              # (P, G) fp32 — feasibility stays exact
+    names: tuple[str, ...] = ()
+
+    def tree_flatten(self):
+        return ((self.qT, self.qE, self.t_scale, self.e_scale, self.mAP),
+                self.names)
+
+    @classmethod
+    def tree_unflatten(cls, names, leaves):
+        return cls(*leaves, names)
+
+    @property
+    def n_pairs(self) -> int:
+        return self.qT.shape[-2]
+
+    @property
+    def n_groups(self) -> int:
+        return self.qT.shape[-1]
+
+    @property
+    def nbytes_hot(self) -> int:
+        """Payload bytes of the per-window (belief) half: int8 T/E cells
+        plus their fp32 column scales — vs ``8 * P * G`` unquantized."""
+        return 2 * self.n_pairs * self.n_groups + 2 * 4 * self.n_groups
+
+    @classmethod
+    def from_profile(cls, prof: ProfileTable) -> "QuantProfileTable":
+        if prof.is_stacked:
+            raise ValueError("QuantProfileTable quantizes one fleet; "
+                             "stacked (F, P, G) tables are not supported")
+        qT, ts = _quantize_columns(prof.T)
+        qE, es = _quantize_columns(prof.E)
+        return cls(qT, qE, ts, es, jnp.asarray(prof.mAP, f32), prof.names)
+
+    def dequantize(self) -> ProfileTable:
+        """Materialise fp32 belief tables from the int8 payload (what the
+        int8 backend actually scores against — so CPU/TPU agree on the
+        quantisation error by construction). ``floor_mw`` is not part of
+        the routing hot path and is dropped."""
+        return ProfileTable(_dequantize_columns(self.qT, self.t_scale),
+                            _dequantize_columns(self.qE, self.e_scale),
+                            self.mAP, self.names)
+
+
+def quantize_roundtrip(prof: ProfileTable) -> ProfileTable:
+    """fp32 -> int8 -> fp32: the tables the int8 backend scores against."""
+    return QuantProfileTable.from_profile(prof).dequantize()

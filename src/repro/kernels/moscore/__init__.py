@@ -1,6 +1,7 @@
-from repro.kernels.moscore.ops import (default_backend, moscore_route,
+from repro.kernels.moscore.ops import (BACKEND_ENV, BACKENDS,
+                                       default_backend, moscore_route,
                                        resolve_backend)
 from repro.kernels.moscore.ref import ref_moscore_route
 
 __all__ = ["moscore_route", "ref_moscore_route", "default_backend",
-           "resolve_backend"]
+           "resolve_backend", "BACKENDS", "BACKEND_ENV"]

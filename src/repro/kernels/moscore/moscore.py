@@ -57,6 +57,68 @@ def _moscore_kernel(tg_ref, eg_ref, mg_ref, g_ref, q0_ref, out_ref, qf_ref,
     qf_ref[...] = q.astype(qf_ref.dtype)
 
 
+def _moscore_hoisted_kernel(tg_ref, en_ref, fs_ref, g_ref, q0_ref, out_ref,
+                            qf_ref, *, gamma: float, n_window: int):
+    # The invariant-hoisted variant: the accuracy-feasibility mask and the
+    # normalised energy term are queue-independent, so ops.py precomputes
+    # them once per table (core.policies.mo_precompute) and the kernel's
+    # W-step loop keeps only the L = T_g*(1+q) normalisation + argmin —
+    # 2 masked reductions and 1 divide per step instead of 5 and 2, and
+    # one fewer (G, P') table in VMEM doing per-step reduction work.
+    # tg/en: (G, P') f32; fs: (G, P') f32 {0, 1}; g: (W, 1) int32;
+    # q0: (1, P'). Decisions are bit-identical to _moscore_kernel's (the
+    # surviving per-step expression is written identically).
+    _, p = tg_ref.shape
+
+    def body(w, q):
+        g = g_ref[w, 0]
+        Tg = jax.lax.dynamic_slice(tg_ref[...], (g, 0), (1, p))   # (1, P')
+        En = jax.lax.dynamic_slice(en_ref[...], (g, 0), (1, p))
+        feas = jax.lax.dynamic_slice(fs_ref[...], (g, 0), (1, p)) > 0.0
+
+        L = Tg * (1.0 + q)
+        l_min = jnp.min(jnp.where(feas, L, BIG))
+        l_max = jnp.max(jnp.where(feas, L, -BIG))
+        Ln = (L - l_min) / jnp.maximum(l_max - l_min, 1e-9)
+        J = jnp.where(feas, gamma * Ln + (1.0 - gamma) * En, BIG)
+
+        sel = jnp.argmin(J[0]).astype(jnp.int32)
+        pl.store(out_ref, (w, jnp.asarray(0, jnp.int32)), sel)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (1, p), 1) == sel)
+        return q + onehot.astype(q.dtype)
+
+    q = jax.lax.fori_loop(0, n_window, body, q0_ref[...].astype(jnp.float32))
+    qf_ref[...] = q.astype(qf_ref.dtype)
+
+
+def moscore_hoisted_pallas(Tt, Ent, Ft, gs, q0, *, gamma: float,
+                           interpret: bool = True):
+    """Invariant-hoisted kernel: Tt (G, P') fp32 transposed profile, Ent
+    (G, P') the precomputed normalised-energy term, Ft (G, P') fp32
+    feasibility mask (1.0 feasible / 0.0 not — padded pairs 0), gs (W, 1)
+    int32, q0 (1, P') fp32. Returns (choices (W, 1) int32, q_final
+    (1, P') fp32), bit-identical to :func:`moscore_pallas` on the same
+    unquantized tables."""
+    g_dim, p = Tt.shape
+    w = gs.shape[0]
+    kernel = functools.partial(_moscore_hoisted_kernel, gamma=gamma,
+                               n_window=w)
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec(Tt.shape, lambda: (0, 0)),
+                  pl.BlockSpec(Ent.shape, lambda: (0, 0)),
+                  pl.BlockSpec(Ft.shape, lambda: (0, 0)),
+                  pl.BlockSpec(gs.shape, lambda: (0, 0)),
+                  pl.BlockSpec(q0.shape, lambda: (0, 0))],
+        out_specs=[pl.BlockSpec((w, 1), lambda: (0, 0)),
+                   pl.BlockSpec((1, p), lambda: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((w, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((1, p), jnp.float32)],
+        interpret=interpret,
+    )(Tt, Ent, Ft, gs, q0)
+
+
 def moscore_pallas(Tt, Et, Mt, gs, q0, *, delta: float, gamma: float,
                    interpret: bool = True):
     """Tt/Et/Mt: (G, P') fp32 transposed profiles (P' multiple of 128);

@@ -1,48 +1,96 @@
 """Jitted wrapper: lane padding, transposition, unpadding — and the
-backend-aware dispatch between the Pallas kernel and the XLA reference.
+backend-aware dispatch between the moscore implementations.
 
-Both backends implement the same contract bit-for-bit (the kernel tests
-assert it), so callers pick purely on speed: the Pallas kernel wins where
-it compiles natively (TPU); everywhere else it runs in interpret mode and
-*loses* to the XLA ``lax.scan`` reference (~0.3x on CPU — the ``kernels``
-bench suite tracks the ratio). ``backend="auto"`` — what the serving
-gateway's hot path uses — resolves that choice per platform.
+Five concrete backends share one contract (``(T, E, mAP, gs, q0) ->
+(choices, q_final)``), split across two accuracy classes:
+
+bit-identical fp32 routing (interchangeable, asserted by the kernel
+tests):
+
+  * ``"xla"`` — the ``lax.scan`` reference (``core.policies
+    .mo_select_batch``), every Algorithm-1 term recomputed per request;
+  * ``"pallas"`` — the original fused kernel (same per-request work, one
+    kernel launch);
+  * ``"hoisted"`` — the invariant-hoisted XLA scan
+    (``mo_select_batch_hoisted``): the queue-independent terms
+    (feasibility mask, e_min/e_max, normalised energy) precomputed once
+    per table, only the latency normalisation + argmin left in the scan;
+  * ``"pallas_hoisted"`` — the hoisted Pallas kernel (same precompute,
+    fused scan in VMEM).
+
+bounded-error int8 routing:
+
+  * ``"int8"`` — quantize the tables to int8 with per-group-column
+    scales (``core.quant.QuantProfileTable``), dequantize, route via the
+    hoisted scan. NOT bit-identical: decisions carry a bounded mismatch
+    rate vs fp32 (tested in ``tests/test_quant_route.py``).
+
+``backend="auto"`` — what the serving gateway's hot path uses — resolves
+per platform: the compiled hoisted Pallas kernel on TPU, the hoisted XLA
+scan elsewhere (where Pallas falls back to interpret mode and loses by
+~3x). The ``REPRO_MOSCORE_BACKEND`` environment variable overrides the
+``auto`` choice process-wide (ops experiments, A/B-ing int8 on a live
+gateway) without touching call sites; explicit ``backend=`` arguments
+always win over the env. The ``kernels`` bench suite tracks every
+backend's speedup vs the ``"xla"`` reference.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.moscore.moscore import moscore_pallas
+from repro.core.policies import mo_precompute, mo_select_batch_hoisted
+from repro.core.profiles import ProfileTable
+from repro.core.quant import quantize_roundtrip
+from repro.kernels.moscore.moscore import moscore_hoisted_pallas, \
+    moscore_pallas
 from repro.kernels.moscore.ref import ref_moscore_route
 
 BIG = 1e30
 
-BACKENDS = ("pallas", "xla", "auto")
+BACKENDS = ("pallas", "xla", "hoisted", "pallas_hoisted", "int8", "auto")
+
+#: environment override for ``backend="auto"`` (see :func:`resolve_backend`)
+BACKEND_ENV = "REPRO_MOSCORE_BACKEND"
 
 
 def default_backend() -> str:
     """The fastest correct routing backend for this process' platform:
-    the compiled Pallas kernel on TPU, the XLA reference scan elsewhere
-    (where Pallas would fall back to interpret mode)."""
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+    the compiled hoisted Pallas kernel on TPU, the hoisted XLA scan
+    elsewhere (both bit-identical to the reference)."""
+    return "pallas_hoisted" if jax.default_backend() == "tpu" else "hoisted"
 
 
 def resolve_backend(backend: str) -> str:
-    """Normalize a backend spec to a concrete one (``"auto"`` picks per
-    platform via :func:`default_backend`)."""
+    """Normalize a backend spec to a concrete one. ``"auto"`` consults
+    the ``REPRO_MOSCORE_BACKEND`` environment variable first (a concrete
+    backend name — ``auto`` itself is rejected to avoid a resolution
+    loop), then falls back to the per-platform :func:`default_backend`.
+    Explicit backends pass through untouched — the env only steers
+    callers that left the choice open."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown moscore backend {backend!r}; one of "
                          f"{BACKENDS}")
-    return default_backend() if backend == "auto" else backend
+    if backend != "auto":
+        return backend
+    env = os.environ.get(BACKEND_ENV, "").strip()
+    if env:
+        if env not in BACKENDS or env == "auto":
+            raise ValueError(
+                f"{BACKEND_ENV}={env!r} is not a concrete moscore backend; "
+                f"one of {tuple(b for b in BACKENDS if b != 'auto')}")
+        return env
+    return default_backend()
 
 
-@functools.partial(jax.jit, static_argnames=("delta", "gamma", "interpret"))
-def _pallas_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
-                  interpret: bool):
+def _pad_transpose(T, E, mAP, gs, q0):
+    """Lane-pad the (P, G) tables to P' (multiple of 128), transpose to
+    (G, P') and shape gs/q0 for the 2-D kernels. Padded pairs get
+    T=+BIG / mAP=-BIG so they are never feasible."""
     P, G = T.shape
     Pp = (P + 127) // 128 * 128
     padP = Pp - P
@@ -51,18 +99,59 @@ def _pallas_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
         return jnp.pad(x.astype(jnp.float32), ((0, padP), (0, 0)),
                        constant_values=fill)
 
-    Tt = pad(T, BIG).T
-    Et = pad(E, BIG).T
-    Mt = pad(mAP, -BIG).T          # padded pairs can never be feasible
     q0p = jnp.pad(q0.astype(jnp.float32), (0, padP))[None, :]
     gsc = gs.astype(jnp.int32)[:, None]
+    return pad(T, BIG).T, pad(E, BIG).T, pad(mAP, -BIG).T, gsc, q0p, P
 
+
+@functools.partial(jax.jit, static_argnames=("delta", "gamma", "interpret"))
+def _pallas_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
+                  interpret: bool):
+    Tt, Et, Mt, gsc, q0p, P = _pad_transpose(T, E, mAP, gs, q0)
     choices, qf = moscore_pallas(Tt, Et, Mt, gsc, q0p, delta=delta,
                                  gamma=gamma, interpret=interpret)
     return choices[:, 0], qf[0, :P]
 
 
+@functools.partial(jax.jit, static_argnames=("delta", "gamma", "interpret"))
+def _pallas_hoisted_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
+                          interpret: bool):
+    # the queue-independent precompute runs OUTSIDE the kernel, on the
+    # unpadded tables — identical reductions to the XLA hoisted path, so
+    # the kernel sees the exact same (G, P) constants
+    feasible, E_n = mo_precompute(T.astype(jnp.float32),
+                                  E.astype(jnp.float32),
+                                  mAP.astype(jnp.float32), delta=delta)
+    Tt, Ent, Ft, gsc, q0p, P = _pad_transpose(
+        T, E_n, feasible.astype(jnp.float32), gs, q0)
+    # _pad_transpose pads E_n with +BIG and the mask with -BIG; the mask
+    # just needs "not feasible" (<= 0) on padded pairs, which -BIG is,
+    # and masked E_n values are never read
+    choices, qf = moscore_hoisted_pallas(Tt, Ent, Ft, gsc, q0p,
+                                         gamma=gamma, interpret=interpret)
+    return choices[:, 0], qf[0, :P]
+
+
 _xla_route = jax.jit(ref_moscore_route, static_argnames=("delta", "gamma"))
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "gamma"))
+def _hoisted_route(T, E, mAP, gs, q0, *, delta: float, gamma: float):
+    ps, q = mo_select_batch_hoisted(ProfileTable(T, E, mAP), gs, q0,
+                                    delta=delta, gamma=gamma)
+    return ps.astype(jnp.int32), q
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "gamma"))
+def _int8_route(T, E, mAP, gs, q0, *, delta: float, gamma: float):
+    # quantize -> dequantize -> hoisted scan: the int8 grid is what both
+    # CPU and TPU score against, so the quantisation error is identical
+    # across platforms by construction
+    deq = quantize_roundtrip(ProfileTable(T.astype(jnp.float32),
+                                          E.astype(jnp.float32),
+                                          mAP.astype(jnp.float32)))
+    ps, q = mo_select_batch_hoisted(deq, gs, q0, delta=delta, gamma=gamma)
+    return ps.astype(jnp.int32), q
 
 
 def moscore_route(T, E, mAP, gs, q0, *, delta: float = 20.0,
@@ -73,16 +162,22 @@ def moscore_route(T, E, mAP, gs, q0, *, delta: float = 20.0,
     T/E/mAP: (P, G) profile tables; gs: (W,) int32 estimated groups;
     q0: (P,) queue depths. Returns (choices (W,), q_final (P,)).
 
-    ``backend`` selects the implementation: ``"pallas"`` (default — the
-    fused kernel, in interpret mode unless ``interpret=False``),
-    ``"xla"`` (the ``lax.scan`` reference, jitted), or ``"auto"``
-    (:func:`default_backend` — Pallas compiled on TPU, XLA elsewhere).
-    All backends return bit-identical choices; safe to call under an
-    outer ``jit``."""
+    ``backend`` selects the implementation (see the module docstring):
+    ``"xla"`` | ``"pallas"`` | ``"hoisted"`` | ``"pallas_hoisted"`` are
+    bit-identical fp32 paths, ``"int8"`` routes on quantized tables
+    under the bounded-mismatch contract, and ``"auto"`` resolves via
+    :func:`resolve_backend` (``REPRO_MOSCORE_BACKEND`` env override,
+    else per platform). Safe to call under an outer ``jit``."""
     backend = resolve_backend(backend)
     if backend == "xla":
         return _xla_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma)
-    if backend == "pallas" and jax.default_backend() == "tpu":
+    if backend == "hoisted":
+        return _hoisted_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma)
+    if backend == "int8":
+        return _int8_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma)
+    if jax.default_backend() == "tpu":
         interpret = False
-    return _pallas_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma,
-                         interpret=interpret)
+    route = _pallas_hoisted_route if backend == "pallas_hoisted" \
+        else _pallas_route
+    return route(T, E, mAP, gs, q0, delta=delta, gamma=gamma,
+                 interpret=interpret)

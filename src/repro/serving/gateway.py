@@ -8,9 +8,12 @@ estimator gather (last detected count per stream, a device-resident
 intra-window queue feedback, and the dispatch-state advance — so the
 router's cost per request is a window's worth of XLA work divided by W
 instead of a Python loop body. The MO hot path runs the fused ``moscore``
-kernel (``repro.kernels.moscore``), backend-aware: the compiled Pallas
-kernel on TPU, the bit-identical XLA reference scan elsewhere
-(``backend="auto"``). Every other policy routes through the dispatch
+kernel (``repro.kernels.moscore``), backend-aware: the compiled
+invariant-hoisted Pallas kernel on TPU, the bit-identical hoisted XLA
+scan elsewhere (``backend="auto"``; the ``REPRO_MOSCORE_BACKEND`` env
+var overrides the auto choice, e.g. ``int8`` for quantized belief
+tables under the bounded-mismatch contract — see ``docs/kernels.md``).
+Every other policy routes through the dispatch
 engine's :meth:`~repro.core.dispatch.DispatchEngine.select_window` scan —
 the SAME ``init``/``select``/``observe`` code the batched simulator
 threads through its scan, so simulation and serving still run one
@@ -74,8 +77,11 @@ class WindowedGateway:
     ``__post_init__``; its policy/γ/Δ/dispatch/seed apply to knobs left
     at their defaults). ``n_streams`` is the estimator-state capacity
     (stream ids must stay below it); ``backend`` picks the MO routing
-    kernel (``"auto"`` | ``"pallas"`` | ``"xla"``, see
-    ``repro.kernels.moscore``).
+    kernel (``"auto"`` | one of ``repro.kernels.moscore.BACKENDS`` —
+    the fp32 backends are interchangeable bit-for-bit; ``"int8"``
+    quantizes the belief tables handed to the kernel each window and
+    routes under the bounded-mismatch contract of
+    ``repro.core.quant``).
 
     ``cloud`` is an optional :class:`~repro.core.cloud.CloudTier`: the
     served fleet is extended with its remote pairs

@@ -34,6 +34,11 @@ def floats(min_value, max_value):
     return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
 
 
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: elements[int(r.integers(0, len(elements)))])
+
+
 def composite(fn):
     def build(*args, **kwargs):
         def sample(rng):
@@ -47,12 +52,13 @@ def composite(fn):
     return build
 
 
-def given(*strategies):
+def given(*strategies, **kw_strategies):
     def deco(fn):
         def runner():
             for i in range(N_EXAMPLES):
                 rng = np.random.default_rng(_SEED + i)
-                fn(*[s.sample(rng) for s in strategies])
+                fn(*[s.sample(rng) for s in strategies],
+                   **{k: s.sample(rng) for k, s in kw_strategies.items()})
 
         runner.__name__ = fn.__name__
         runner.__doc__ = fn.__doc__
@@ -69,6 +75,7 @@ def install() -> None:
     st = types.ModuleType("hypothesis.strategies")
     st.integers = integers
     st.floats = floats
+    st.sampled_from = sampled_from
     st.composite = composite
     hyp = types.ModuleType("hypothesis")
     hyp.given = given

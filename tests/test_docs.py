@@ -26,6 +26,7 @@ EMBEDDED_EXAMPLES = {
                         "online_drift.py", "sweep_quickstart.py",
                         "user_scaling.py", "edge_cloud.py"],
     "serving.md": ["serving_gateway.py"],
+    "kernels.md": ["moscore_backends.py"],
 }
 
 

@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               reshard_restore, restore_checkpoint,
@@ -15,7 +17,7 @@ from repro.checkpoint import (AsyncCheckpointer, latest_step,
 from repro.checkpoint.checkpointer import all_steps
 from repro.training.compression import (compress_roundtrip,
                                         compression_error, dequantize_int8,
-                                        quantize_int8)
+                                        quantization_error, quantize_int8)
 
 
 @pytest.fixture()
@@ -115,3 +117,28 @@ def test_quantize_exact_for_small_ints():
     q, s, shp = quantize_int8(x)
     y = dequantize_int8(q, s, shp)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.02)
+
+
+def test_quantization_error_name_and_alias():
+    """``quantization_error`` is the canonical name (shared with the
+    quantized routing tables, ``repro.core.quant``); the pre-rename
+    ``compression_error`` alias stays importable and identical."""
+    assert compression_error is quantization_error
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 64))
+    assert float(quantization_error(x)) == float(compression_error(x))
+    # exactly-representable inputs round-trip with zero error
+    exact = jnp.asarray([[127.0, -64.0, 1.0, 0.0] * 32])
+    assert float(quantization_error(exact, chunk=128)) < 1e-6
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.integers(1, 3000), chunk=st.sampled_from([16, 64, 256, 1024]),
+       seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+def test_quantization_error_documented_bound(n, chunk, seed, scale):
+    """The documented worst-case bound holds for ANY input: per element
+    the round-trip error is at most half a quantisation step of its
+    chunk's absmax, so ``rel_l2 <= sqrt(chunk) / 254`` (see
+    ``quantization_error``'s docstring — typical data sits far below)."""
+    x = scale * jax.random.t(jax.random.PRNGKey(seed), 3.0, (n,))
+    err = float(quantization_error(x, chunk=chunk))
+    assert err <= float(np.sqrt(chunk)) / 254.0 + 1e-6, (n, chunk, err)

@@ -155,19 +155,25 @@ def test_observe_windowed_batch_matches_sequential_ring():
 
 
 def test_moscore_backends_bit_identical():
-    """backend='xla' (the serving hot path off-TPU) == backend='pallas'
-    == resolve_backend('auto'), choice for choice."""
+    """Every fp32 backend — the serving hot path's candidates — agrees
+    with the XLA reference choice for choice, queue for queue."""
     rng = np.random.default_rng(5)
     gs = rng.integers(0, PROF.n_groups, 96)
     q0 = np.zeros(P, np.float32)
     outs = {b: moscore_route(PROF.T, PROF.E, PROF.mAP, gs, q0,
                              delta=15.0, gamma=0.4, backend=b)
-            for b in ("pallas", "xla")}
-    np.testing.assert_array_equal(np.asarray(outs["pallas"][0]),
-                                  np.asarray(outs["xla"][0]))
-    np.testing.assert_allclose(np.asarray(outs["pallas"][1]),
-                               np.asarray(outs["xla"][1]))
-    assert resolve_backend("auto") in ("pallas", "xla")
+            for b in ("pallas", "xla", "hoisted", "pallas_hoisted")}
+    for b in ("pallas", "hoisted", "pallas_hoisted"):
+        np.testing.assert_array_equal(np.asarray(outs[b][0]),
+                                      np.asarray(outs["xla"][0]),
+                                      err_msg=b)
+        np.testing.assert_array_equal(np.asarray(outs[b][1]),
+                                      np.asarray(outs["xla"][1]),
+                                      err_msg=b)
+    # auto resolves to a bit-exact fp32 backend unless the env override
+    # (tested in test_quant_route.py) says otherwise
+    assert resolve_backend("auto") in ("pallas", "xla", "hoisted",
+                                       "pallas_hoisted")
     with pytest.raises(ValueError, match="unknown moscore backend"):
         resolve_backend("cuda")
 
