@@ -1,0 +1,112 @@
+"""Fault resilience: what does failover-aware routing buy when the
+fleet's busiest device goes down, and how does WAN jitter move the
+edge/cloud split?
+
+Part A scripts an outage on the *busiest* pair (argmax of the no-fault
+MO run's per-pair request counts) over the middle third of the run and
+replays it under MO/LT/HA with a health-mask-aware router, plus MO with
+``visible=False`` — the static-table strawman that keeps dispatching
+into the outage and only learns via timeouts. Per policy it reports
+mean/p99 latency and the failed/SLO-violation shares, then a
+recovery-time row: the number of post-outage steps until the
+seed-averaged rolling-mean latency returns to within 10% of the
+pre-outage baseline. The ``aware_recovers_faster`` verdict row is the
+PR's acceptance criterion — failover-aware MO must recover at least as
+fast as the blind static router (and strictly faster unless both are
+instant).
+
+Part B adds a cloud tier and sweeps stochastic WAN RTT jitter in one
+fused scenario-engine run (policy x faults x seed): as the RTT spread
+grows, offloading gets riskier and the offload share + tail latency
+rows show the router hedging back toward the edge."""
+
+from dataclasses import replace
+
+import numpy as np
+
+from repro.core import scenario as SC
+from repro.core.cloud import CloudTier
+from repro.core.faults import FaultSchedule
+from repro.core.scenario import Scenario, Sweep
+
+POLICIES = ["MO", "LT", "HA"]
+JITTERS = [0.0, 20.0, 60.0, 150.0]
+TIMEOUT_MS = 2000.0
+RECOVERY_TOL = 1.10
+
+
+def _recovery_steps(lat: np.ndarray, end: int, base_mean: float,
+                    window: int) -> int:
+    """First post-outage step where the forward ``window``-step mean of
+    the seed-averaged latency series is back within ``RECOVERY_TOL`` of
+    the pre-outage baseline; -1 = never within the run."""
+    for i in range(end, lat.size - window + 1):
+        if lat[i:i + window].mean() <= RECOVERY_TOL * base_mean:
+            return i - end
+    return -1
+
+
+def run(scenario: Scenario | None = None, n_requests: int = 600,
+        n_users: int = 9, seeds=(0, 1, 2)) -> list[str]:
+    scenario = scenario if scenario is not None else Scenario()
+    base = replace(scenario, n_requests=n_requests, n_users=n_users,
+                   policy="MO", cloud=None, faults=None)
+    sw = Sweep(seed=list(seeds))
+    n = n_requests
+    start, end = n // 3, 2 * n // 3
+    window = max(10, n // 12)
+
+    # -- Part A: scripted outage on the busiest pair -------------------
+    r0 = SC.records(base, sw)
+    lat0 = np.asarray(r0["latency"]).mean(axis=0)
+    base_mean = float(lat0[n // 6:start].mean())
+    busy = int(np.bincount(np.asarray(r0["server"]).ravel()).argmax())
+
+    rows = [f"fault_resilience.outage_pair,{busy},{start},{end},,",
+            "fault_resilience.policy,mode,latency_ms,latency_p99_ms,"
+            "failed_share,slo_share"]
+    variants = [(pol, True) for pol in POLICIES] + [("MO", False)]
+    recov: dict[str, int] = {}
+    for pol, visible in variants:
+        fs = FaultSchedule(outages=((busy, start, end),),
+                           timeout_ms=TIMEOUT_MS, visible=visible)
+        r = SC.records(replace(base, policy=pol, faults=fs), sw)
+        lat = np.asarray(r["latency"])
+        mode = "aware" if visible else "blind"
+        rows.append(
+            f"fault_resilience.{pol},{mode},"
+            f"{1e3 * lat.mean():.1f},"
+            f"{1e3 * np.percentile(lat, 99):.1f},"
+            f"{np.asarray(r['failed']).mean():.4f},"
+            f"{np.asarray(r['slo_violation']).mean():.4f}")
+        if pol == "MO":
+            recov[mode] = _recovery_steps(lat.mean(axis=0), end,
+                                          base_mean, window)
+
+    for mode in ("aware", "blind"):
+        rows.append(f"fault_resilience.recovery_steps,{mode},"
+                    f"{recov[mode]},,,")
+    # -1 = never recovered within the run: score it as the full run
+    eff = {m: (v if v >= 0 else n) for m, v in recov.items()}
+    faster = int(eff["aware"] < eff["blind"]
+                 or (eff["aware"] == 0 and eff["blind"] == 0))
+    rows.append(f"fault_resilience.aware_recovers_faster,{faster},"
+                f"{eff['aware']},{eff['blind']},,")
+
+    # -- Part B: WAN RTT jitter with a cloud tier ----------------------
+    tiers = [None] + [FaultSchedule(rtt_jitter_ms=j, bw_jitter=0.5)
+                      for j in JITTERS[1:]]
+    res = SC.run(replace(base, cloud=CloudTier()),
+                 Sweep(policy=["MO", "LT"], faults=tiers,
+                       seed=list(seeds)))
+    mean = {m: res.mean(m, over="seed")
+            for m in ("latency_ms", "latency_p90_ms", "offload_share")}
+    rows.append("fault_resilience.wan.policy,rtt_jitter_ms,latency_ms,"
+                "latency_p90_ms,offload_share,")
+    for i, pol in enumerate(["MO", "LT"]):
+        for j, jit in enumerate(JITTERS):
+            rows.append(f"fault_resilience.wan.{pol},{jit:g},"
+                        f"{mean['latency_ms'][i, j]:.3f},"
+                        f"{mean['latency_p90_ms'][i, j]:.3f},"
+                        f"{mean['offload_share'][i, j]:.3f},")
+    return rows

@@ -107,10 +107,10 @@ def main() -> None:
         base = replace(base, mesh="local")
 
     from benchmarks import (ablation_delta, bench_kernels, bench_scale,
-                            edge_cloud, fig2_motivation, fig4_baselines,
-                            fig5_gamma, online_drift, roofline_summary,
-                            serving_throughput, sweep_sharded, table1_pairs,
-                            workload_trace)
+                            edge_cloud, fault_resilience, fig2_motivation,
+                            fig4_baselines, fig5_gamma, online_drift,
+                            roofline_summary, serving_throughput,
+                            sweep_sharded, table1_pairs, workload_trace)
 
     suites = {
         "fig2": lambda: fig2_motivation.run(),
@@ -125,6 +125,9 @@ def main() -> None:
         "edge_cloud": lambda: edge_cloud.run(
             base, n_requests=400 if args.fast else 1500,
             seeds=(0,) if args.fast else (0, 1, 2)),
+        "fault_resilience": lambda: fault_resilience.run(
+            base, n_requests=150 if args.fast else 600,
+            seeds=(0, 1) if args.fast else (0, 1, 2)),
         "scale": lambda: bench_scale.run(),
         "sweep_sharded": lambda: sweep_sharded.run(),
         "workload_trace": lambda: workload_trace.run(

@@ -1,0 +1,65 @@
+"""Fault injection: outages, throttling and WAN jitter as a Scenario
+component, with failover-aware routing closing the loop."""
+import json
+
+import numpy as np
+
+from repro.core.faults import FaultSchedule
+from repro.core.scenario import Scenario, Sweep, records, run
+from repro.serving import ServingPlane
+
+# 1. A FaultSchedule scripts device outages and draws stochastic faults
+#    (flapping, throttling bursts, WAN RTT/bandwidth jitter) from
+#    fold_in-keyed RNG, so realizations are bitwise invariant to window
+#    partitioning, user blocks and sharding. faults=None (the default)
+#    is the fault-free engine — bit-identical to the pre-fault seed
+#    (tests/golden_faults_pr9.json).
+outage = FaultSchedule(outages=((3, 40, 80),), timeout_ms=2000.0)
+res = run(Scenario(n_users=7, n_requests=120, faults=outage))
+print("p99 under outage:", round(float(res.scalar("latency_p99_ms")), 1))
+
+# 2. visible=True (default) masks down pairs out of Algorithm 1's
+#    accuracy-feasibility stage, so the router fails over to healthy
+#    pairs; if no healthy pair clears the accuracy bar, the engine
+#    degrades gracefully to the healthy argmin-latency pair and counts
+#    an SLO violation. visible=False keeps the router blind — requests
+#    dispatched into the outage stall and fail at the timeout.
+aware = records(Scenario(n_users=7, n_requests=120, faults=outage))
+blind = records(Scenario(n_users=7, n_requests=120,
+                         faults=FaultSchedule(outages=((3, 40, 80),),
+                                              timeout_ms=2000.0,
+                                              visible=False)))
+assert not np.any(np.asarray(aware["server"])[40:80] == 3)
+print("failed requests: aware", int(np.asarray(aware["failed"]).sum()),
+      "vs blind", int(np.asarray(blind["failed"]).sum()))
+
+# 3. The schedule is a sweepable component axis (like cloud=) and
+#    serializes only-when-set: a fault-free spec carries no "faults"
+#    key and hashes unchanged. Mixed axes zero-fill the fault metrics
+#    on the fault-free slice.
+grid = run(Scenario(n_users=7, n_requests=120),
+           Sweep(faults=[None, FaultSchedule(down_rate=0.1, epoch=25)]))
+print("p99 by axis entry (fault-free slice zero-fills):",
+      np.round(np.asarray(grid["latency_p99_ms"]), 1))
+back = Scenario.from_json(json.dumps(
+    Scenario(faults=outage).to_json()))
+assert back.faults == outage
+assert "faults" not in Scenario().to_json()
+
+# 4. The serving plane closes the loop: on an outage the executor pool
+#    fails the in-flight work on the down pairs, the plane re-routes it
+#    through the (health-masked) gateway with bounded attempts, and the
+#    summary reports availability alongside latency. Offer well below
+#    capacity — failover needs spare capacity to absorb re-routed work
+#    (at the default 90% load, losing a pair tips the fleet into a
+#    retry storm).
+sc = Scenario(policy="MO", n_users=48, seed=0,
+              faults=FaultSchedule(outages=((4, 256, 1280),),
+                                   timeout_ms=10_000.0, max_attempts=3))
+plane = ServingPlane.build(sc, window=64)
+plane.offered_rps = 0.5 * plane.capacity_rps()
+recs = plane.run(n_requests=2048)
+summ = ServingPlane.summarize(recs)
+print(f"retried {summ['retried_share']:.1%}, "
+      f"failed {summ['failed_share']:.1%}, "
+      f"p99 {summ['latency_p99_ms']:.0f} ms under faults")

@@ -1,0 +1,89 @@
+"""Capture ``tests/golden_faults_pr9.json`` — the pre-fault-plane engine's
+record streams and sweep metrics, through the Scenario path.
+
+Run ONCE from the tree at PR 9 (before the FaultSchedule subsystem
+landed); the fixture pins that every ``faults=None`` scenario stays
+bit-identical through the fault-aware engine — including cloud-active
+scenarios, because the fault plane touches the simulator's cloud branch
+(WAN jitter). Do NOT regenerate from later code — that would defeat the
+regression (same rule as ``golden_cloud_pr7.json``).
+
+Usage: PYTHONPATH=src python scripts/capture_golden_faults.py
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cloud import CloudTier
+from repro.core.dispatch import OnlineDispatch
+from repro.core.scenario import Scenario, Sweep, records, run
+
+OUT = Path(__file__).resolve().parent.parent / "tests" / \
+    "golden_faults_pr9.json"
+
+# Varied corners of the scenario space: baseline MO, the RND key stream,
+# non-default gamma/delta, the oracle ablation, online-EWMA dispatch, a
+# single-block user_block config, and two cloud-active scenarios (the
+# fault plane rewires the simulator's uplink/RTT branch, so the
+# faults=None cloud path must stay bit-identical too).
+RECORD_SCENARIOS = [
+    Scenario(n_users=5, n_requests=120, policy="MO", seed=3),
+    Scenario(n_users=9, n_requests=120, policy="RND", seed=1),
+    Scenario(n_users=7, n_requests=120, policy="MO", gamma=0.25,
+             delta=10.0, seed=0),
+    Scenario(n_users=4, n_requests=120, policy="LT", seed=2,
+             oracle_estimator=True),
+    Scenario(n_users=6, n_requests=120, policy="LC", seed=5,
+             user_block=16),
+    Scenario(n_users=5, n_requests=120, policy="MO", seed=7,
+             dispatch=OnlineDispatch()),
+    Scenario(n_users=6, n_requests=120, policy="MO", seed=4,
+             cloud=CloudTier()),
+    Scenario(n_users=5, n_requests=120, policy="LT", seed=2,
+             cloud=CloudTier(rtt_ms=10.0)),
+]
+
+SWEEP = dict(policies=("MO", "RR", "LC", "LT", "HA"),
+             user_levels=(3, 7), seeds=(0, 1), n_requests=150)
+
+CLOUD_SWEEP = dict(policies=("MO", "LT"), user_levels=(3, 7), seeds=(0,),
+                   n_requests=150)
+
+
+def _sweep_fixture(base: Scenario, spec: dict) -> dict:
+    res = run(base, Sweep(policy=spec["policies"],
+                          n_users=spec["user_levels"],
+                          seed=spec["seeds"]))
+    return {
+        "scenario": base.to_json(),
+        "policies": list(spec["policies"]),
+        "user_levels": list(spec["user_levels"]),
+        "seeds": list(spec["seeds"]),
+        "n_requests": spec["n_requests"],
+        "metrics": {k: res[k].tolist() for k in res.metric_names},
+    }
+
+
+def main():
+    fix = {"captured_at": "PR 9 (pre-FaultSchedule engine)", "records": [],
+           "sweep": None, "cloud_sweep": None}
+    for sc in RECORD_SCENARIOS:
+        recs = records(sc)
+        fix["records"].append({
+            "scenario": sc.to_json(),
+            "records": {k: np.asarray(v, np.float64).tolist()
+                        for k, v in recs.items()},
+        })
+    fix["sweep"] = _sweep_fixture(
+        Scenario(n_requests=SWEEP["n_requests"]), SWEEP)
+    fix["cloud_sweep"] = _sweep_fixture(
+        Scenario(n_requests=CLOUD_SWEEP["n_requests"], cloud=CloudTier()),
+        CLOUD_SWEEP)
+    OUT.write_text(json.dumps(fix))
+    print(f"wrote {OUT} ({OUT.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,9 +20,10 @@ Like-for-like: artifacts record the base :class:`repro.core.scenario
 both artifacts carry a hash, a mismatch fails the comparison outright —
 different scenarios are different benchmarks; legacy artifacts without a
 hash fall back to the old ``workload``/``dispatch`` mode-string check.
-Independently of the hash, a ``cloud`` tier spec difference between the
-two scenarios is refused outright — an offload-aware run can shift every
-suite's timing profile.
+Independently of the hash, a ``cloud`` tier or ``faults`` schedule spec
+difference between the two scenarios is refused outright — an
+offload-aware or fault-injected run can shift every suite's timing
+profile.
 
 A suite present in the new run but absent from the baseline is *stale
 baseline*: the comparison silently skips it, so the suite goes
@@ -111,6 +112,13 @@ def compare(new: dict, base: dict, threshold,
     if n_cloud != b_cloud:
         errs.append(f"artifacts not comparable: cloud tier spec is "
                     f"{n_cloud!r} (new) vs {b_cloud!r} (baseline)")
+    # the same rule for the fault plane: a fault-injected run is a
+    # different benchmark, never a timing regression
+    n_faults = (new.get("scenario") or {}).get("faults")
+    b_faults = (base.get("scenario") or {}).get("faults")
+    if n_faults != b_faults:
+        errs.append(f"artifacts not comparable: faults schedule spec is "
+                    f"{n_faults!r} (new) vs {b_faults!r} (baseline)")
     for key in mode_keys:
         if key in new and key in base and new[key] != base[key]:
             errs.append(f"artifacts not comparable: {key} is "

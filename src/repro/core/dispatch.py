@@ -86,7 +86,7 @@ class DispatchEngine:
         raise NotImplementedError
 
     def select(self, state, prof, code, g_est, q, key, gamma, delta,
-               penalty=None, tables=None):
+               penalty=None, tables=None, health=None):
         """Score one request -> ``(pair, new_state)``. ``code`` is the
         policy index (``POLICY_CODES``), ``g_est`` the estimated group,
         ``q`` the (P,) live queue depths, ``key`` a fresh threefry key
@@ -94,19 +94,22 @@ class DispatchEngine:
         ms) is the cloud tier's uplink congestion term, added to the
         latency-aware policies' expected latency
         (``repro.core.policies.policy_scores``); ``None`` keeps the
-        traced graph exactly as before. ``tables`` (optional) is a
-        pre-materialised belief :class:`ProfileTable` for ``state`` —
-        :meth:`select_window` hoists the :meth:`tables` call out of its
-        scan and passes it here; ``None`` (every per-request caller)
-        materialises it on the spot."""
+        traced graph exactly as before. ``health`` (optional, (P,) bool)
+        is the fault plane's per-step mask — down pairs leave the
+        candidate set at the feasibility stage, with MO's degraded
+        fallback (``repro.core.policies.mo_scores``). ``tables``
+        (optional) is a pre-materialised belief :class:`ProfileTable`
+        for ``state`` — :meth:`select_window` hoists the :meth:`tables`
+        call out of its scan and passes it here; ``None`` (every
+        per-request caller) materialises it on the spot."""
         tbl = self.tables(state, prof) if tables is None else tables
         p, _scores = select_pair(code, tbl, g_est, q, key,
                                  state["rr"] % prof.n_pairs, gamma,
-                                 delta, penalty)
+                                 delta, penalty, health)
         return p, {**state, "rr": state["rr"] + 1}
 
     def select_window(self, state, prof, code, gs, q0, keys, gamma,
-                      delta, penalty_fn=None):
+                      delta, penalty_fn=None, healths=None):
         """Route a whole admission window with queue feedback — the
         batched :meth:`select`. ``gs``/``keys`` are (W,) groups and
         per-request threefry keys, ``q0`` the (P,) queue depths at
@@ -128,19 +131,27 @@ class DispatchEngine:
         ``penalty_fn`` (optional) maps ``(g, q) -> (P,)`` per-decision
         latency penalties — the cloud tier's congestion feedback,
         re-evaluated against each decision's live ``q`` inside the scan
-        (:meth:`repro.core.cloud.CloudMeta.penalty`)."""
+        (:meth:`repro.core.cloud.CloudMeta.penalty`).
+
+        ``healths`` (optional, (W, P) bool) gives each request its own
+        fault-plane health mask (row w masks decision w) — per-request
+        rather than per-window so the realization keys on ABSOLUTE step
+        indices and window partitioning cannot change it; ``None`` keeps
+        the scan's xs exactly as before."""
         tbl = self.tables(state, prof)
 
         def step(carry, inp):
             st, q = carry
-            g, key = inp
+            g, key = inp[:2]
+            h = inp[2] if healths is not None else None
             pen = None if penalty_fn is None else penalty_fn(g, q)
             p, st = self.select(st, prof, code, g, q, key, gamma, delta,
-                                penalty=pen, tables=tbl)
+                                penalty=pen, tables=tbl, health=h)
             return (st, q.at[p].add(1.0)), p
 
+        xs = (gs, keys) if healths is None else (gs, keys, healths)
         (state, q), pairs = jax.lax.scan(
-            step, (state, q0.astype(f32)), (gs, keys))
+            step, (state, q0.astype(f32)), xs)
         return pairs, q, state
 
     def observe(self, state, p, g, obs_t_ms, obs_e_mwh=None):
@@ -277,7 +288,11 @@ class DriftSchedule:
     the schedule — :class:`StaticDispatch` keeps routing on the stale
     offline table, :class:`OnlineDispatch` re-converges from
     observations. mAP is not drifted (the belief tables keep it offline
-    for the same reason).
+    for the same reason). Composition with the fault plane's throttling
+    bursts (``repro.core.faults``) is DEFINED: drift scales apply first,
+    fault throttles multiply on top — ``truth = (prof x drift) x fault``
+    — in the simulator and in ``AsyncExecutorPool``'s factored
+    multipliers alike (tested in ``tests/test_faults.py``).
 
     Leaves: ``start_step`` (K,) int32 ascending with ``start_step[0] ==
     0`` (the baseline segment), ``t_scale``/``e_scale`` (K, P, G) float32

@@ -1,0 +1,356 @@
+"""The fault plane (ROADMAP item toward 4): device outages, throttling
+bursts and stochastic WAN jitter as a declarative Scenario component.
+
+The paper's premise is that heterogeneous SBC fleets are unreliable and
+dynamically varying, yet the engine so far assumes every device-model
+pair is always up and every cloud RTT is a constant. :class:`FaultSchedule`
+describes what actually goes wrong:
+
+  * **outages / flapping** — each fault *epoch* (``epoch`` scheduler
+    steps) every pair is independently down with probability
+    ``down_rate``; ``outages=((pair, start, end), ...)`` scripts
+    deterministic outage windows on top (benchmarks use this for
+    reproducible failover stories);
+  * **throttling bursts** — per epoch, each pair is throttled with
+    probability ``throttle_rate``; a throttled pair's TRUE service time
+    and energy are scaled by ``throttle_t_mult`` / ``throttle_e_mult``
+    (thermal throttling, a co-tenant burst). Composition with
+    :class:`~repro.core.dispatch.DriftSchedule` is defined: drift scales
+    apply first, fault throttles multiply on top
+    (``truth = (prof x drift) x fault``);
+  * **WAN jitter** — per scheduler step the cloud uplink transfer is
+    scaled by ``1 + bw_jitter * U[0,1)`` and the RTT gains
+    ``rtt_jitter_ms * U[0,1)`` ms (the ROADMAP's "stochastic RTT").
+
+Every draw is a pure function of the absolute step index under
+``fold_in``-derived keys — epoch draws key on ``fold_in(k, step //
+epoch)``, jitter draws on ``fold_in(k, step)`` — so there is NO carried
+fault state and realizations are bitwise invariant to window
+partitioning, user blocks and sharding *by construction* (the same
+invariance contract as the workload stream keys).
+
+Routing semantics: the router sees the **health mask** ``health_at(step)``
+(pairs up this step) and masks candidates at the accuracy-feasibility
+stage (:func:`repro.core.policies.mo_scores`). Graceful degradation is a
+defined rule: when no healthy pair clears the accuracy bar, routing falls
+back to the **healthy argmin-latency pair** and the step counts an SLO
+violation; when the whole fleet is down the mask relaxes to all-true
+(there is nobody else to route to) and dispatching into the outage costs
+a ``timeout_ms`` stall. ``visible=False`` keeps the router blind (static
+routing) while the truth model still pays outage stalls — the benchmark
+baseline that failover-aware routing is measured against.
+
+A scenario with ``faults=None`` never builds any of this — the no-fault
+engine path is bit-identical to PR 9 (``tests/golden_faults_pr9.json``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+__all__ = ["FaultSchedule", "FaultMeta"]
+
+# fold_in salts for the independent fault sub-streams
+_SALT_DOWN, _SALT_THROTTLE, _SALT_RTT, _SALT_BW = 0, 1, 2, 3
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class FaultMeta:
+    """The traced half of a fault schedule — what jitted code needs.
+
+    Leaves are the base PRNG key, the scalar rates/multipliers and the
+    scripted-outage arrays; the static aux data is the pair count plus
+    which fault sources are active at all (python bools, so a schedule
+    with e.g. only WAN jitter adds NOTHING to the outage/throttle graph).
+    Every query below is a pure function of the absolute step index —
+    module docstring — which is what makes realizations invariant to
+    window partitioning, user blocks and sharding."""
+
+    key: jax.Array           # (2,) uint32 base fault key
+    down_rate: jax.Array     # () f32
+    thr_rate: jax.Array      # () f32
+    thr_t: jax.Array         # () f32
+    thr_e: jax.Array         # () f32
+    rtt_jitter_ms: jax.Array  # () f32
+    bw_jitter: jax.Array     # () f32
+    timeout_ms: jax.Array    # () f32
+    epoch: jax.Array         # () i32
+    script_pair: jax.Array   # (S,) i32
+    script_start: jax.Array  # (S,) i32
+    script_end: jax.Array    # (S,) i32
+    n_pairs: int = 0         # static
+    visible: bool = True     # static: does the router see the mask?
+    has_random_down: bool = False   # static source flags
+    has_script: bool = False
+    has_throttle: bool = False
+    has_rtt_jitter: bool = False
+    has_bw_jitter: bool = False
+
+    def tree_flatten(self):
+        leaves = (self.key, self.down_rate, self.thr_rate, self.thr_t,
+                  self.thr_e, self.rtt_jitter_ms, self.bw_jitter,
+                  self.timeout_ms, self.epoch, self.script_pair,
+                  self.script_start, self.script_end)
+        aux = (self.n_pairs, self.visible, self.has_random_down,
+               self.has_script, self.has_throttle, self.has_rtt_jitter,
+               self.has_bw_jitter)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def has_down(self) -> bool:
+        return self.has_random_down or self.has_script
+
+    # -- per-step queries (pure functions of the step index) ------------
+
+    def down_at(self, step):
+        """Raw outage mask at scheduler step ``step``: (P,) bool, True =
+        the pair is DOWN. Epoch-keyed random outages OR'd with any
+        scripted windows; the truth model uses this (a down pair really
+        is down even when the router's mask has relaxed)."""
+        step = jnp.asarray(step, i32)
+        down = jnp.zeros((self.n_pairs,), bool)
+        if self.has_random_down:
+            e = step // self.epoch
+            k = jax.random.fold_in(
+                jax.random.fold_in(self.key, _SALT_DOWN), e)
+            down = jax.random.uniform(k, (self.n_pairs,)) < self.down_rate
+        if self.has_script:
+            hit = (step >= self.script_start) & (step < self.script_end)
+            down = down.at[self.script_pair].max(hit)
+        return down
+
+    def health_at(self, step):
+        """The router's health mask: (P,) bool, True = routable. The
+        complement of :meth:`down_at`, relaxed to all-true when the
+        whole fleet is down (there is nobody else to route to; the
+        truth model still pays the ``timeout_ms`` stall)."""
+        up = ~self.down_at(step)
+        return jnp.where(jnp.any(up), up, True)
+
+    def throttle_at(self, step):
+        """Per-pair throttling multipliers at ``step``: ``(t_scale,
+        e_scale)``, each (P,) f32, 1.0 where not throttled. Epoch-keyed
+        like outages, independent sub-stream."""
+        if not self.has_throttle:
+            ones = jnp.ones((self.n_pairs,), f32)
+            return ones, ones
+        e = jnp.asarray(step, i32) // self.epoch
+        k = jax.random.fold_in(
+            jax.random.fold_in(self.key, _SALT_THROTTLE), e)
+        hot = jax.random.uniform(k, (self.n_pairs,)) < self.thr_rate
+        return (jnp.where(hot, self.thr_t, 1.0),
+                jnp.where(hot, self.thr_e, 1.0))
+
+    def rtt_extra_ms(self, step):
+        """Stochastic extra cloud RTT at ``step``: scalar f32 in
+        ``[0, rtt_jitter_ms)``, drawn per step."""
+        k = jax.random.fold_in(
+            jax.random.fold_in(self.key, _SALT_RTT),
+            jnp.asarray(step, i32))
+        return self.rtt_jitter_ms * jax.random.uniform(k)
+
+    def xfer_scale(self, step):
+        """Uplink transfer slowdown at ``step``: scalar f32 in
+        ``[1, 1 + bw_jitter)``, drawn per step."""
+        k = jax.random.fold_in(
+            jax.random.fold_in(self.key, _SALT_BW),
+            jnp.asarray(step, i32))
+        return 1.0 + self.bw_jitter * jax.random.uniform(k)
+
+
+@dataclass(frozen=True, eq=False)
+class FaultSchedule:
+    """Device outages, throttling bursts and WAN jitter as a declarative
+    Scenario component (module docstring for the fault model).
+
+    ``down_rate`` / ``throttle_rate`` are per-epoch per-pair
+    probabilities; ``epoch`` the fault-epoch length in scheduler steps;
+    ``throttle_t_mult`` / ``throttle_e_mult`` the throttled pair's
+    latency/energy inflation; ``rtt_jitter_ms`` / ``bw_jitter`` the WAN
+    jitter amplitudes (only felt by cloud pairs); ``timeout_ms`` the
+    stall a request pays when dispatched into an outage (and the serving
+    plane's retry timeout); ``max_attempts`` the serving plane's retry
+    bound; ``visible=False`` keeps the router blind (static routing)
+    while the truth model still faults; ``outages`` scripts
+    deterministic ``(pair, start_step, end_step)`` windows; ``seed``
+    keys the fault RNG independently of the workload.
+
+    Value-equal like a Scenario (two schedules are ``==`` iff their JSON
+    specs match), so ``Results.sel(faults=fs)`` and scenario hashing
+    work; ``Sweep(faults=[FaultSchedule(rtt_jitter_ms=j) for j in js])``
+    sweeps a jitter axis."""
+
+    down_rate: float = 0.0
+    epoch: int = 50
+    throttle_rate: float = 0.0
+    throttle_t_mult: float = 3.0
+    throttle_e_mult: float = 1.5
+    rtt_jitter_ms: float = 0.0
+    bw_jitter: float = 0.0
+    timeout_ms: float = 1000.0
+    max_attempts: int = 3
+    visible: bool = True
+    outages: tuple = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0.0 <= self.down_rate < 1.0):
+            raise ValueError(f"down_rate must be in [0, 1), got "
+                             f"{self.down_rate!r}")
+        if not (0.0 <= self.throttle_rate < 1.0):
+            raise ValueError(f"throttle_rate must be in [0, 1), got "
+                             f"{self.throttle_rate!r}")
+        if not (isinstance(self.epoch, int) and self.epoch >= 1):
+            raise ValueError(f"epoch must be a positive int, got "
+                             f"{self.epoch!r}")
+        if not (self.throttle_t_mult > 0 and self.throttle_e_mult > 0):
+            raise ValueError("throttle multipliers must be > 0, got "
+                             f"{self.throttle_t_mult!r}/"
+                             f"{self.throttle_e_mult!r}")
+        if not (self.rtt_jitter_ms >= 0.0):
+            raise ValueError(f"rtt_jitter_ms must be >= 0, got "
+                             f"{self.rtt_jitter_ms!r}")
+        if not (self.bw_jitter >= 0.0):
+            raise ValueError(f"bw_jitter must be >= 0, got "
+                             f"{self.bw_jitter!r}")
+        if not (self.timeout_ms >= 0.0):
+            raise ValueError(f"timeout_ms must be >= 0, got "
+                             f"{self.timeout_ms!r}")
+        if not (isinstance(self.max_attempts, int)
+                and self.max_attempts >= 1):
+            raise ValueError(f"max_attempts must be a positive int, got "
+                             f"{self.max_attempts!r}")
+        outs = []
+        for o in self.outages:
+            o = tuple(int(x) for x in o)
+            if len(o) != 3:
+                raise ValueError("outages entries must be (pair, "
+                                 f"start_step, end_step), got {o!r}")
+            p, s, e = o
+            if p < 0 or s < 0 or e <= s:
+                raise ValueError("outage needs pair >= 0 and 0 <= start "
+                                 f"< end, got {o!r}")
+            outs.append(o)
+        object.__setattr__(self, "outages", tuple(outs))
+
+    @property
+    def active(self) -> bool:
+        """Whether any fault source is configured at all."""
+        return (self.down_rate > 0 or bool(self.outages)
+                or self.throttle_rate > 0 or self.rtt_jitter_ms > 0
+                or self.bw_jitter > 0)
+
+    # -- resolution -----------------------------------------------------
+
+    def resolve(self, n_pairs: int) -> FaultMeta:
+        """Bind the schedule to a fleet of ``n_pairs`` pairs (the
+        EXTENDED pair axis when a cloud tier is present, so scripted
+        outages can take down cloud pairs too)."""
+        for p, _, _ in self.outages:
+            if p >= n_pairs:
+                raise ValueError(f"scripted outage on pair {p} but the "
+                                 f"fleet has {n_pairs} pairs")
+        sp = np.asarray([o[0] for o in self.outages], np.int32)
+        ss = np.asarray([o[1] for o in self.outages], np.int32)
+        se = np.asarray([o[2] for o in self.outages], np.int32)
+        return FaultMeta(
+            key=jax.random.PRNGKey(self.seed),
+            down_rate=jnp.asarray(self.down_rate, f32),
+            thr_rate=jnp.asarray(self.throttle_rate, f32),
+            thr_t=jnp.asarray(self.throttle_t_mult, f32),
+            thr_e=jnp.asarray(self.throttle_e_mult, f32),
+            rtt_jitter_ms=jnp.asarray(self.rtt_jitter_ms, f32),
+            bw_jitter=jnp.asarray(self.bw_jitter, f32),
+            timeout_ms=jnp.asarray(self.timeout_ms, f32),
+            epoch=jnp.asarray(self.epoch, i32),
+            script_pair=jnp.asarray(sp, i32),
+            script_start=jnp.asarray(ss, i32),
+            script_end=jnp.asarray(se, i32),
+            n_pairs=int(n_pairs),
+            visible=bool(self.visible),
+            has_random_down=self.down_rate > 0,
+            has_script=bool(self.outages),
+            has_throttle=self.throttle_rate > 0,
+            has_rtt_jitter=self.rtt_jitter_ms > 0,
+            has_bw_jitter=self.bw_jitter > 0,
+        )
+
+    # -- serialization (the Scenario component contract) ---------------
+
+    def to_json(self) -> dict:
+        # defaults serialize as absent keys, so default-equivalent
+        # schedules share one spec/hash (the CloudTier rule)
+        spec = {}
+        if self.down_rate != 0.0:
+            spec["down_rate"] = float(self.down_rate)
+        if self.epoch != 50:
+            spec["epoch"] = int(self.epoch)
+        if self.throttle_rate != 0.0:
+            spec["throttle_rate"] = float(self.throttle_rate)
+        if self.throttle_t_mult != 3.0:
+            spec["throttle_t_mult"] = float(self.throttle_t_mult)
+        if self.throttle_e_mult != 1.5:
+            spec["throttle_e_mult"] = float(self.throttle_e_mult)
+        if self.rtt_jitter_ms != 0.0:
+            spec["rtt_jitter_ms"] = float(self.rtt_jitter_ms)
+        if self.bw_jitter != 0.0:
+            spec["bw_jitter"] = float(self.bw_jitter)
+        if self.timeout_ms != 1000.0:
+            spec["timeout_ms"] = float(self.timeout_ms)
+        if self.max_attempts != 3:
+            spec["max_attempts"] = int(self.max_attempts)
+        if not self.visible:
+            spec["visible"] = False
+        if self.outages:
+            spec["outages"] = [list(o) for o in self.outages]
+        if self.seed != 0:
+            spec["seed"] = int(self.seed)
+        return spec
+
+    @classmethod
+    def from_json(cls, spec: dict | None) -> "FaultSchedule | None":
+        if spec is None:
+            return None
+        return cls(
+            down_rate=float(spec.get("down_rate", 0.0)),
+            epoch=int(spec.get("epoch", 50)),
+            throttle_rate=float(spec.get("throttle_rate", 0.0)),
+            throttle_t_mult=float(spec.get("throttle_t_mult", 3.0)),
+            throttle_e_mult=float(spec.get("throttle_e_mult", 1.5)),
+            rtt_jitter_ms=float(spec.get("rtt_jitter_ms", 0.0)),
+            bw_jitter=float(spec.get("bw_jitter", 0.0)),
+            timeout_ms=float(spec.get("timeout_ms", 1000.0)),
+            max_attempts=int(spec.get("max_attempts", 3)),
+            visible=bool(spec.get("visible", True)),
+            outages=tuple(tuple(o) for o in spec.get("outages", ())),
+            seed=int(spec.get("seed", 0)),
+        )
+
+    def __eq__(self, other):
+        if not isinstance(other, FaultSchedule):
+            return NotImplemented
+        return self.to_json() == other.to_json()
+
+    def __hash__(self):
+        spec = self.to_json()
+        return hash(tuple(sorted(
+            (k, v if not isinstance(v, list) else
+             tuple(tuple(o) for o in v))
+            for k, v in spec.items())))
+
+    def __repr__(self):
+        spec = self.to_json()
+        body = ", ".join(f"{k}={v!r}" for k, v in spec.items())
+        return f"FaultSchedule({body})"

@@ -30,7 +30,7 @@ POLICY_NAMES = {v: k for k, v in POLICY_CODES.items()}
 # ------------------------------------------------------------ Algorithm 1 --
 
 def mo_scores(T_g, E_g, mAP_g, q, *, delta: float, gamma: float,
-              penalty=None):
+              penalty=None, health=None):
     """Vectorised Algorithm 1 scores over the P pairs for one request.
 
     T_g/E_g/mAP_g: (P,) profiled columns for the request's group;
@@ -39,10 +39,23 @@ def mo_scores(T_g, E_g, mAP_g, q, *, delta: float, gamma: float,
 
     ``penalty`` (optional, (P,) ms) is an additive expected-latency term —
     the cloud tier's uplink congestion feedback
-    (:meth:`repro.core.cloud.CloudMeta.penalty`). ``None`` (every
-    no-cloud caller) leaves the traced graph exactly as before."""
+    (:meth:`repro.core.cloud.CloudMeta.penalty`). ``health`` (optional,
+    (P,) bool) is the fault plane's per-step mask
+    (:meth:`repro.core.faults.FaultMeta.health_at`): down pairs are
+    removed from the candidate set at this accuracy-feasibility stage.
+    Graceful degradation is defined here: when NO healthy pair clears
+    the accuracy bar (the bar itself stays the unmasked fleet-wide
+    ``map_max``), the candidate set relaxes to ALL healthy pairs and the
+    energy term is zeroed, so ``argmin J`` becomes the healthy
+    argmin-expected-latency pair — the caller counts that step as an
+    SLO violation. ``None`` (every no-fault caller) leaves the traced
+    graph exactly as before."""
     map_max = jnp.max(mAP_g)
     feasible = mAP_g >= map_max - delta
+    if health is not None:
+        cand = feasible & health
+        degraded = ~jnp.any(cand)
+        feasible = jnp.where(degraded, health, cand)
     L_exp = T_g * (1.0 + q)
     if penalty is not None:
         L_exp = L_exp + penalty
@@ -52,15 +65,17 @@ def mo_scores(T_g, E_g, mAP_g, q, *, delta: float, gamma: float,
     e_max = jnp.max(jnp.where(feasible, E_g, -BIG))
     L_n = (L_exp - l_min) / jnp.maximum(l_max - l_min, 1e-9)
     E_n = (E_g - e_min) / jnp.maximum(e_max - e_min, 1e-9)
+    if health is not None:
+        E_n = jnp.where(degraded, 0.0, E_n)
     J = gamma * L_n + (1.0 - gamma) * E_n
     return jnp.where(feasible, J, BIG), feasible
 
 
 def mo_select(prof: ProfileTable, g, q, *, delta: float = 5.0,
-              gamma: float = 0.5):
+              gamma: float = 0.5, health=None):
     """p* = argmin J over the accuracy-feasible set (one request)."""
     J, feasible = mo_scores(prof.T[:, g], prof.E[:, g], prof.mAP[:, g], q,
-                            delta=delta, gamma=gamma)
+                            delta=delta, gamma=gamma, health=health)
     return jnp.argmin(J), J, feasible
 
 
@@ -82,18 +97,31 @@ def mo_select(prof: ProfileTable, g, q, *, delta: float = 5.0,
 # pinned against the golden_static_pr3 decisions).
 
 
-def mo_precompute(T, E, mAP, *, delta: float):
+def mo_precompute(T, E, mAP, *, delta: float, health=None):
     """The queue-independent half of Algorithm 1, for a whole (P, G) table.
 
     Returns ``(feasible, E_n)``, both (P, G): the accuracy-feasibility
     mask and the feasible-set-normalised energy term. Column g of each
     equals what :func:`mo_scores` computes per request for group ``g`` —
-    bitwise (the reductions are min/max, which commute exactly)."""
+    bitwise (the reductions are min/max, which commute exactly).
+
+    ``health`` (optional, (P,) bool) folds the fault plane's mask into
+    the precomputed half with :func:`mo_scores`'s exact degraded-mode
+    expressions (unmasked accuracy bar, candidate set ``feasible &
+    health`` relaxed per-group to all-healthy + zeroed energy term when
+    empty) — the mask is queue-independent, so it hoists with the rest."""
     map_max = jnp.max(mAP, axis=-2, keepdims=True)
     feasible = mAP >= map_max - delta
+    if health is not None:
+        h = jnp.asarray(health)[..., None]
+        cand = feasible & h
+        degraded = ~jnp.any(cand, axis=-2, keepdims=True)
+        feasible = jnp.where(degraded, h, cand)
     e_min = jnp.min(jnp.where(feasible, E, BIG), axis=-2, keepdims=True)
     e_max = jnp.max(jnp.where(feasible, E, -BIG), axis=-2, keepdims=True)
     E_n = (E - e_min) / jnp.maximum(e_max - e_min, 1e-9)
+    if health is not None:
+        E_n = jnp.where(degraded, 0.0, E_n)
     return feasible, E_n
 
 
@@ -115,11 +143,15 @@ def mo_scores_hoisted(T_g, En_g, feas_g, q, *, gamma: float, penalty=None):
 
 
 def mo_select_batch_hoisted(prof: ProfileTable, gs, q0, *,
-                            delta: float = 5.0, gamma: float = 0.5):
+                            delta: float = 5.0, gamma: float = 0.5,
+                            health=None):
     """:func:`mo_select_batch` with the queue-independent work hoisted out
     of the scan — the XLA form of the ``hoisted`` moscore backend. Same
-    contract, bit-identical assignments and final queue."""
-    feasible, E_n = mo_precompute(prof.T, prof.E, prof.mAP, delta=delta)
+    contract, bit-identical assignments and final queue. ``health`` is
+    one (P,) mask for the whole window (the gateway routes each window
+    at one health snapshot)."""
+    feasible, E_n = mo_precompute(prof.T, prof.E, prof.mAP, delta=delta,
+                                  health=health)
     # transpose once so the scan gathers contiguous (P,) group rows
     Tt, Ent, Ft = prof.T.T, E_n.T, feasible.T
 
@@ -133,14 +165,16 @@ def mo_select_batch_hoisted(prof: ProfileTable, gs, q0, *,
 
 
 def mo_select_batch(prof: ProfileTable, gs, q0, *, delta: float = 5.0,
-                    gamma: float = 0.5):
+                    gamma: float = 0.5, health=None):
     """Sequential assignment of a routing window with queue feedback:
     each selection bumps q[p*] before the next request is scored (the
     semantics HAProxy dispatch gives the paper implicitly). gs: (W,) groups.
-    Returns (assignments (W,), final q). Reference for kernels/moscore."""
+    Returns (assignments (W,), final q). Reference for kernels/moscore.
+    ``health`` is one (P,) mask applied to the whole window."""
 
     def step(q, g):
-        p, _, _ = mo_select(prof, g, q, delta=delta, gamma=gamma)
+        p, _, _ = mo_select(prof, g, q, delta=delta, gamma=gamma,
+                            health=health)
         return q.at[p].add(1.0), p
 
     q, ps = jax.lax.scan(step, q0.astype(f32), gs)
@@ -150,17 +184,23 @@ def mo_select_batch(prof: ProfileTable, gs, q0, *, delta: float = 5.0,
 # ---------------------------------------------------------------- baselines
 
 def policy_scores(code, prof: ProfileTable, g, q, rnd, rr_counter,
-                  gamma, delta, penalty=None):
+                  gamma, delta, penalty=None, health=None):
     """Scores (P,) for every policy; dispatch via lax.switch so one jitted
     simulator serves all seven policies. ``penalty`` (optional, (P,) ms)
     adds to the expected-latency term of the latency-aware policies (MO,
     LT) — the offload tier's uplink congestion feedback; the
-    latency-blind baselines ignore it by construction."""
+    latency-blind baselines ignore it by construction. ``health``
+    (optional, (P,) bool) masks down pairs for EVERY policy: MO applies
+    it at the feasibility stage (:func:`mo_scores`, with the degraded
+    fallback); the baselines get their scores forced to +inf on down
+    pairs — RR skips them in rotation, RND draws uniformly over healthy
+    pairs, LC/LE/LT/HA argmin over the healthy set."""
     P = prof.n_pairs
 
     def mo(_):
         J, _f = mo_scores(prof.T[:, g], prof.E[:, g], prof.mAP[:, g], q,
-                          delta=delta, gamma=gamma, penalty=penalty)
+                          delta=delta, gamma=gamma, penalty=penalty,
+                          health=health)
         return J
 
     def rr(_):
@@ -182,16 +222,20 @@ def policy_scores(code, prof: ProfileTable, g, q, rnd, rr_counter,
     def ha(_):
         return -jnp.mean(prof.mAP, axis=1)       # fixed global-best-mAP pair
 
-    return jax.lax.switch(code, [mo, rr, rnd_, lc, le, lt, ha], None)
+    scores = jax.lax.switch(code, [mo, rr, rnd_, lc, le, lt, ha], None)
+    if health is not None:
+        # idempotent for MO (its unhealthy scores are already BIG); this
+        # is what masks the six baselines
+        scores = jnp.where(health, scores, BIG)
+    return scores
 
 
 def select_pair(code, prof: ProfileTable, g, q, rnd, rr_counter, gamma,
-                delta, penalty=None):
+                delta, penalty=None, health=None):
     """``(p*, scores)`` — the one selection rule every dispatch path (the
     simulator's scan, the gateway, ``repro.core.dispatch`` engines)
     shares: score with :func:`policy_scores`, pick the argmin.
-    ``penalty`` flows through to the latency-aware policies (see
-    :func:`policy_scores`)."""
+    ``penalty`` and ``health`` flow through to :func:`policy_scores`."""
     scores = policy_scores(code, prof, g, q, rnd, rr_counter, gamma, delta,
-                           penalty)
+                           penalty, health)
     return jnp.argmin(scores).astype(jnp.int32), scores

@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.core import simulator as SIM
 from repro.core.cloud import CloudTier
+from repro.core.faults import FaultSchedule
 from repro.core.dispatch import (DispatchEngine, DriftSchedule,
                                  OnlineDispatch, StaticDispatch)
 from repro.core.policies import POLICY_CODES
@@ -103,8 +104,10 @@ STATIC_AXES = ("n_requests", "warmup_frac", "user_block")
 #: Scenario component fields: ``drift`` axes over same-shape schedules
 #: fuse as an extra vmapped batch axis; same-shape ``profile`` axes fuse
 #: as a stacked fleet axis; the rest (including ``cloud`` — each tier
-#: value extends the fleet differently) loop one fused program per value.
-COMPONENT_AXES = ("profile", "workload", "dispatch", "drift", "cloud")
+#: value extends the fleet differently — and ``faults``, whose source
+#: flags change the traced graph) loop one fused program per value.
+COMPONENT_AXES = ("profile", "workload", "dispatch", "drift", "cloud",
+                  "faults")
 
 _SWEEPABLE = CONFIG_AXES + STATIC_AXES + COMPONENT_AXES
 
@@ -162,6 +165,13 @@ class Scenario:
     # paper's testbed — bit-identical to the pre-cloud engine
     # (tests/golden_cloud_pr7.json pins it). Scientific identity, so it
     # enters the spec/hash — but only when set.
+    faults: FaultSchedule | None = None
+    # the fault plane (repro.core.faults.FaultSchedule): device outages,
+    # throttling bursts and stochastic WAN jitter, drawn per-step from
+    # fold_in-keyed RNG (partition/block/shard-invariant). None
+    # (default) = the always-up fleet — bit-identical to the pre-fault
+    # engine (tests/golden_faults_pr9.json pins it). Scientific
+    # identity, so it enters the spec/hash — but only when set.
     mesh: int | str | None = None
 
     def __post_init__(self):
@@ -187,6 +197,10 @@ class Scenario:
                                                      CloudTier):
             raise TypeError("cloud must be None or a CloudTier, got "
                             f"{type(self.cloud)}")
+        if self.faults is not None and not isinstance(self.faults,
+                                                      FaultSchedule):
+            raise TypeError("faults must be None or a FaultSchedule, got "
+                            f"{type(self.faults)}")
         if not (self.mesh is None or self.mesh == "local"
                 or (isinstance(self.mesh, int)
                     and not isinstance(self.mesh, bool)
@@ -210,6 +224,13 @@ class Scenario:
         if self.cloud is None:
             return prof, None
         return self.cloud.extend(prof)
+
+    def resolve_faults(self, n_pairs: int):
+        """The :class:`~repro.core.faults.FaultMeta` bound to the
+        (cloud-extended) fleet's ``n_pairs``, or ``None``."""
+        if self.faults is None:
+            return None
+        return self.faults.resolve(n_pairs)
 
     def resolve_workload(self) -> WorkloadSource:
         return SIM._resolve_workload(self.workload)
@@ -261,6 +282,8 @@ class Scenario:
             spec["user_block"] = int(self.user_block)
         if self.cloud is not None:
             spec["cloud"] = self.cloud.to_json()
+        if self.faults is not None:
+            spec["faults"] = self.faults.to_json()
         return spec
 
     @classmethod
@@ -290,6 +313,7 @@ class Scenario:
             user_block=(None if spec.get("user_block") is None
                         else int(spec["user_block"])),
             cloud=CloudTier.from_json(spec.get("cloud")),
+            faults=FaultSchedule.from_json(spec.get("faults")),
             mesh=spec.get("mesh"),
         )
 
@@ -599,15 +623,15 @@ def _stack_drifts(values) -> DriftSchedule | None:
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests", "warmup"))
-def _drift_axis_fused(prof, workload, dispatch, drifts, cloud, grid, *,
-                      n_requests: int, warmup: int):
+def _drift_axis_fused(prof, workload, dispatch, drifts, cloud, faults,
+                      grid, *, n_requests: int, warmup: int):
     """The fused drift axis: vmap the simulate+summarize composition over
     a stacked DriftSchedule — the whole drift × config grid (× fleet) is
     ONE device program, leaves shaped (D, [F,] B)."""
 
     def one(dr):
         return SIM._fused_summaries(prof, workload, dispatch, dr, cloud,
-                                    grid, n_requests=n_requests,
+                                    faults, grid, n_requests=n_requests,
                                     warmup=warmup)
 
     return jax.vmap(one)(drifts)
@@ -693,6 +717,11 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
     cloud_vals = next((v for n, v in outer_axes if n == "cloud"),
                       (scenario.cloud,))
     any_cloud = any(v is not None for v in cloud_vals)
+    # same rule for a faults axis mixing None and schedules: fault-free
+    # combos report zero failed/SLO shares (p99 backfilled below)
+    fault_vals = next((v for n, v in outer_axes if n == "faults"),
+                      (scenario.faults,))
+    any_faults = any(v is not None for v in fault_vals)
 
     metrics: dict[str, np.ndarray] | None = None
     block_shape: tuple[int, ...] = ()
@@ -715,6 +744,7 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
             prof, cloud_meta = sc.cloud.extend(prof)
         else:
             cloud_meta = None
+        fault_meta = sc.resolve_faults(prof.n_pairs)
         n_requests = sc.n_requests
         warmup = int(n_requests * sc.warmup_frac)
 
@@ -739,13 +769,14 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
 
         if drift_axis is not None:
             out = _drift_axis_fused(prof, workload, dispatch,
-                                    drift_axis[2], cloud_meta, grid,
-                                    n_requests=n_requests, warmup=warmup)
+                                    drift_axis[2], cloud_meta, fault_meta,
+                                    grid, n_requests=n_requests,
+                                    warmup=warmup)
         else:
             with_hist = segments is not None \
                 and int(np.asarray(segments).shape[0]) > len(cfgs)
             out = SIM._sweep_summaries(prof, workload, dispatch, drift,
-                                       cloud_meta, grid,
+                                       cloud_meta, fault_meta, grid,
                                        n_requests=n_requests,
                                        warmup=warmup, mesh=mesh_obj,
                                        with_hist=with_hist)
@@ -755,6 +786,11 @@ def run(scenario: Scenario, sweep: Sweep | None = None, *,
         if any_cloud and "offload_share" not in out:
             out = dict(out)
             out["offload_share"] = jnp.zeros_like(out["latency_ms"])
+        if any_faults and "slo_violation_share" not in out:
+            out = dict(out)
+            for m in ("slo_violation_share", "failed_share",
+                      "latency_p99_ms"):
+                out[m] = jnp.zeros_like(out["latency_ms"])
 
         block_shape = ((len(drift_axis[1]),) if drift_axis else ()) \
             + ((prof.n_fleets,) if prof.is_stacked else ()) \
@@ -819,10 +855,12 @@ def records(scenario: Scenario, sweep: Sweep | None = None):
                 "records() needs n_users <= user_block (a multi-block "
                 "config is K independent balancer replicas with no "
                 "single record stream); use run() for aggregate metrics")
+    fault_meta = scenario.resolve_faults(prof.n_pairs)
     if sweep is None or not sweep.axes:
         return SIM._simulate(prof, scenario.to_config(),
                              workload=workload, dispatch=dispatch,
-                             drift=scenario.drift, cloud=cloud_meta)
+                             drift=scenario.drift, cloud=cloud_meta,
+                             faults=fault_meta)
     bad = [n for n in sweep.names if n not in CONFIG_AXES]
     if bad:
         raise ValueError(
@@ -840,7 +878,8 @@ def records(scenario: Scenario, sweep: Sweep | None = None):
     recs = SIM._simulate_batch(prof, grid,
                                n_requests=scenario.n_requests,
                                workload=workload, dispatch=dispatch,
-                               drift=scenario.drift, cloud=cloud_meta)
+                               drift=scenario.drift, cloud=cloud_meta,
+                               faults=fault_meta)
     dims = sweep.shape
     pre = (prof.n_fleets,) if prof.is_stacked else ()
     return {k: v.reshape(pre + dims + v.shape[len(pre) + 1:])

@@ -431,7 +431,7 @@ def _make_user_grid(prof: ProfileTable, configs, user_block: int,
     return grid, segments
 
 
-def _sweep_user_summaries(prof, workload, dispatch, drift, cloud,
+def _sweep_user_summaries(prof, workload, dispatch, drift, cloud, faults,
                           grid: ConfigGrid, segments, n_cfgs: int, *,
                           n_requests: int, warmup: int, mesh: Mesh | None):
     """Fused sweep over a user-blocked grid: the expanded block rows run
@@ -442,16 +442,17 @@ def _sweep_user_summaries(prof, workload, dispatch, drift, cloud,
     the per-block latency histogram so the fleet-wide p90 is an exact
     merge, not a mean of per-block percentiles."""
     multi = int(np.asarray(segments).shape[0]) > n_cfgs
-    out = _sweep_summaries(prof, workload, dispatch, drift, cloud, grid,
-                           n_requests=n_requests, warmup=warmup, mesh=mesh,
-                           with_hist=multi)
+    out = _sweep_summaries(prof, workload, dispatch, drift, cloud, faults,
+                           grid, n_requests=n_requests, warmup=warmup,
+                           mesh=mesh, with_hist=multi)
     return aggregate_block_summaries(out, segments, n_cfgs, block_axis=-1)
 
 
 def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
                    dispatch: DispatchEngine, drift: DriftSchedule | None,
-                   cloud, policy_code, n_users, gamma, delta, oracle,
-                   stickiness, rng, true0, phase, *, n_requests: int):
+                   cloud, faults, policy_code, n_users, gamma, delta,
+                   oracle, stickiness, rng, true0, phase, *,
+                   n_requests: int):
     """Trace body shared by the single and batched paths. Every config
     parameter is a traced array; the only static shapes are ``n_requests``
     (scan length), ``true0``'s length (``n_users_max``) and the workload /
@@ -474,7 +475,21 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
     neither). The dispatcher additionally sees a congestion penalty
     (:meth:`CloudMeta.penalty`) on latency-aware policies. ``None``
     leaves the traced graph exactly as before — the no-cloud fixtures
-    stay bit-identical."""
+    stay bit-identical.
+
+    ``faults`` (:class:`~repro.core.faults.FaultMeta` or ``None``) is
+    the fault plane: per-step outage/throttle/jitter draws keyed purely
+    on the step index (no carried fault state). A visible schedule
+    passes the health mask to dispatch (down pairs leave the candidate
+    set, with MO's degraded argmin-latency fallback); the TRUTH model
+    always applies faults — dispatching into an outage stalls the
+    request by ``timeout_ms``, throttling scales the drifted truth
+    (drift first, fault throttle on top — the defined composition
+    order), and WAN jitter perturbs the cloud transfer/RTT terms.
+    Fault-active records additionally carry ``slo_violation`` (no
+    healthy pair cleared the accuracy bar at dispatch) and ``failed``
+    (the request hit a down pair). ``None`` leaves the traced graph
+    exactly as before — the no-fault fixtures stay bit-identical."""
     P = prof.n_pairs
     G = prof.n_groups
     U = true0.shape[0]
@@ -516,32 +531,65 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         q = jnp.zeros((P,), f32).at[c["server_by_user"]].add(
             active.astype(f32), mode="drop")
 
+        if faults is not None:
+            down = faults.down_at(i)
+            up = ~down
+            health = jnp.where(jnp.any(up), up, True)
+
         penalty = None if cloud is None else cloud.penalty(g_est, q)
-        p, dstate = dispatch.select(c["dispatch"], prof, code, g_est, q,
-                                    k2, gamma, delta, penalty=penalty)
+        p, dstate = dispatch.select(
+            c["dispatch"], prof, code, g_est, q, k2, gamma, delta,
+            penalty=penalty,
+            health=health if faults is not None and faults.visible
+            else None)
 
         # the TRUE fleet this step: the offline profile, or its drifted
-        # copy — service time, energy and the observation all come from it
+        # copy — service time, energy and the observation all come from
+        # it. Fault throttling multiplies ON TOP of drift (the defined
+        # composition order: truth = (prof x drift) x fault).
         truth = prof if drift is None else drift.at_step(prof, i)
+        if faults is not None and faults.has_throttle:
+            t_sc, e_sc = faults.throttle_at(i)
+            truth = ProfileTable(truth.T * t_sc[:, None],
+                                 truth.E * e_sc[:, None],
+                                 truth.mAP, truth.names, truth.floor_mw)
         t_serv = truth.T[p, g_true] / 1000.0                  # ms -> s
+        # dispatching into an outage stalls the request by timeout_ms —
+        # the truth model pays it whether or not the router could see
+        # the mask (blind routing is the static-routing baseline)
+        stall = None
+        if faults is not None and faults.has_down:
+            stall = jnp.where(down[p], faults.timeout_ms, 0.0) / 1000.0
         if cloud is None:
             start = jnp.maximum(t, c["avail"][p])
             finish = start + t_serv
+            if stall is not None:
+                finish = finish + stall
         else:
             # split the profiled total back into uplink / compute / RTT:
             # the uplink is a single shared resource (transfers serialise),
             # remote compute occupies the cloud pair, the downlink RTT
             # occupies neither. Local pairs have zero network terms, so
-            # their timeline is the exact no-cloud expression.
+            # their timeline is the exact no-cloud expression. WAN jitter
+            # perturbs the REALIZED transfer/RTT; the compute split keeps
+            # the profiled base terms (the remote GPU is not jittered).
             isc = cloud.is_cloud[p]
             xfer_s = jnp.where(isc, cloud.xfer_ms[g_true], 0.0) / 1000.0
             rtt_s = jnp.where(isc, cloud.rtt_ms, 0.0) / 1000.0
+            xfer_j, rtt_j = xfer_s, rtt_s
+            if faults is not None and faults.has_bw_jitter:
+                xfer_j = xfer_s * faults.xfer_scale(i)
+            if faults is not None and faults.has_rtt_jitter:
+                rtt_j = rtt_s + jnp.where(
+                    isc, faults.rtt_extra_ms(i), 0.0) / 1000.0
             up_start = jnp.maximum(t, c["up_avail"])
-            arrive = jnp.where(isc, up_start + xfer_s, t)
+            arrive = jnp.where(isc, up_start + xfer_j, t)
             start = jnp.maximum(arrive, c["avail"][p])
             compute_s = jnp.maximum(t_serv - xfer_s - rtt_s, 0.0)
-            finish = start + compute_s + rtt_s
-            nc_up = jnp.where(isc, up_start + xfer_s, c["up_avail"])
+            finish = start + compute_s + rtt_j
+            if stall is not None:
+                finish = finish + stall
+            nc_up = jnp.where(isc, up_start + xfer_j, c["up_avail"])
 
         detected = EST.noisy_detected_count(k3, new_true, prof.mAP[p, g_true])
         dstate = dispatch.observe(dstate, p, g_est, truth.T[p, g_true],
@@ -557,7 +605,7 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
         if cloud is None:
             nc["avail"] = c["avail"].at[p].set(finish)
         else:
-            nc["avail"] = c["avail"].at[p].set(finish - rtt_s)
+            nc["avail"] = c["avail"].at[p].set(finish - rtt_j)
             nc["up_avail"] = nc_up
         nc["t_next"] = c["t_next"].at[u].set(finish)
         nc["dispatch"] = dstate
@@ -573,27 +621,35 @@ def _simulate_core(prof: ProfileTable, workload: WorkloadSource,
             "q_at_dispatch": q[p],
             "correct_group": (g_true == g_est).astype(f32),
         }
+        if faults is not None:
+            # SLO violation = the degraded-mode condition: no UP pair
+            # clears the accuracy bar (belief mAP == offline mAP — it is
+            # never adapted or drifted); failed = dispatched into an
+            # outage (always true-model ``down``, not the relaxed mask)
+            feas = prof.mAP[:, g_est] >= jnp.max(prof.mAP[:, g_est]) - delta
+            rec["slo_violation"] = (~jnp.any(feas & up)).astype(f32)
+            rec["failed"] = down[p].astype(f32)
         return nc, rec
 
     _, recs = jax.lax.scan(step, carry, jnp.arange(n_requests, dtype=i32))
     return recs
 
 
-def _simulate_config(prof, workload, dispatch, drift, cloud, g: ConfigGrid,
-                     *, n_requests: int):
+def _simulate_config(prof, workload, dispatch, drift, cloud, faults,
+                     g: ConfigGrid, *, n_requests: int):
     """One config (scalar ConfigGrid leaves) -> record arrays; fields are
     accessed by name so batched and single paths can't transpose leaves."""
-    return _simulate_core(prof, workload, dispatch, drift, cloud,
+    return _simulate_core(prof, workload, dispatch, drift, cloud, faults,
                           g.policy_code, g.n_users, g.gamma, g.delta,
                           g.oracle, g.stickiness, g.rng, g.true0, g.phase,
                           n_requests=n_requests)
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
-def _simulate_one(prof, workload, dispatch, drift, cloud, g: ConfigGrid, *,
-                  n_requests: int):
-    return _simulate_config(prof, workload, dispatch, drift, cloud, g,
-                            n_requests=n_requests)
+def _simulate_one(prof, workload, dispatch, drift, cloud, faults,
+                  g: ConfigGrid, *, n_requests: int):
+    return _simulate_config(prof, workload, dispatch, drift, cloud, faults,
+                            g, n_requests=n_requests)
 
 
 def _over_fleet(fn, prof):
@@ -606,17 +662,18 @@ def _over_fleet(fn, prof):
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
-def _simulate_vmapped(prof, workload, dispatch, drift, cloud,
+def _simulate_vmapped(prof, workload, dispatch, drift, cloud, faults,
                       grid: ConfigGrid, *, n_requests: int):
     return _over_fleet(
         lambda pf: jax.vmap(
             lambda g: _simulate_config(pf, workload, dispatch, drift,
-                                       cloud, g, n_requests=n_requests))(
+                                       cloud, faults, g,
+                                       n_requests=n_requests))(
             grid),
         prof)
 
 
-def _fused_summaries(prof, workload, dispatch, drift, cloud,
+def _fused_summaries(prof, workload, dispatch, drift, cloud, faults,
                      grid: ConfigGrid, *, n_requests: int, warmup: int,
                      with_hist: bool = False):
     """The simulate + summarize composition over (fleet,) config — the ONE
@@ -630,7 +687,7 @@ def _fused_summaries(prof, workload, dispatch, drift, cloud,
     def per_fleet(pf):
         def one(g):
             recs = _simulate_config(pf, workload, dispatch, drift, cloud,
-                                    g, n_requests=n_requests)
+                                    faults, g, n_requests=n_requests)
             return _summarize_core(recs, pf, warmup, cloud,
                                    with_hist=with_hist)
 
@@ -641,10 +698,11 @@ def _fused_summaries(prof, workload, dispatch, drift, cloud,
 
 @functools.partial(jax.jit,
                    static_argnames=("n_requests", "warmup", "with_hist"))
-def _sweep_fused(prof, workload, dispatch, drift, cloud, grid: ConfigGrid,
-                 *, n_requests: int, warmup: int, with_hist: bool = False):
-    return _fused_summaries(prof, workload, dispatch, drift, cloud, grid,
-                            n_requests=n_requests, warmup=warmup,
+def _sweep_fused(prof, workload, dispatch, drift, cloud, faults,
+                 grid: ConfigGrid, *, n_requests: int, warmup: int,
+                 with_hist: bool = False):
+    return _fused_summaries(prof, workload, dispatch, drift, cloud, faults,
+                            grid, n_requests=n_requests, warmup=warmup,
                             with_hist=with_hist)
 
 
@@ -671,24 +729,25 @@ def _sweep_sharded_fn(mesh: Mesh, n_requests: int, warmup: int,
         def out_spec_of(k, base):
             return base
 
-    def inner(pf, wl, de, dr, cl, g):
-        return _fused_summaries(pf, wl, de, dr, cl, g,
+    def inner(pf, wl, de, dr, cl, fl, g):
+        return _fused_summaries(pf, wl, de, dr, cl, fl, g,
                                 n_requests=n_requests, warmup=warmup,
                                 with_hist=with_hist)
 
-    def fn(pf, wl, de, dr, cl, g):
-        keys = jax.eval_shape(inner, pf, wl, de, dr, cl, g).keys()
+    def fn(pf, wl, de, dr, cl, fl, g):
+        keys = jax.eval_shape(inner, pf, wl, de, dr, cl, fl, g).keys()
         specs = {k: out_spec_of(k, out_spec) for k in keys}
         return shard_map(
             inner, mesh=mesh,
             in_specs=(PartitionSpec(), PartitionSpec(), PartitionSpec(),
-                      PartitionSpec(), PartitionSpec(), cspec),
-            out_specs=specs)(pf, wl, de, dr, cl, g)
+                      PartitionSpec(), PartitionSpec(), PartitionSpec(),
+                      cspec),
+            out_specs=specs)(pf, wl, de, dr, cl, fl, g)
 
     return jax.jit(fn)
 
 
-def _sweep_summaries(prof, workload, dispatch, drift, cloud,
+def _sweep_summaries(prof, workload, dispatch, drift, cloud, faults,
                      grid: ConfigGrid, *, n_requests: int, warmup: int,
                      mesh: Mesh | None, with_hist: bool = False):
     """Dispatch a fused sweep to the single-device or sharded path; both
@@ -696,14 +755,14 @@ def _sweep_summaries(prof, workload, dispatch, drift, cloud,
     each (B,) / (F, B) leaf — (..., B, NB) for the optional histogram —
     bit-identical to each other."""
     if mesh is None:
-        return _sweep_fused(prof, workload, dispatch, drift, cloud, grid,
-                            n_requests=n_requests, warmup=warmup,
+        return _sweep_fused(prof, workload, dispatch, drift, cloud, faults,
+                            grid, n_requests=n_requests, warmup=warmup,
                             with_hist=with_hist)
     n_dev = int(mesh.devices.size)
     padded, n = pad_leading(grid, n_dev)
     fn = _sweep_sharded_fn(mesh, n_requests, warmup, prof.is_stacked,
                            with_hist)
-    out = fn(prof, workload, dispatch, drift, cloud,
+    out = fn(prof, workload, dispatch, drift, cloud, faults,
              ConfigGrid(*map(jnp.asarray, padded)))
     return {k: (v[..., :n, :] if k == "latency_hist" else v[..., :n])
             for k, v in out.items()}
@@ -725,7 +784,7 @@ def _simulate(prof: ProfileTable, cfg: SimConfig,
               workload: WorkloadSource | None = None,
               dispatch: DispatchEngine | None = None,
               drift: DriftSchedule | None = None,
-              cloud=None):
+              cloud=None, faults=None):
     """Returns a dict of per-request record arrays (length n_requests).
     Single-fleet only — stacked tables go through :func:`simulate_batch` /
     :func:`sweep_grid`, which vmap the fleet axis. ``workload`` /
@@ -734,7 +793,9 @@ def _simulate(prof: ProfileTable, cfg: SimConfig,
     ``drift`` optionally perturbs the true profile mid-run
     (:class:`repro.core.dispatch.DriftSchedule`); ``cloud`` is the
     :class:`~repro.core.cloud.CloudMeta` of an offload-extended ``prof``
-    (``CloudTier.extend``), or ``None`` for an edge-only fleet."""
+    (``CloudTier.extend``), or ``None`` for an edge-only fleet;
+    ``faults`` the resolved :class:`~repro.core.faults.FaultMeta` of a
+    :class:`~repro.core.faults.FaultSchedule`, or ``None``."""
     if prof.is_stacked:
         raise ValueError("simulate() takes a single (P, G) ProfileTable; "
                          "pass stacked tables to simulate_batch/sweep_grid")
@@ -752,8 +813,8 @@ def _simulate(prof: ProfileTable, cfg: SimConfig,
         oracle=jnp.asarray(cfg.oracle_estimator, bool),
         rng=jnp.asarray(rng), true0=jnp.asarray(true0, i32),
         phase=jnp.asarray(phase, i32))
-    return _simulate_one(prof, workload, dispatch, drift, cloud, g,
-                         n_requests=cfg.n_requests)
+    return _simulate_one(prof, workload, dispatch, drift, cloud, faults,
+                         g, n_requests=cfg.n_requests)
 
 
 def simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
@@ -773,7 +834,7 @@ def _simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
                     workload: WorkloadSource | None = None,
                     dispatch: DispatchEngine | None = None,
                     drift: DriftSchedule | None = None,
-                    cloud=None):
+                    cloud=None, faults=None):
     """Run every config in ``grid`` as ONE vmapped scan in ONE jit.
 
     Args:
@@ -813,8 +874,8 @@ def _simulate_batch(prof: ProfileTable, grid: ConfigGrid, n_requests: int,
             "grid carries nonzero workload phase offsets (built with a "
             "trace source) but simulate_batch resolved the Markov "
             "default; pass the grid's own workload= explicitly")
-    return _simulate_vmapped(prof, workload, dispatch, drift, cloud, grid,
-                             n_requests=n_requests)
+    return _simulate_vmapped(prof, workload, dispatch, drift, cloud,
+                             faults, grid, n_requests=n_requests)
 
 
 def _summarize_core(recs, prof: ProfileTable, warmup: int, cloud=None, *,
@@ -840,6 +901,12 @@ def _summarize_core(recs, prof: ProfileTable, warmup: int, cloud=None, *,
     if cloud is not None:
         out["offload_share"] = jnp.mean(
             cloud.is_cloud[sl["server"]].astype(f32))
+    if "slo_violation" in recs:
+        # fault-plane availability metrics (records carry these keys
+        # only when a FaultSchedule is active)
+        out["slo_violation_share"] = jnp.mean(sl["slo_violation"])
+        out["failed_share"] = jnp.mean(sl["failed"])
+        out["latency_p99_ms"] = 1000.0 * jnp.percentile(sl["latency"], 99)
     if with_hist:
         out["latency_hist"] = latency_histogram(sl["latency"])
     return out

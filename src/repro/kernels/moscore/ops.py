@@ -115,13 +115,16 @@ def _pallas_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
 
 @functools.partial(jax.jit, static_argnames=("delta", "gamma", "interpret"))
 def _pallas_hoisted_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
-                          interpret: bool):
+                          interpret: bool, health=None):
     # the queue-independent precompute runs OUTSIDE the kernel, on the
     # unpadded tables — identical reductions to the XLA hoisted path, so
-    # the kernel sees the exact same (G, P) constants
+    # the kernel sees the exact same (G, P) constants; the fault plane's
+    # health mask folds in here too (it is queue-independent), so the
+    # kernel body needs no mask plumbing at all
     feasible, E_n = mo_precompute(T.astype(jnp.float32),
                                   E.astype(jnp.float32),
-                                  mAP.astype(jnp.float32), delta=delta)
+                                  mAP.astype(jnp.float32), delta=delta,
+                                  health=health)
     Tt, Ent, Ft, gsc, q0p, P = _pad_transpose(
         T, E_n, feasible.astype(jnp.float32), gs, q0)
     # _pad_transpose pads E_n with +BIG and the mask with -BIG; the mask
@@ -136,27 +139,33 @@ _xla_route = jax.jit(ref_moscore_route, static_argnames=("delta", "gamma"))
 
 
 @functools.partial(jax.jit, static_argnames=("delta", "gamma"))
-def _hoisted_route(T, E, mAP, gs, q0, *, delta: float, gamma: float):
+def _hoisted_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
+                   health=None):
     ps, q = mo_select_batch_hoisted(ProfileTable(T, E, mAP), gs, q0,
-                                    delta=delta, gamma=gamma)
+                                    delta=delta, gamma=gamma,
+                                    health=health)
     return ps.astype(jnp.int32), q
 
 
 @functools.partial(jax.jit, static_argnames=("delta", "gamma"))
-def _int8_route(T, E, mAP, gs, q0, *, delta: float, gamma: float):
+def _int8_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
+                health=None):
     # quantize -> dequantize -> hoisted scan: the int8 grid is what both
     # CPU and TPU score against, so the quantisation error is identical
-    # across platforms by construction
+    # across platforms by construction. The health mask applies to the
+    # dequantized grid — mAP (and so the masked feasibility) stays
+    # fp32-exact, per the quantization contract.
     deq = quantize_roundtrip(ProfileTable(T.astype(jnp.float32),
                                           E.astype(jnp.float32),
                                           mAP.astype(jnp.float32)))
-    ps, q = mo_select_batch_hoisted(deq, gs, q0, delta=delta, gamma=gamma)
+    ps, q = mo_select_batch_hoisted(deq, gs, q0, delta=delta, gamma=gamma,
+                                    health=health)
     return ps.astype(jnp.int32), q
 
 
 def moscore_route(T, E, mAP, gs, q0, *, delta: float = 20.0,
                   gamma: float = 0.5, interpret: bool = True,
-                  backend: str = "pallas"):
+                  backend: str = "pallas", health=None):
     """Route a window of requests with queue feedback.
 
     T/E/mAP: (P, G) profile tables; gs: (W,) int32 estimated groups;
@@ -167,16 +176,31 @@ def moscore_route(T, E, mAP, gs, q0, *, delta: float = 20.0,
     bit-identical fp32 paths, ``"int8"`` routes on quantized tables
     under the bounded-mismatch contract, and ``"auto"`` resolves via
     :func:`resolve_backend` (``REPRO_MOSCORE_BACKEND`` env override,
-    else per platform). Safe to call under an outer ``jit``."""
+    else per platform). Safe to call under an outer ``jit``.
+
+    ``health`` (optional, (P,) bool) is the fault plane's mask for the
+    whole window, applied at the feasibility stage with the degraded
+    fallback (``core.policies.mo_scores``) — every fp32 backend agrees
+    bit-identically under it. The unhoisted ``"pallas"`` kernel
+    recomputes feasibility from raw mAP inside its body, so a masked
+    window routes through the hoisted kernel instead (the mask enters
+    via the precompute — same fp32 expressions, same decisions)."""
     backend = resolve_backend(backend)
     if backend == "xla":
-        return _xla_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma)
+        return _xla_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma,
+                          health=health)
     if backend == "hoisted":
-        return _hoisted_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma)
+        return _hoisted_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma,
+                              health=health)
     if backend == "int8":
-        return _int8_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma)
+        return _int8_route(T, E, mAP, gs, q0, delta=delta, gamma=gamma,
+                           health=health)
     if jax.default_backend() == "tpu":
         interpret = False
+    if health is not None:
+        return _pallas_hoisted_route(T, E, mAP, gs, q0, delta=delta,
+                                     gamma=gamma, interpret=interpret,
+                                     health=health)
     route = _pallas_hoisted_route if backend == "pallas_hoisted" \
         else _pallas_route
     return route(T, E, mAP, gs, q0, delta=delta, gamma=gamma,

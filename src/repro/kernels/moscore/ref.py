@@ -9,7 +9,9 @@ from repro.core.policies import mo_select_batch
 from repro.core.profiles import ProfileTable
 
 
-def ref_moscore_route(T, E, mAP, gs, q0, *, delta: float, gamma: float):
+def ref_moscore_route(T, E, mAP, gs, q0, *, delta: float, gamma: float,
+                      health=None):
     prof = ProfileTable(T, E, mAP)
-    ps, q = mo_select_batch(prof, gs, q0, delta=delta, gamma=gamma)
+    ps, q = mo_select_batch(prof, gs, q0, delta=delta, gamma=gamma,
+                            health=health)
     return ps.astype(jnp.int32), q

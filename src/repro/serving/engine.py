@@ -49,7 +49,19 @@ class ServingPlane:
     route it in one jitted call against live queue depths, enqueue it on
     the pool, and advance simulated time by the window's offered-load
     interval. Scene complexity per stream follows the same Markov chain
-    as the simulator/workload."""
+    as the simulator/workload.
+
+    Under a scenario :class:`~repro.core.faults.FaultSchedule` the plane
+    closes the failover loop: before each window it kills in-flight work
+    on pairs the fault plane took down (and work past the schedule's
+    ``timeout_ms``) via :meth:`~repro.serving.executor
+    .AsyncExecutorPool.fail_pairs`, re-admits the victims at the head of
+    later windows (re-routed against the CURRENT health mask) up to
+    ``max_attempts`` total tries — beyond that the request is dropped
+    and counted in ``failed_share`` — and records a completed retry's
+    latency from its FIRST arrival, so retries pay their full
+    end-to-end price. Throttling bursts SET the pool's true-time
+    multipliers per window (``truth = (prof x drift) x fault``)."""
 
     gateway: WindowedGateway
     pool: AsyncExecutorPool
@@ -73,8 +85,12 @@ class ServingPlane:
                    stickiness=scenario.stickiness,
                    offered_rps=offered_rps, seed=scenario.seed)
 
-    def _capacity_rps(self) -> float:
-        # the pool's CURRENT true times (post-drift), not the offline prof
+    def capacity_rps(self) -> float:
+        """Aggregate fleet service capacity (completions/sec) at the
+        pool's CURRENT true mean service times (post-drift/throttle),
+        not the offline profile. The default offered load is 90% of
+        this; leave more headroom when faults are in play so failover
+        has spare capacity to absorb the re-routed work."""
         return float(np.sum(1.0 / self.pool._T_s.mean(axis=1)))
 
     def _observe(self, resp, rng) -> None:
@@ -83,6 +99,9 @@ class ServingPlane:
         decision used), modelled detection counts into the estimator."""
         if resp.size == 0:
             return
+        # belief updates see the per-SUBMISSION latency (the measurement
+        # an executor would report); the recorded latency of a retried
+        # request runs from its FIRST arrival instead
         self.gateway.observe_window(resp.pairs, resp.est_groups,
                                     resp.latency_ms, resp.energy_mwh)
         true_count = np.where(resp.groups < self.gateway.prof.n_groups - 1,
@@ -90,13 +109,39 @@ class ServingPlane:
         det = rng.binomial(true_count, _P_DET(resp.map_proxy))
         det += rng.random(resp.size) < 0.05 * (1 - resp.map_proxy / 100.0)
         self.gateway.observe_detections_window(resp.stream_ids, det)
+        lat_s = resp.latency_ms / 1000.0
+        if getattr(self, "_first_arrival", None):
+            for j, r in enumerate(resp.rids):
+                fa = self._first_arrival.pop(int(r), None)
+                if fa is not None:
+                    lat_s[j] = resp.finish_s[j] - fa
+                self._attempts.pop(int(r), None)
         r = self._recs
-        r["latency"].append(resp.latency_ms / 1000.0)
+        r["latency"].append(lat_s)
         r["energy"].append(resp.energy_mwh)
         r["map"].append(resp.map_proxy)
         r["pair"].append(resp.pairs)
         r["g_true"].append(resp.groups)
         r["g_est"].append(resp.est_groups)
+
+    def _requeue(self, failed) -> None:
+        """Queue a :meth:`fail_pairs` window for retry: each victim gets
+        re-admitted (original rid/stream/true group, so its identity and
+        first-arrival clock survive) unless it has exhausted the
+        schedule's ``max_attempts`` — then it is dropped for good."""
+        cap = int(self.gateway.faults.max_attempts)
+        for j in range(failed.size):
+            rid = int(failed.rids[j])
+            self._first_arrival.setdefault(rid, float(failed.arrival_s[j]))
+            n = self._attempts.get(rid, 1) + 1
+            if n > cap:
+                self._attempts.pop(rid, None)
+                self.failed_requests += 1
+                continue
+            self._attempts[rid] = n
+            self.retried += 1
+            self._retryq.append((rid, int(failed.stream_ids[j]),
+                                 int(failed.groups[j])))
 
     def run(self, n_requests: int = 2048):
         """Drive ``n_requests`` through the plane; returns per-request
@@ -106,6 +151,7 @@ class ServingPlane:
         calls CONTINUE the plane — clock, streams, queues and belief
         state persist — so drift can be injected between runs."""
         G = self.gateway.prof.n_groups
+        meta = self.gateway._fault_meta
         if getattr(self, "_rng", None) is None:     # first run: cold plane
             self._rng = np.random.default_rng(self.seed)
             P_mat = np.asarray(EST.markov_transition(G, self.stickiness))
@@ -114,39 +160,85 @@ class ServingPlane:
                 G, self.n_streams, p=np.asarray(EST.stationary(P_mat)))
             self._now = 0.0
             self._served = 0
+            self._retryq = []           # [(rid, stream, g_true), ...]
+            self._attempts = {}         # rid -> submissions so far
+            self._first_arrival = {}    # rid -> first arrival_s
+            self.failed_requests = 0    # dropped past max_attempts
+            self.retried = 0            # re-admissions
         rng, cumP, scene = self._rng, self._cumP, self._scene
-        rps = self.offered_rps or 0.9 * self._capacity_rps()
+        rps = self.offered_rps or 0.9 * self.capacity_rps()
         self._recs = {k: [] for k in ("latency", "energy", "map", "pair",
                                       "g_true", "g_est")}
         router_win = []
+        failed0, retried0 = self.failed_requests, self.retried
+        timeout_s = None if meta is None \
+            else float(self.gateway.faults.timeout_ms) / 1000.0
         now, done = self._now, 0
-        while done < n_requests:
-            w = min(self.window, n_requests - done)
+        while done < n_requests or self._retryq:
+            if meta is not None:
+                step0 = self.gateway._step
+                if meta.has_down:
+                    down = np.asarray(meta.down_at(step0))
+                    self._requeue(self.pool.fail_pairs(
+                        down, now, timeout_s=timeout_s))
+                if meta.has_throttle:
+                    t_m, e_m = meta.throttle_at(step0)
+                    self.pool.set_fault_throttle(
+                        np.asarray(t_m)[:, None], np.asarray(e_m)[:, None])
             self._observe(self.pool.poll(now), rng)
+            # admission: queued retries drain at the head of the window
+            # (re-routed against the CURRENT health mask), new streams
+            # fill the rest
+            retry = self._retryq[:self.window]
+            del self._retryq[:len(retry)]
+            w_new = min(self.window - len(retry), n_requests - done)
             rid0 = self._served + done
-            streams = np.arange(rid0, rid0 + w) % self.n_streams
-            scene[streams] = (rng.random((w, 1))
-                              > cumP[scene[streams]]).sum(axis=1)
+            new_streams = np.arange(rid0, rid0 + w_new) % self.n_streams
+            scene[new_streams] = (rng.random((w_new, 1))
+                                  > cumP[scene[new_streams]]).sum(axis=1)
+            streams = np.concatenate(
+                [np.asarray([s for _, s, _ in retry], np.int64),
+                 new_streams])
+            rids = np.concatenate(
+                [np.asarray([r for r, _, _ in retry], np.int64),
+                 np.arange(rid0, rid0 + w_new)])
+            groups = np.concatenate(
+                [np.asarray([g for _, _, g in retry], np.int64),
+                 scene[new_streams]])
             t0 = time.perf_counter()
             pairs, gs, _q = self.gateway.route_window(streams,
                                                       self.pool.depths())
             pairs = np.asarray(pairs)
             router_win.append(time.perf_counter() - t0)
-            self.pool.submit_window(pairs, scene[streams], now,
+            self.pool.submit_window(pairs, groups, now,
                                     est_groups=np.asarray(gs),
-                                    stream_ids=streams,
-                                    rids=np.arange(rid0, rid0 + w))
-            now += w / rps
-            done += w
+                                    stream_ids=streams, rids=rids)
+            now += streams.shape[0] / rps
+            done += w_new
         self._observe(self.pool.poll(np.inf), rng)   # drain the tail
         self._now = max(now, float(self.pool._avail.max(initial=0.0)))
         self._served += done
         recs = {k: np.concatenate(v) for k, v in self._recs.items()}
         recs["router_s"] = float(np.sum(router_win))
         recs["router_window_s"] = np.asarray(router_win)
+        if meta is not None:
+            recs["n_offered"] = float(n_requests)
+            recs["failed_requests"] = float(self.failed_requests - failed0)
+            recs["retried"] = float(self.retried - retried0)
         return recs
 
-    summarize = staticmethod(lambda recs: ServingEngine.summarize(recs))
+    @staticmethod
+    def summarize(recs) -> dict:
+        """:meth:`ServingEngine.summarize`, extended with the fault
+        plane's availability metrics when the run carried them."""
+        out = ServingEngine.summarize(recs)
+        if "n_offered" in recs:
+            n = max(1.0, float(recs["n_offered"]))
+            out["failed_share"] = float(recs["failed_requests"]) / n
+            out["retried_share"] = float(recs["retried"]) / n
+            out["latency_p99_ms"] = float(
+                np.percentile(recs["latency"], 99) * 1000)
+        return out
 
 
 @dataclass

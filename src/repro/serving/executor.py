@@ -94,7 +94,9 @@ class AsyncExecutorPool:
 
     Accounting invariant (property-tested): every completion polled was
     previously submitted, so queue depths never go negative and
-    ``submitted == polled + in_flight`` at every instant.
+    ``submitted == polled + failed + in_flight`` at every instant
+    (``failed`` counts work the fault plane killed via
+    :meth:`fail_pairs` — zero when no faults are injected).
     """
 
     prof: ProfileTable
@@ -104,13 +106,24 @@ class AsyncExecutorPool:
             raise ValueError("executor pool serves one fleet, not a "
                              "stacked ensemble")
         P = self.prof.n_pairs
-        self._T_s = np.asarray(self.prof.T, np.float64) / 1000.0
-        self._E = np.asarray(self.prof.E, np.float64)
+        # the TRUE service times factor as base x drift x fault-throttle:
+        # drift is cumulative (apply_drift multiplies in), the fault
+        # throttle is SET each window (a pure function of the fault step),
+        # so the two compose order-independently and in the documented
+        # order truth = (prof x drift) x fault
+        self._T_base = np.asarray(self.prof.T, np.float64) / 1000.0
+        self._E_base = np.asarray(self.prof.E, np.float64)
+        self._drift_t = np.float64(1.0)
+        self._drift_e = np.float64(1.0)
+        self._fault_t = np.float64(1.0)
+        self._fault_e = np.float64(1.0)
+        self._recompute()
         self._M = np.asarray(self.prof.mAP, np.float64)
         self._avail = np.zeros(P, np.float64)   # per-pair FIFO frontier
         self._depth = np.zeros(P, np.int64)
         self.submitted = 0
         self.polled = 0
+        self.failed = 0
         # pending completions, appended per window, drained by poll()
         self._pending: list[ResponseWindow] = []
 
@@ -118,14 +131,68 @@ class AsyncExecutorPool:
     def in_flight(self) -> int:
         return int(self._depth.sum())
 
+    def _recompute(self) -> None:
+        self._T_s = (self._T_base * self._drift_t) * self._fault_t
+        self._E = (self._E_base * self._drift_e) * self._fault_e
+
     def apply_drift(self, t_scale, e_scale=None) -> None:
         """Scale the TRUE service times (and optionally energies) from
         now on — thermal throttling, a model swap. Balancers are never
         told; an adaptive gateway finds out through its windowed
-        observations (cf. ``DriftSchedule`` in the simulator)."""
-        self._T_s = self._T_s * np.asarray(t_scale, np.float64)
+        observations (cf. ``DriftSchedule`` in the simulator). Drift is
+        cumulative: repeated calls multiply."""
+        self._drift_t = self._drift_t * np.asarray(t_scale, np.float64)
         if e_scale is not None:
-            self._E = self._E * np.asarray(e_scale, np.float64)
+            self._drift_e = self._drift_e * np.asarray(e_scale, np.float64)
+        self._recompute()
+
+    def set_fault_throttle(self, t_mult, e_mult=None) -> None:
+        """SET the fault plane's throttling multipliers (replacing the
+        previous ones — fault throttles are a pure function of the fault
+        step, not a cumulative drift). Applied ON TOP of any drift:
+        ``truth = (prof x drift) x fault``."""
+        self._fault_t = np.asarray(t_mult, np.float64)
+        self._fault_e = np.float64(1.0) if e_mult is None \
+            else np.asarray(e_mult, np.float64)
+        self._recompute()
+
+    def fail_pairs(self, down, now: float, *,
+                   timeout_s: float | None = None) -> ResponseWindow:
+        """Kill in-flight work the fault plane lost: every unpolled entry
+        that has NOT finished by ``now`` and is either queued on a pair
+        in ``down`` ((P,) bool) or — when ``timeout_s`` is given — would
+        finish later than ``arrival + timeout_s``. Entries already past
+        their finish time are completions awaiting :meth:`poll` and are
+        never failed. Returns the failed entries as one
+        :class:`ResponseWindow` (submission-order) so the serving plane
+        can retry them; each affected pair's FIFO frontier is rebuilt
+        from its surviving work, so a recovered pair does not stay
+        blocked behind ghost requests."""
+        down = np.asarray(down, bool)
+        if not self._pending:
+            return ResponseWindow()
+        cat = {f: np.concatenate([getattr(w, f) for w in self._pending])
+               for f in ("rids", "stream_ids", "pairs", "groups",
+                         "est_groups", "arrival_s", "finish_s",
+                         "energy_mwh", "map_proxy")}
+        live = cat["finish_s"] > now
+        kill = live & down[cat["pairs"]]
+        if timeout_s is not None:
+            kill |= live & (cat["finish_s"] > cat["arrival_s"] + timeout_s)
+        if not kill.any():
+            return ResponseWindow()
+        out = ResponseWindow(**{f: v[kill] for f, v in cat.items()})
+        keep = {f: v[~kill] for f, v in cat.items()}
+        self._pending = [] if keep["pairs"].size == 0 \
+            else [ResponseWindow(**keep)]
+        np.subtract.at(self._depth, out.pairs, 1)
+        self.failed += out.size
+        # rebuild the FIFO frontier of every touched pair from what
+        # survived (0.0 == free now; submit takes max(now, frontier))
+        for p in np.unique(out.pairs):
+            rem = keep["finish_s"][keep["pairs"] == p]
+            self._avail[p] = rem.max(initial=0.0)
+        return out
 
     def depths(self) -> np.ndarray:
         """(P,) live queue depths — q_p for the next admission window."""

@@ -98,7 +98,18 @@ class WindowedGateway:
     within the window — the price of decentralisation), level 2 runs
     Algorithm 1 inside the pod with exact in-window queue feedback.
     With a cloud tier, a ``pods`` vector covering only the local pairs
-    puts the remote pairs in their own extra pod."""
+    puts the remote pairs in their own extra pod.
+
+    ``faults`` is an optional :class:`~repro.core.faults.FaultSchedule`:
+    a *visible* schedule routes every window through the generic
+    ``select_window`` scan with the per-request health mask
+    (``health_at`` of the absolute request index — window-partition
+    invariant like the key stream), masking down pairs at the
+    accuracy-feasibility stage with the degraded fallback; an
+    *invisible* one leaves the router blind (the serving plane's truth
+    model still faults). Adopted from a scenario like every other knob.
+    Hierarchical (``pods``) routing has no fault mask yet — combining
+    them raises."""
 
     prof: ProfileTable
     policy: str = "MO"
@@ -110,6 +121,7 @@ class WindowedGateway:
     n_streams: int = 1024
     backend: str = "auto"
     cloud: Any = None         # CloudTier | None — edge-to-cloud tier
+    faults: Any = None        # FaultSchedule | None — the fault plane
     pods: Any = None          # (P,) pod ids | None — hierarchical routing
     _counts: Any = field(default=None, repr=False)
     _dstate: Any = field(default=None, repr=False)
@@ -147,12 +159,23 @@ class WindowedGateway:
                 self.n_streams = max(self.n_streams, sc.n_users)
             if self.cloud is None:
                 self.cloud = sc.cloud
+            if self.faults is None:
+                self.faults = sc.faults
         if self.prof.is_stacked:
             raise ValueError("gateway serves one fleet; scenario/profile "
                              "is a stacked ensemble")
         self._cloud_meta = None
         if self.cloud is not None:
             self.prof, self._cloud_meta = self.cloud.extend(self.prof)
+        # fault schedules bind to the EXTENDED pair axis (a scripted
+        # outage can take down a cloud pair)
+        self._fault_meta = None
+        if self.faults is not None and self.faults.active:
+            if self.pods is not None:
+                raise ValueError(
+                    "hierarchical (pods=) routing has no fault mask yet — "
+                    "route the flat fleet under a FaultSchedule")
+            self._fault_meta = self.faults.resolve(self.prof.n_pairs)
         self._pod_of_pair = None
         if self.pods is not None:
             if self.policy != "MO":
@@ -188,6 +211,7 @@ class WindowedGateway:
         backend, base_key = self.backend, self._key
         cloud_meta, pod_of_pair = self._cloud_meta, self._pod_of_pair
         penalty_fn = None if cloud_meta is None else cloud_meta.penalty
+        fault_meta = self._fault_meta
 
         @jax.jit
         def _route_fused(state, counts, q0, ids):
@@ -214,6 +238,22 @@ class WindowedGateway:
                 state, prof, code, gs, q0.astype(f32), keys,
                 jnp.asarray(gamma, f32), jnp.asarray(delta, f32),
                 penalty_fn=penalty_fn)
+            return pairs, gs, q, state
+
+        @jax.jit
+        def _route_scan_masked(state, counts, q0, ids, step0):
+            # fault-visible path: the same scan, plus the per-request
+            # health mask drawn from the ABSOLUTE request index — fault
+            # realizations are window-partition invariant exactly like
+            # the key stream
+            gs = EST.group_of_count(counts[ids], n_groups)
+            idx = step0 + jnp.arange(ids.shape[0], dtype=i32)
+            keys = jax.vmap(lambda i: jax.random.fold_in(base_key, i))(idx)
+            healths = jax.vmap(fault_meta.health_at)(idx)
+            pairs, q, state = engine.select_window(
+                state, prof, code, gs, q0.astype(f32), keys,
+                jnp.asarray(gamma, f32), jnp.asarray(delta, f32),
+                penalty_fn=penalty_fn, healths=healths)
             return pairs, gs, q, state
 
         @jax.jit
@@ -263,6 +303,7 @@ class WindowedGateway:
 
         self._route_fused = _route_fused
         self._route_scan = _route_scan
+        self._route_scan_masked = _route_scan_masked
         self._route_pods = _route_pods
         self._obs_counts = _obs_counts
         self._observe_win = _observe_win
@@ -327,6 +368,13 @@ class WindowedGateway:
         if self._pod_of_pair is not None:
             pairs, gs, q, self._dstate = self._route_pods(
                 self._dstate, self._counts, q0, ids_d)
+        elif self._fault_meta is not None and self._fault_meta.visible:
+            # visible faults need the per-request health mask, which the
+            # fused kernel (one mask per window) cannot express — the
+            # generic scan carries it (cloud precedent)
+            pairs, gs, q, self._dstate = self._route_scan_masked(
+                self._dstate, self._counts, q0, ids_d,
+                jnp.asarray(self._step, i32))
         elif self.policy == "MO" and self._cloud_meta is None:
             # the fused kernel scores raw tables with no penalty hook;
             # cloud-active MO takes the generic scan for the congestion

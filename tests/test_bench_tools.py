@@ -163,6 +163,26 @@ def test_compare_refuses_cloud_spec_mismatch():
     assert errs and "cloud" in errs[0]
 
 
+def test_compare_refuses_faults_spec_mismatch():
+    """A fault schedule in one scenario and not the other (or a different
+    schedule) is never comparable — fault injection shifts every suite's
+    timing profile (mirrors the cloud-tier refusal)."""
+    base = _artifact(seconds=10.0)
+    new = _artifact(seconds=10.0)
+    new["scenario"] = {"faults": {"down_rate": 0.05,
+                                  "outages": [[2, 40, 90]]}}
+    base["scenario"] = {}
+    errs = check_bench.compare(new, base, 0.20, 0.5)
+    assert errs and "faults" in errs[0]
+    # same schedule on both sides is fine
+    base["scenario"] = json.loads(json.dumps(new["scenario"]))
+    assert not check_bench.compare(new, base, 0.20, 0.5)
+    # differing schedules are refused
+    base["scenario"] = {"faults": {"down_rate": 0.10}}
+    errs = check_bench.compare(new, base, 0.20, 0.5)
+    assert errs and "faults" in errs[0]
+
+
 def test_main_accepts_threshold_overrides(tmp_path, capsys):
     new = tmp_path / "new.json"
     base = tmp_path / "base.json"

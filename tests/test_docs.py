@@ -27,6 +27,7 @@ EMBEDDED_EXAMPLES = {
                         "user_scaling.py", "edge_cloud.py"],
     "serving.md": ["serving_gateway.py"],
     "kernels.md": ["moscore_backends.py"],
+    "resilience.md": ["fault_injection.py"],
 }
 
 

@@ -315,7 +315,7 @@ def test_multi_block_equals_manual_per_block_runs():
     wl, de = MarkovWorkload(), StaticDispatch()
     warmup = 12
 
-    per_block = _sweep_summaries(prof, wl, de, None, None, grid,
+    per_block = _sweep_summaries(prof, wl, de, None, None, None, grid,
                                  n_requests=120, warmup=warmup,
                                  mesh=None, with_hist=True)
     hists = per_block.pop("latency_hist")
@@ -323,7 +323,7 @@ def test_multi_block_equals_manual_per_block_runs():
     # invariant, extended to block rows)
     for b in range(3):
         row = ConfigGrid(*[leaf[b:b + 1] for leaf in grid])
-        solo = _sweep_summaries(prof, wl, de, None, None, row,
+        solo = _sweep_summaries(prof, wl, de, None, None, None, row,
                                 n_requests=120, warmup=warmup, mesh=None)
         for k in per_block:
             _assert_metric_equal(k, per_block[k][b], solo[k][0],
